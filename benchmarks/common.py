@@ -1,0 +1,76 @@
+"""Shared measurement harness for the paper-figure benchmarks.
+
+The paper measures cycle-level distributions with RDTSC+LFENCE; the host-side
+analogue here is perf_counter_ns around blocking calls, reported as
+distributions (median/mean/std/p99) the way the paper reports M/SD — including
+the background-measurement subtraction (paper §4.2).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class Dist:
+    name: str
+    us: np.ndarray  # per-call microseconds
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.us))
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.us))
+
+    @property
+    def std(self) -> float:
+        return float(np.std(self.us))
+
+    @property
+    def p99(self) -> float:
+        return float(np.percentile(self.us, 99))
+
+    def row(self, derived: str = "") -> str:
+        return (
+            f"{self.name},{self.median:.3f},"
+            f"mean={self.mean:.3f};sd={self.std:.3f};p99={self.p99:.3f}"
+            + (f";{derived}" if derived else "")
+        )
+
+
+_OVERHEAD_US: float | None = None
+
+
+def timer_overhead_us(reps: int = 20000) -> float:
+    """Background measurement (paper Fig. 10): empty timing-pair cost."""
+    global _OVERHEAD_US
+    if _OVERHEAD_US is None:
+        t = np.empty(reps)
+        for i in range(reps):
+            a = time.perf_counter_ns()
+            b = time.perf_counter_ns()
+            t[i] = (b - a) / 1e3
+        _OVERHEAD_US = float(np.median(t))
+    return _OVERHEAD_US
+
+
+def measure(name: str, fn, *, reps: int = 2000, warmup: int = 200) -> Dist:
+    for _ in range(warmup):
+        fn()
+    over = timer_overhead_us()
+    us = np.empty(reps)
+    for i in range(reps):
+        t0 = time.perf_counter_ns()
+        fn()
+        t1 = time.perf_counter_ns()
+        us[i] = (t1 - t0) / 1e3 - over
+    return Dist(name, np.maximum(us, 0.0))
+
+
+def header() -> str:
+    return "name,us_per_call,derived"

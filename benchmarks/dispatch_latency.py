@@ -1,0 +1,73 @@
+"""Paper Fig. 14 — branch-taking vs direct call (and the conditional zoo).
+
+The paper shows `branch()` ≈ a direct call (one extra jmp). Our table:
+  direct-aot        AOT-compiled function, called directly (the floor)
+  semistatic-branch BranchChanger.branch() — the paper's construct
+  jit-dispatch      jax.jit cached call (trace-cache hash on every call)
+  lax-cond          condition evaluated on device inside the jitted step
+  lax-switch        3-way device switch
+  where-both        compute both branches + select (the [[likely]] analogue:
+                    no branch, but both sides' work)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BranchChanger, reset_entry_points
+
+from .common import Dist, measure
+
+
+def run(reps: int = 3000) -> list[Dist]:
+    reset_entry_points()
+    x = jnp.arange(64, dtype=jnp.float32)
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    def fa(x):
+        return x * 2.0 + 1.0
+
+    def fb(x):
+        return x * 3.0 - 1.0
+
+    def fc(x):
+        return x * 0.5
+
+    direct = jax.jit(fa).lower(spec).compile()
+
+    bc = BranchChanger(fa, fb, name="bench-dispatch")
+    bc.compile(spec)
+    bc.set_direction(True, warm=True)
+
+    jit_fa = jax.jit(fa)
+    jit_fa(x).block_until_ready()
+
+    @jax.jit
+    def cond_step(c, x):
+        return jax.lax.cond(c, fa, fb, x)
+
+    @jax.jit
+    def switch_step(i, x):
+        return jax.lax.switch(i, [fa, fb, fc], x)
+
+    @jax.jit
+    def where_both(c, x):
+        return jnp.where(c, fa(x), fb(x))
+
+    c_true = jnp.array(True)
+    i0 = jnp.array(0, jnp.int32)
+    for f, a in ((cond_step, (c_true, x)), (switch_step, (i0, x)),
+                 (where_both, (c_true, x))):
+        f(*a).block_until_ready()
+
+    out = [
+        measure("fig14/direct-aot", lambda: direct(x).block_until_ready(), reps=reps),
+        measure("fig14/semistatic-branch", lambda: bc.branch(x).block_until_ready(), reps=reps),
+        measure("fig14/jit-dispatch", lambda: jit_fa(x).block_until_ready(), reps=reps),
+        measure("fig14/lax-cond", lambda: cond_step(c_true, x).block_until_ready(), reps=reps),
+        measure("fig14/lax-switch", lambda: switch_step(i0, x).block_until_ready(), reps=reps),
+        measure("fig14/where-both", lambda: where_both(c_true, x).block_until_ready(), reps=reps),
+    ]
+    bc.close()
+    return out

@@ -1,0 +1,69 @@
+"""Paper Figs. 19/20/21 — predictable conditions at varying change frequency.
+
+Per-iteration latency vs switching period K ∈ {1, 10, 100, 1000}: the
+semi-static path pays set_direction every K iterations (amortised), the
+conditional path evaluates the condition on-device every iteration.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BranchChanger, reset_entry_points
+
+from .common import Dist, timer_overhead_us
+
+
+def run(iters: int = 3000) -> list[Dist]:
+    reset_entry_points()
+    x = jnp.arange(64, dtype=jnp.float32)
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    def fa(x):
+        return x * 2.0 + 1.0
+
+    def fb(x):
+        return x * 3.0 - 1.0
+
+    bc = BranchChanger(fa, fb, name="bench-freq")
+    bc.compile(spec)
+    bc.set_direction(True, warm=True)
+
+    @jax.jit
+    def cond_step(c, x):
+        return jax.lax.cond(c, fa, fb, x)
+
+    cond_step(jnp.array(True), x).block_until_ready()
+    over = timer_overhead_us()
+    out = []
+
+    for period in (1, 10, 100, 1000):
+        # semi-static: flip direction every `period` iterations
+        cond = True
+        t0 = time.perf_counter_ns()
+        for i in range(iters):
+            if i % period == 0:
+                cond = not cond
+                bc.set_direction(cond)
+            bc.branch(x).block_until_ready()
+        t1 = time.perf_counter_ns()
+        us = (t1 - t0) / 1e3 / iters - over
+        out.append(Dist(f"fig19/semistatic-period{period}", np.array([us])))
+
+        # conditional: condition is data, evaluated on device each iteration
+        cvals = [jnp.array(True), jnp.array(False)]
+        cond_i = 0
+        t0 = time.perf_counter_ns()
+        for i in range(iters):
+            if i % period == 0:
+                cond_i = 1 - cond_i
+            cond_step(cvals[cond_i], x).block_until_ready()
+        t1 = time.perf_counter_ns()
+        us = (t1 - t0) / 1e3 / iters - over
+        out.append(Dist(f"fig19/conditional-period{period}", np.array([us])))
+    bc.close()
+    return out

@@ -1,0 +1,82 @@
+"""Paper Figs. 16/17 — hot-path latency with random conditions (HFT scenario).
+
+A reduced-olmo decode step is the "send_order/adjust_order" pair: the serving
+mode (greedy vs sampled) flips at random per request burst. Semi-static: the
+engine's mode was set in the cold path and the token loop calls the selected
+executable directly. Conditional: one jitted step that lax.cond's on a device
+flag every call. Distributions (M/SD/p99) mirror the paper's Fig 16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.serve import GREEDY, SAMPLE, Engine, EngineConfig
+
+from .common import Dist, measure
+
+
+def run(reps: int = 400) -> list[Dist]:
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_len=64, batch_quantum=4, max_batch=8)
+    eng = Engine(cfg, params, ecfg)
+
+    rng = np.random.default_rng(0)
+
+    # --- semi-static: mode flips in the cold path, hot loop is direct calls
+    eng.set_mode(batch=4, sampling=GREEDY)
+    eng.set_mode(batch=4, sampling=SAMPLE)  # both specialisations precompiled
+
+    cache = models.init_cache(cfg, 4, ecfg.max_len)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    key = jnp.zeros((2,), jnp.uint32)
+
+    modes = [GREEDY, SAMPLE]
+
+    state = {"cache": cache, "pos": 0}
+
+    def semi_static_burst():
+        # cold path: random mode for this burst
+        eng.set_mode(batch=4, sampling=modes[rng.integers(2)], warm=False)
+        exe = eng._current
+        out, c = exe(params, state["cache"], tok, jnp.int32(state["pos"]), key)
+        jax.block_until_ready(out)
+        state["cache"] = c
+
+    # --- conditional: mode is a device flag inside one step
+    def cond_step(params, cache, inputs, pos, key, mode):
+        logits, cache = models.decode_step(cfg, params, cache, inputs, pos)
+        tok_g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok_s = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+        return jax.lax.cond(mode == 0, lambda: tok_g, lambda: tok_s), cache
+
+    cjit = jax.jit(cond_step, donate_argnums=(1,))
+    cache2 = models.init_cache(cfg, 4, ecfg.max_len)
+    state2 = {"cache": cache2}
+    for m in (0, 1):  # warm both directions of the same executable
+        t, c = cjit(params, state2["cache"], tok, jnp.int32(0), key,
+                    jnp.int32(m))
+        jax.block_until_ready(t)
+        state2["cache"] = c
+
+    def conditional_burst():
+        m = jnp.int32(rng.integers(2))
+        t, c = cjit(params, state2["cache"], tok, jnp.int32(0), key, m)
+        jax.block_until_ready(t)
+        state2["cache"] = c
+
+    return [
+        measure("fig16/semistatic-random-mode", semi_static_burst, reps=reps,
+                warmup=20),
+        measure("fig16/conditional-random-mode", conditional_burst, reps=reps,
+                warmup=20),
+    ]

@@ -1,0 +1,127 @@
+"""Kernel-level semi-static specialisation vs the runtime-flag kernel.
+
+The TPU-only claim (DESIGN.md §2): baking the mode into the kernel removes
+per-tile mode work and enables structural block skips. Evidence collected on
+CPU (no TPU in this container):
+
+  * kernel-jaxpr op counts: the specialised causal kernel contains no tanh and
+    no window-select; the branchy kernel always carries all of them
+  * structural skip count: fraction of (q,k) blocks the specialised causal /
+    windowed kernels never compute (the branchy kernel visits all of them)
+  * interpret-mode wall time on a small shape (direction-consistent sanity
+    only — interpret mode is not a performance model)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import flash_attention, flash_attention_branchy
+
+from .common import Dist, measure
+
+
+def _op_counts(closed) -> dict:
+    from collections import Counter
+
+    cnt = Counter()
+
+    def walk(jaxpr):
+        for eq in jaxpr.eqns:
+            cnt[eq.primitive.name] += 1
+            for v in eq.params.values():
+                for u in v if isinstance(v, (list, tuple)) else (v,):
+                    if hasattr(u, "jaxpr"):  # ClosedJaxpr
+                        walk(u.jaxpr)
+                    elif hasattr(u, "eqns"):  # raw Jaxpr (pallas_call body)
+                        walk(u)
+    walk(closed.jaxpr)
+    return cnt
+
+
+def _skipped_blocks(sq, sk, bq, bk, *, causal, window):
+    nq, nk = sq // bq, sk // bk
+    skipped = 0
+    for qb in range(nq):
+        for kb in range(nk):
+            run = True
+            if causal:
+                run &= kb * bk <= qb * bq + bq - 1
+            if window is not None:
+                run &= kb * bk + bk - 1 > qb * bq - window
+            skipped += not run
+    return skipped, nq * nk
+
+
+def run(reps: int = 30) -> list[Dist]:
+    key = jax.random.PRNGKey(0)
+    b, h, kh, s, dh = 1, 4, 2, 256, 64
+    q = jax.random.normal(key, (b, h, s, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kh, s, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kh, s, dh))
+    flags = jnp.array([1, 64, 0], jnp.int32)
+
+    spec_jaxpr = jax.make_jaxpr(
+        lambda q, k, v: flash_attention(
+            q, k, v, causal=True, window=64, block_q=64, block_k=64,
+            interpret=True,
+        )
+    )(q, k, v)
+    branchy_jaxpr = jax.make_jaxpr(
+        lambda q, k, v, f: flash_attention_branchy(
+            q, k, v, f, block_q=64, block_k=64, interpret=True
+        )
+    )(q, k, v, flags)
+    cs, cb = _op_counts(spec_jaxpr), _op_counts(branchy_jaxpr)
+
+    skipped, total = _skipped_blocks(s, s, 64, 64, causal=True, window=64)
+
+    out = []
+    out.append(Dist("kernel/specialised-tanh-ops", np.array([cs.get("tanh", 0)])))
+    out.append(Dist("kernel/branchy-tanh-ops", np.array([cb.get("tanh", 0)])))
+    out.append(
+        Dist(
+            "kernel/specialised-select-ops",
+            np.array([cs.get("select_n", 0)]),
+        )
+    )
+    out.append(
+        Dist("kernel/branchy-select-ops", np.array([cb.get("select_n", 0)]))
+    )
+    out.append(
+        Dist(
+            "kernel/structural-skip-fraction-pct",
+            np.array([100.0 * skipped / total]),
+        )
+    )
+
+    spec_fn = jax.jit(
+        lambda q, k, v: flash_attention(
+            q, k, v, causal=True, window=64, block_q=64, block_k=64,
+            interpret=True,
+        )
+    )
+    br_fn = jax.jit(
+        lambda q, k, v, f: flash_attention_branchy(
+            q, k, v, f, block_q=64, block_k=64, interpret=True
+        )
+    )
+    spec_fn(q, k, v).block_until_ready()
+    br_fn(q, k, v, flags).block_until_ready()
+    out.append(
+        measure(
+            "kernel/specialised-interpret",
+            lambda: spec_fn(q, k, v).block_until_ready(),
+            reps=reps, warmup=3,
+        )
+    )
+    out.append(
+        measure(
+            "kernel/branchy-interpret",
+            lambda: br_fn(q, k, v, flags).block_until_ready(),
+            reps=reps, warmup=3,
+        )
+    )
+    return out

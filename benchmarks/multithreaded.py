@@ -1,0 +1,93 @@
+"""Paper Fig. 22 — flag-flipping worker thread + hot caller.
+
+A writer thread changes the branch direction at a fixed interval while the
+hot loop takes the branch. Variants: unsynchronised slot rebind (safe here:
+single-writer, GIL-atomic — the property the paper lacks on x86), the locked
+``set_direction_safe`` (the paper's -DSAFE_MODE), and a jitted lax.cond
+reading a shared device flag.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BranchChanger, reset_entry_points
+
+from .common import Dist, measure
+
+
+def run(reps: int = 2000, flip_interval_s: float = 0.001) -> list[Dist]:
+    reset_entry_points()
+    x = jnp.arange(64, dtype=jnp.float32)
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    def fa(x):
+        return x * 2.0
+
+    def fb(x):
+        return x * 3.0
+
+    out = []
+    for label, safe in (("unsync", False), ("locked", True)):
+        bc = BranchChanger(fa, fb, name=f"bench-mt-{label}")
+        bc.compile(spec)
+        bc.set_direction(True, warm=True)
+        stop = threading.Event()
+
+        def writer():
+            d = True
+            while not stop.is_set():
+                d = not d
+                if safe:
+                    bc.set_direction_safe(d)
+                else:
+                    bc.set_direction(d)
+                time.sleep(flip_interval_s)
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        out.append(
+            measure(
+                f"fig22/semistatic-{label}",
+                lambda: bc.branch(x).block_until_ready(),
+                reps=reps,
+            )
+        )
+        stop.set()
+        t.join()
+        bc.close()
+
+    # conditional with a shared device flag
+    @jax.jit
+    def cond_step(c, x):
+        return jax.lax.cond(c[0] > 0, fa, fb, x)
+
+    flag = jnp.ones((1,), jnp.int32)
+    cond_step(flag, x).block_until_ready()
+    state = {"flag": flag}
+    stop = threading.Event()
+
+    def flag_writer():
+        v = 1
+        while not stop.is_set():
+            v = 1 - v
+            state["flag"] = jnp.full((1,), v, jnp.int32)
+            time.sleep(flip_interval_s)
+
+    t = threading.Thread(target=flag_writer, daemon=True)
+    t.start()
+    out.append(
+        measure(
+            "fig22/conditional-shared-flag",
+            lambda: cond_step(state["flag"], x).block_until_ready(),
+            reps=reps,
+        )
+    )
+    stop.set()
+    t.join()
+    return out

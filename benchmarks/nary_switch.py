@@ -1,0 +1,53 @@
+"""Paper Fig. 18 — 5-way switch with unpredictable conditions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BranchChanger, reset_entry_points
+
+from .common import Dist, measure
+
+
+def run(reps: int = 2000) -> list[Dist]:
+    reset_entry_points()
+    x = jnp.arange(64, dtype=jnp.float32)
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    fns = [
+        lambda x: x * 2.0,
+        lambda x: x + 5.0,
+        lambda x: x * x,
+        lambda x: x - 3.0,
+        lambda x: x / 2.0,
+    ]
+    bc = BranchChanger(*fns, name="bench-nary")
+    bc.compile(spec)
+    for i in range(5):
+        bc.set_direction(i, warm=True)
+
+    @jax.jit
+    def switch_step(i, x):
+        return jax.lax.switch(i, fns, x)
+
+    idxs = [jnp.array(i, jnp.int32) for i in range(5)]
+    switch_step(idxs[0], x).block_until_ready()
+    rng = np.random.default_rng(1)
+
+    def semi():
+        # direction set in cold path per burst, then hot call
+        bc.set_direction(int(rng.integers(5)))
+        bc.branch(x).block_until_ready()
+
+    def cond():
+        switch_step(idxs[rng.integers(5)], x).block_until_ready()
+
+    def semi_hot_only():
+        bc.branch(x).block_until_ready()
+
+    return [
+        measure("fig18/semistatic-5way-switch+take", semi, reps=reps),
+        measure("fig18/semistatic-5way-take-only", semi_hot_only, reps=reps),
+        measure("fig18/lax-switch-5way-random", cond, reps=reps),
+    ]

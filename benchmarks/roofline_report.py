@@ -1,0 +1,47 @@
+"""§Roofline table generator: reads results/dryrun JSONs -> CSV rows.
+
+Rows: arch,shape,mesh -> three terms (s), dominant, useful-flops ratio,
+roofline fraction. Source of truth for EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def rows(dirs=("results/dryrun_v2", "results/dryrun")) -> list[dict]:
+    seen = {}
+    for d in dirs:  # v2 (batched MoE) takes precedence over the sweep
+        for f in sorted(glob.glob(f"{d}/*.json")):
+            r = json.load(open(f))
+            key = (r["arch"], r["shape"], r["mesh"])
+            if key not in seen:
+                seen[key] = r
+    return [seen[k] for k in sorted(seen)]
+
+
+def run(_reps: int = 0) -> list:
+    out = []
+    for r in rows():
+        if r["status"] == "skipped":
+            out.append(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},skipped,"
+                f"{r['reason'].split(':')[0]}"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(
+                f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},ERROR,"
+            )
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{rf['roofline_fraction']:.4f},"
+            f"dom={rf['dominant']};tc={rf['t_compute_s']:.3g};"
+            f"tm={rf['t_memory_s']:.3g};tx={rf['t_collective_s']:.3g};"
+            f"useful={rf['useful_flops_ratio']:.2f}"
+        )
+    return out

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig14,fig22] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from . import (
+        collectives_bench,
+        common,
+        dispatch_latency,
+        frequency_sweep,
+        hotpath_serving,
+        kernel_specialization,
+        multithreaded,
+        nary_switch,
+        roofline_report,
+        switch_cost,
+    )
+
+    suites = {
+        "fig14": lambda: dispatch_latency.run(600 if args.fast else 3000),
+        "fig11": lambda: switch_cost.run(300 if args.fast else 1500),
+        "fig19": lambda: frequency_sweep.run(600 if args.fast else 3000),
+        "fig16": lambda: hotpath_serving.run(60 if args.fast else 400),
+        "fig18": lambda: nary_switch.run(400 if args.fast else 2000),
+        "fig22": lambda: multithreaded.run(400 if args.fast else 2000),
+        "kernel": lambda: kernel_specialization.run(5 if args.fast else 30),
+        "collectives": lambda: collectives_bench.run(40 if args.fast else 200),
+        "roofline": lambda: roofline_report.run(),
+    }
+    only = {s for s in args.only.split(",") if s}
+    print(common.header())
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            for d in fn():
+                print(d if isinstance(d, str) else d.row(), flush=True)
+        except Exception as e:  # report, keep going
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

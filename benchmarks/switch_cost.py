@@ -1,0 +1,96 @@
+"""Paper Figs. 11/13/15 — branch-changing cost and the SMC/BTB analogues.
+
+  fig11/attr-store        plain Python attribute rebind (the paper's memcpy
+                          baseline)
+  fig11/set-direction     BranchChanger.set_direction (no warm)
+  fig13/first-call-cold   first branch() right after a direction change
+                          (stale-target cost: the BAC-correction analogue)
+  fig13/steady-call       branch() in steady state
+  fig15/set+warm          set_direction(warm=True) — pays the first-call cost
+                          in the cold path (dummy-order warming)
+  fig13/compile-miss      SpecTable cold compile (the true "SMC clear":
+                          re-specialisation)
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BranchChanger, SpecTable, reset_entry_points
+
+from .common import Dist, measure, timer_overhead_us
+
+
+def run(reps: int = 1500) -> list[Dist]:
+    reset_entry_points()
+    x = jnp.arange(64, dtype=jnp.float32)
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    def fa(x):
+        return x * 2.0
+
+    def fb(x):
+        return x * 3.0
+
+    bc = BranchChanger(fa, fb, name="bench-switch")
+    bc.compile(spec)
+    bc.set_direction(True, warm=True)
+    bc.set_direction(False, warm=True)
+
+    class Holder:
+        slot = fa
+
+    h = Holder()
+
+    out = []
+    out.append(
+        measure("fig11/attr-store", lambda: setattr(h, "slot", fb), reps=reps)
+    )
+
+    flip = [True]
+
+    def set_dir():
+        flip[0] = not flip[0]
+        bc.set_direction(flip[0])
+
+    out.append(measure("fig11/set-direction", set_dir, reps=reps))
+
+    # first-call-after-switch vs steady-state call
+    over = timer_overhead_us()
+    first = np.empty(reps)
+    steady = np.empty(reps)
+    for i in range(reps):
+        bc.set_direction(i % 2 == 0)
+        t0 = time.perf_counter_ns()
+        bc.branch(x).block_until_ready()
+        t1 = time.perf_counter_ns()
+        first[i] = (t1 - t0) / 1e3 - over
+        t0 = time.perf_counter_ns()
+        bc.branch(x).block_until_ready()
+        t1 = time.perf_counter_ns()
+        steady[i] = (t1 - t0) / 1e3 - over
+    out.append(Dist("fig13/first-call-cold", np.maximum(first, 0)))
+    out.append(Dist("fig13/steady-call", np.maximum(steady, 0)))
+
+    def set_warm():
+        flip[0] = not flip[0]
+        bc.set_direction(flip[0], warm=True)
+
+    out.append(measure("fig15/set+warm", set_warm, reps=min(reps, 500)))
+
+    # compile-miss: cold specialisation cost (measured once per size)
+    misses = []
+    for n in (32, 64, 128, 256, 512, 1024, 2048, 4096):
+        t = SpecTable(f"bench-{n}")
+        sp = jax.ShapeDtypeStruct((n,), jnp.float32)
+        t0 = time.perf_counter_ns()
+        t.get_or_build(n, lambda sp=sp: jax.jit(fa).lower(sp).compile())
+        t1 = time.perf_counter_ns()
+        misses.append((t1 - t0) / 1e3)
+    out.append(Dist("fig13/compile-miss", np.array(misses)))
+    bc.close()
+    return out

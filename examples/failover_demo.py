@@ -1,0 +1,56 @@
+"""Elastic failover as a semi-static branch (DESIGN.md §6).
+
+The healthy step and a degraded step (simulating the reduced mesh after
+losing a pod: here, half the batch) are both precompiled. The heartbeat
+monitor runs in the cold path; on failure it flips the BranchChanger and
+reshards the state — the hot loop never evaluates a health conditional.
+
+    PYTHONPATH=src python examples/failover_demo.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.ft.failover import FailoverPlan, HeartbeatMonitor
+from repro.optim import adamw
+from repro.runtime.steps import TrainState, make_train_fn
+
+cfg = get_config("olmo-1b").smoke()
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+state = TrainState(params=params, opt=adamw.init(params))
+step = make_train_fn(cfg, adamw.AdamWConfig(peak_lr=1e-3))
+
+# healthy: global batch 8; degraded: batch 4 (half the "pods")
+healthy = jax.jit(step)
+degraded = jax.jit(step)
+data_h = SyntheticLM(cfg, DataConfig(8, 64))
+data_d = SyntheticLM(cfg, DataConfig(4, 64))
+
+plan = FailoverPlan(
+    healthy_fn=healthy,
+    degraded_fn=degraded,
+    reshard_fn=lambda s: s,  # layouts identical in this single-host demo
+    name="demo-failover",
+    on_failover=[lambda failed: print(f"!! failover: lost {failed}")],
+)
+mon = HeartbeatMonitor(["pod0", "pod1"], timeout_s=0.2)
+
+for i in range(10):
+    mon.beat("pod0")
+    if i < 5:
+        mon.beat("pod1")  # pod1 dies after step 4
+    elif i == 7:
+        time.sleep(0.25)  # let the timeout trip
+    state = plan.check(mon, state)  # cold path
+    data = data_d if plan.degraded else data_h
+    state, metrics = plan.step(state, data.batch_at(i))  # hot path
+    print(f"step {i}: loss {float(metrics['loss']):.4f} "
+          f"{'DEGRADED' if plan.degraded else 'healthy'} "
+          f"batch {data.dcfg.global_batch}")
+plan.close()
+print(f"failovers: {plan.failovers}")

@@ -1,0 +1,9 @@
+"""repro: semi-static conditions (the paper's contribution) as a first-class
+dispatch primitive in a multi-pod JAX training/serving framework.
+
+Layers: core (the construct), models (10 assigned archs), kernels (Pallas),
+distributed (FSDP/TP/EP sharding + collectives), runtime (train/serve steps),
+launch (mesh/dryrun/train/serve), plus data/optim/checkpoint/ft substrate.
+"""
+
+__version__ = "1.0.0"

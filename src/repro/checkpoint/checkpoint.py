@@ -1,0 +1,129 @@
+"""Sharded checkpointing: per-host atomic step directories + async writer.
+
+Layout::
+
+    <dir>/step_000100.tmp/   (written)  ->  <dir>/step_000100/  (atomic rename)
+        host_0000.npz        flat {path: array} of this host's shards
+        META.json            {"step": ..., "arch": ..., "ts": ...}
+
+Restore resolves the latest complete step (META.json present). The async
+writer snapshots to host memory synchronously (device_get) and does the disk
+I/O on a thread so the train loop never blocks on the filesystem — the
+semi-static philosophy again: expensive work off the hot path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template: Any, flat: dict) -> Any:
+    leaves_p = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in leaves_p:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        arr = flat[key]
+        want = tuple(leaf.shape)
+        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str | Path,
+        *,
+        host_id: int = 0,
+        num_hosts: int = 1,
+        keep: int = 3,
+        async_write: bool = True,
+    ):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: threading.Thread | None = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, state: Any, *, meta: dict | None = None) -> None:
+        # snapshot synchronously (cheap host copy), write asynchronously
+        flat = _flatten(jax.device_get(state))
+        self.wait()
+        if self.async_write:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, flat, meta or {}), daemon=True
+            )
+            self._pending.start()
+        else:
+            self._write(step, flat, meta or {})
+
+    def _write(self, step: int, flat: dict, meta: dict) -> None:
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        final = self.dir / f"step_{step:08d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        np.savez(tmp / f"host_{self.host_id:04d}.npz", **flat)
+        (tmp / "META.json").write_text(
+            json.dumps({"step": step, "ts": time.time(), **meta})
+        )
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -------------------------------------------------------------- restore
+    def list_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "META.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[int, Any]:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = self.dir / f"step_{step:08d}" / f"host_{self.host_id:04d}.npz"
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        return step, _unflatten(template, flat)

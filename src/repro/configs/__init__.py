@@ -1,0 +1,33 @@
+"""Assigned architectures (10) + shape sets. See DESIGN.md 4."""
+
+from .base import (
+    SHAPES,
+    ArchConfig,
+    ShapeSpec,
+    get_config,
+    register,
+    shape_applicable,
+)
+
+ASSIGNED = (
+    "musicgen-medium",
+    "olmo-1b",
+    "deepseek-67b",
+    "qwen3-14b",
+    "gemma2-27b",
+    "granite-moe-1b-a400m",
+    "grok-1-314b",
+    "internvl2-1b",
+    "jamba-1.5-large-398b",
+    "mamba2-370m",
+)
+
+__all__ = [
+    "ASSIGNED",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeSpec",
+    "get_config",
+    "register",
+    "shape_applicable",
+]

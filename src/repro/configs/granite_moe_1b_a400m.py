@@ -1,0 +1,21 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]."""
+from .base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,            # per-expert ffn
+    vocab_size=49155,
+    mlp_pattern=("moe",),
+    num_experts=32,
+    top_k=8,
+    expert_d_ff=512,
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base; hf",
+))

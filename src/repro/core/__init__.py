@@ -1,0 +1,28 @@
+"""Core: semi-static conditions (the paper's contribution) for JAX.
+
+Three layers (DESIGN.md 2):
+  * host level   - BranchChanger: AOT executable table + direct-call hot path
+  * trace level  - semi_static / semi_static_switch: stage only the taken branch
+  * kernel level - Pallas specialisations (see repro.kernels)
+"""
+
+from .semistatic import (
+    BranchChanger,
+    BranchChangerError,
+    live_entry_points,
+    reset_entry_points,
+)
+from .specialization import SpecTable, bucket_multiple, bucket_pow2
+from .tracing import semi_static, semi_static_switch
+
+__all__ = [
+    "BranchChanger",
+    "BranchChangerError",
+    "SpecTable",
+    "bucket_multiple",
+    "bucket_pow2",
+    "live_entry_points",
+    "reset_entry_points",
+    "semi_static",
+    "semi_static_switch",
+]

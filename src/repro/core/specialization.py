@@ -1,0 +1,82 @@
+"""Specialisation tables: keyed collections of pre-compiled executables.
+
+A ``BranchChanger`` is a *fixed fan-out* semi-static condition. Production
+dispatch (serving buckets, elastic mesh shapes) needs an *open* fan-out: a table
+from specialisation key -> compiled executable, filled in the cold path, read
+with a plain dict hit on the warm path. The serving engine and the failover
+manager are built on this.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable
+
+import jax
+
+
+@dataclass
+class SpecStats:
+    hits: int = 0
+    misses: int = 0
+    compile_seconds: float = 0.0
+    keys: list = field(default_factory=list)
+
+
+class SpecTable:
+    """key -> AOT-compiled executable, with cold-path fill and stats."""
+
+    def __init__(self, name: str = "spec"):
+        self.name = name
+        self._table: dict[Hashable, Any] = {}
+        self.stats = SpecStats()
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._table
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def get(self, key: Hashable) -> Any:
+        """Hot-ish path: plain dict lookup, no compilation ever."""
+        try:
+            exe = self._table[key]
+        except KeyError:
+            raise KeyError(
+                f"SpecTable {self.name!r} has no executable for key {key!r}; "
+                f"precompile it in the cold path with get_or_build()."
+            ) from None
+        self.stats.hits += 1
+        return exe
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        """Cold path: compile-and-insert on miss."""
+        if key in self._table:
+            self.stats.hits += 1
+            return self._table[key]
+        t0 = time.perf_counter()
+        exe = builder()
+        self.stats.compile_seconds += time.perf_counter() - t0
+        self.stats.misses += 1
+        self.stats.keys.append(key)
+        self._table[key] = exe
+        return exe
+
+    def prewarm(self, key: Hashable, args: tuple) -> None:
+        out = self._table[key](*args)
+        jax.block_until_ready(out)
+
+
+def bucket_pow2(n: int, lo: int, hi: int) -> int:
+    """Round up to a power-of-two bucket in [lo, hi] (serving shape buckets)."""
+    b = lo
+    while b < n and b < hi:
+        b *= 2
+    return min(b, hi)
+
+
+def bucket_multiple(n: int, quantum: int, hi: int) -> int:
+    """Round up to a multiple of ``quantum`` (decode batch buckets)."""
+    b = ((n + quantum - 1) // quantum) * quantum
+    return min(max(b, quantum), hi)

@@ -1,0 +1,48 @@
+"""Trace-level semi-static conditions.
+
+``lax.cond(pred, t, f)`` stages *both* branches into HLO and decides on device —
+the paper's "conditional branch". ``semi_static`` decides at *trace time* with a
+host value, staging only the selected branch — the paper's "compile-time template
+polymorphism" whose direction can still be changed at runtime (by re-specialising,
+i.e. recompiling, in the cold path).
+
+These helpers exist so the distinction is explicit and auditable in model code,
+and so misuse (passing a traced value where a host value is required) fails loudly
+instead of silently falling back to staging both branches.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax.core
+
+from .semistatic import BranchChangerError
+
+
+def _require_host_value(x: Any, what: str) -> None:
+    if isinstance(x, jax.core.Tracer):
+        raise BranchChangerError(
+            f"{what} must be a host (Python) value for a semi-static condition; "
+            f"got a tracer. Use jax.lax.cond/switch for data-dependent branches, "
+            f"or hoist the condition out of the jitted region and re-specialise."
+        )
+
+
+def semi_static(
+    condition: bool, if_branch: Callable, else_branch: Callable, *args: Any
+) -> Any:
+    """Two-way semi-static condition: only the taken branch is staged."""
+    _require_host_value(condition, "semi_static condition")
+    return if_branch(*args) if condition else else_branch(*args)
+
+
+def semi_static_switch(index: int, branches: Sequence[Callable], *args: Any) -> Any:
+    """N-way semi-static condition (the paper's switch generalisation)."""
+    _require_host_value(index, "semi_static_switch index")
+    idx = int(index)
+    if not 0 <= idx < len(branches):
+        raise BranchChangerError(
+            f"semi_static_switch index {idx} out of range [0, {len(branches)})."
+        )
+    return branches[idx](*args)

@@ -1,0 +1,328 @@
+"""Trip-count-aware cost analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 95 layers reports 1/95th of the real FLOPs, and collectives
+inside the loop body (the FSDP all-gathers!) are similarly undercounted. This
+module parses the *partitioned* HLO text, walks the call graph from ENTRY, and
+multiplies ``while`` bodies by their ``known_trip_count`` backend annotation,
+producing:
+
+  * flops            — 2·M·N·K for every dot (einsums/matmuls dominate)
+  * bytes            — operand+result bytes at fusion/instruction boundaries
+                       (dynamic-update-slice counted as 2× update size, the
+                       in-place semantics XLA actually emits for KV caches)
+  * collective bytes — per op type (all-gather / all-reduce / reduce-scatter /
+                       all-to-all / collective-permute), result-shape bytes
+
+Approximations are documented in EXPERIMENTS.md §Dry-run: gathers count full
+operand bytes only at fusion boundaries (negligible at these scales), reduce
+``to_apply`` bodies are not recursed (elementwise adds), and a while loop with
+no trip annotation counts once (flagged in the result).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_TRIP = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_CALLS = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_FUSION_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dims(dims_str: str) -> list[int]:
+    return [int(d) for d in dims_str.split(",") if d]
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems_first(txt: str) -> list[int] | None:
+    m = _SHAPE_TOK.search(txt)
+    if not m:
+        return None
+    return _dims(m.group(2))
+
+
+@dataclass
+class Instr:
+    name: str
+    result: str  # result type text, e.g. "bf16[256,128]{1,0}"
+    opcode: str
+    rest: str  # operands + attrs text
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = None
+    unknown_trip_whiles: int = 0
+
+    def __post_init__(self):
+        if self.collectives is None:
+            self.collectives = {k: 0.0 for k in COLLECTIVE_OPS}
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k in COLLECTIVE_OPS:
+            self.collectives[k] += other.collectives[k] * mult
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+def parse_module(hlo_text: str) -> tuple[dict, str]:
+    """-> ({comp_name: Computation}, entry_name)"""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if stripped == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if m:
+                ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4))
+                cur.instrs.append(ins)
+                cur.by_name[ins.name] = ins
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are up to the first ")" at depth 0 of the opening "("
+    depth = 1
+    out = []
+    tok = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            tok += ch
+    for part in tok.split(","):
+        part = part.strip()
+        if part.startswith("%"):
+            out.append(part[1:])
+    return out
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res = _shape_elems_first(ins.result)
+    if res is None:
+        return 0.0
+    m = _CDIMS.search(ins.rest)
+    contract = 1
+    ops = _operand_names(ins.rest)
+    if m and ops:
+        lhs = comp.by_name.get(ops[0])
+        if lhs is not None:
+            lhs_dims = _shape_elems_first(lhs.result)
+            if lhs_dims:
+                for d in _dims(m.group(1)):
+                    if d < len(lhs_dims):
+                        contract *= lhs_dims[d]
+    n = 1
+    for d in res:
+        n *= d
+    return 2.0 * n * contract
+
+
+def _instr_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Boundary bytes: operands + result; DUS-rooted ops count update only."""
+    opcode = ins.opcode
+    ops = _operand_names(ins.rest)
+
+    def opbytes(name: str) -> float:
+        o = comp.by_name.get(name)
+        return _shape_bytes(o.result) if o else 0.0
+
+    if opcode == "dynamic-update-slice":
+        upd = opbytes(ops[1]) if len(ops) > 1 else 0.0
+        return 2.0 * upd
+    if opcode in ("dynamic-slice", "slice", "gather"):
+        # reads only the sliced/gathered elements, writes the result
+        return 2.0 * _shape_bytes(ins.result)
+    if opcode == "fusion":
+        m = _FUSION_CALLS.search(ins.rest)
+        if m and m.group(1) in comps:
+            fused = comps[m.group(1)]
+            root = fused.instrs[-1] if fused.instrs else None
+            if root is not None and root.opcode in (
+                "dynamic-slice",
+                "slice",
+                "gather",
+            ):
+                # slice-rooted fusion: only the slice moves, plus any small
+                # non-sliced operands (indices, scalars)
+                return 2.0 * _shape_bytes(ins.result)
+            if root is not None and root.opcode == "dynamic-update-slice":
+                # in-place cache update: the big operand is aliased, only the
+                # update slice moves. Count other operands + 2×update.
+                root_ops = _operand_names(root.rest)
+                upd_param_idx = None
+                if len(root_ops) > 1:
+                    upd_def = fused.by_name.get(root_ops[1])
+                    if upd_def is not None and upd_def.opcode == "parameter":
+                        pm = re.match(r"parameter\((\d+)", upd_def.rest)
+                        # parameter index maps to fusion operand position
+                        if pm is None:
+                            pm = re.match(r"(\d+)", upd_def.rest)
+                        if pm:
+                            upd_param_idx = int(pm.group(1))
+                    upd_bytes = (
+                        _shape_bytes(upd_def.result) if upd_def else 0.0
+                    )
+                else:
+                    upd_bytes = 0.0
+                total = 2.0 * upd_bytes
+                big_idx = None
+                big_def = fused.by_name.get(root_ops[0]) if root_ops else None
+                if big_def is not None and big_def.opcode == "parameter":
+                    pm = re.match(r"(\d+)", big_def.rest)
+                    if pm:
+                        big_idx = int(pm.group(1))
+                for i, o in enumerate(ops):
+                    if i == big_idx or i == upd_param_idx:
+                        continue
+                    total += opbytes(o)
+                return total
+    total = _shape_bytes(ins.result)
+    for o in ops:
+        total += opbytes(o)
+    return total
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+}
+
+
+def _comp_cost(name: str, comps: dict, memo: dict) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()  # break cycles defensively
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    cost = Cost()
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "while":
+            body = _BODY.search(ins.rest)
+            cond = _COND.search(ins.rest)
+            trip_m = _TRIP.search(ins.rest)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            if not trip_m:
+                cost.unknown_trip_whiles += 1
+            if body:
+                cost.add(_comp_cost(body.group(1), comps, memo), trip)
+            if cond:
+                cost.add(_comp_cost(cond.group(1), comps, memo), trip)
+            continue
+        if op in ("call", "conditional"):
+            for sub in _CALLS.findall(ins.rest):
+                cost.add(_comp_cost(sub, comps, memo))
+            continue
+        if op == "fusion":
+            m = _FUSION_CALLS.search(ins.rest)
+            if m:
+                sub = _comp_cost(m.group(1), comps, memo)
+                cost.flops += sub.flops
+                cost.transcendentals += sub.transcendentals
+                # bytes only at the fusion boundary:
+            cost.bytes += _instr_bytes(ins, comp, comps)
+            continue
+        is_coll = False
+        for cop in COLLECTIVE_OPS:
+            if op == cop or op == cop + "-start":
+                cost.collectives[cop] += _shape_bytes(ins.result)
+                cost.bytes += _instr_bytes(ins, comp, comps)
+                is_coll = True
+                break
+        if is_coll:
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(ins, comp)
+            cost.bytes += _instr_bytes(ins, comp, comps)
+            continue
+        if op in ("exponential", "tanh", "log", "rsqrt", "sqrt", "power"):
+            res = _shape_elems_first(ins.result)
+            if res:
+                n = 1
+                for d in res:
+                    n *= d
+                cost.transcendentals += n
+        if op not in _SKIP_BYTES_OPS:
+            cost.bytes += _instr_bytes(ins, comp, comps)
+    memo[name] = cost
+    return cost
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    cost = _comp_cost(entry, comps, {})
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "collectives": cost.collectives,
+        "collective_bytes_total": sum(cost.collectives.values()),
+        "unknown_trip_whiles": cost.unknown_trip_whiles,
+    }

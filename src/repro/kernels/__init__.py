@@ -1,0 +1,23 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; TPU is the target).
+
+flash_attention  — fused attention, semi-static mode specialisation
+decode_attention — single-token GQA KV-cache attention
+ops              — jit'd wrappers + KernelBranch (kernel-level BranchChanger)
+ref              — pure-jnp oracles
+"""
+
+from .ops import (
+    KernelBranch,
+    decode_attention,
+    flash_attention,
+    flash_attention_branchy,
+)
+from .ssd_chunk import ssd_chunk
+
+__all__ = [
+    "KernelBranch",
+    "decode_attention",
+    "flash_attention",
+    "flash_attention_branchy",
+    "ssd_chunk",
+]

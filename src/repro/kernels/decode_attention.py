@@ -1,0 +1,147 @@
+"""Pallas TPU single-token GQA decode attention, blocked over the KV cache.
+
+One query token per sequence attends over a [B, KH, S, dh] cache. The grid is
+(B, KH, S/bk); each step loads the q-head *group* for its kv head ([G, dh]) and
+one KV block, carrying the online-softmax state in VMEM scratch. The cache
+length (current position) arrives as a prefetched scalar so fully-out-of-range
+blocks are skipped structurally.
+
+Mode (window / softcap) is semi-statically specialised exactly as in
+flash_attention.py — a gemma2 local layer and a global layer are two different
+compiled kernels, not one kernel with a flag.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _make_kernel(
+    *,
+    window: Optional[int],
+    softcap: Optional[float],
+    block_k: int,
+    group: int,
+    sm_scale: float,
+    num_k_blocks: int,
+):
+    def kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr):
+        kb = pl.program_id(2)
+        pos = pos_ref[0]
+
+        @pl.when(kb == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        # structural skips: blocks past the cache position, or (window mode)
+        # blocks entirely before the window.
+        run = kb * block_k <= pos
+        if window is not None:
+            run = jnp.logical_and(run, kb * block_k + block_k - 1 > pos - window)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32)  # [G, dh]
+            k = k_ref[0, 0].astype(jnp.float32)  # [bk, dh]
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ()))
+            ) * sm_scale  # [G, bk]
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            ki = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (group, block_k), 1
+            )
+            s = jnp.where(ki <= pos, s, NEG_INF)
+            if window is not None:
+                s = jnp.where(ki > pos - window, s, NEG_INF)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+            m_scr[...] = m_new
+            acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ()))
+            )
+
+        @pl.when(kb == num_k_blocks - 1)
+        def _finalize():
+            l = jnp.maximum(l_scr[...], 1e-37)
+            o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+    return kernel
+
+
+def decode_attention(
+    q: jax.Array,  # [B, H, dh] one token per sequence
+    k: jax.Array,  # [B, KH, S, dh]
+    v: jax.Array,
+    pos: jax.Array,  # i32[] current cache position (inclusive)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, dh = q.shape
+    _, kh, s, _ = k.shape
+    assert h % kh == 0
+    group = h // kh
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+    sm_scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, kh, group, dh)
+
+    kernel = _make_kernel(
+        window=window,
+        softcap=softcap,
+        block_k=block_k,
+        group=group,
+        sm_scale=sm_scale,
+        num_k_blocks=nk,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kh, nk),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, group, dh), lambda b_, h_, kb, pos: (b_, h_, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dh), lambda b_, h_, kb, pos: (b_, h_, kb, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dh), lambda b_, h_, kb, pos: (b_, h_, kb, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, dh), lambda b_, h_, kb, pos: (b_, h_, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, group, dh), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), qg, k, v)
+    return out.reshape(b, h, dh)

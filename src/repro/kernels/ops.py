@@ -1,0 +1,106 @@
+"""Public jit'd wrappers over the Pallas kernels + the KernelBranch registry.
+
+``KernelBranch`` is the kernel-level face of the paper's construct: a table of
+mode-specialised compiled kernels; switching mode = cold-path re-selection,
+the hot path always calls a kernel with zero runtime mode branches.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.specialization import SpecTable
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "interpret")
+)
+def flash_attention_branchy(
+    q, k, v, flags,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    return _fa.flash_attention_branchy(
+        q, k, v, flags, block_q=block_q, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "block_k", "interpret"),
+)
+def decode_attention(
+    q, k, v, pos,
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+):
+    return _dec.decode_attention(
+        q, k, v, pos,
+        window=window, softcap=softcap, block_k=block_k, interpret=interpret,
+    )
+
+
+class KernelBranch:
+    """Semi-static kernel dispatch: mode -> specialised compiled kernel.
+
+    Cold path: ``set_mode(...)`` (may compile). Hot path: ``__call__`` — a
+    direct invocation of the selected specialisation; the mode is code, not
+    data.
+    """
+
+    def __init__(self, name: str = "flash", interpret: bool = False):
+        self._table = SpecTable(name)
+        self._interpret = interpret
+        self._mode: tuple = (True, None, None)
+
+    def set_mode(
+        self,
+        *,
+        causal: bool = True,
+        window: Optional[int] = None,
+        softcap: Optional[float] = None,
+    ) -> None:
+        self._mode = (causal, window, softcap)
+
+    def __call__(self, q, k, v):
+        causal, window, softcap = self._mode
+        return flash_attention(
+            q, k, v,
+            causal=causal, window=window, softcap=softcap,
+            interpret=self._interpret,
+        )

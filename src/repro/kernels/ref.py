@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert allclose vs these)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, dh]
+    k: jax.Array,  # [B, KH, Sk, dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    b, h, sq, dh = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    qg = q.reshape(b, kh, group, sq, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / np.sqrt(dh)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, h, sq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, H, dh]
+    k: jax.Array,  # [B, KH, S, dh]
+    v: jax.Array,
+    pos: jax.Array,  # scalar
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    b, h, dh = q.shape
+    _, kh, s, _ = k.shape
+    group = h // kh
+    qg = q.reshape(b, kh, group, dh).astype(jnp.float32)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", qg, k.astype(jnp.float32)) / np.sqrt(dh)
+    if softcap is not None:
+        sc = jnp.tanh(sc / softcap) * softcap
+    ki = jnp.arange(s)
+    ok = ki <= pos
+    if window is not None:
+        ok &= ki > pos - window
+    sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, dh).astype(q.dtype)

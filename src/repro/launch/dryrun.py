@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first (before any jax-importing module): jax
+locks the device count on first init, and only the dry-run wants 512 host
+placeholder devices.
+
+Per cell this records, into JSON, everything §Roofline needs:
+  * compiled.cost_analysis() — per-device HLO FLOPs / bytes accessed
+  * compiled.memory_analysis() — per-device argument/output/temp bytes
+  * collective bytes by op type, parsed from the partitioned HLO text
+  * analytic MODEL_FLOPS (6·N·D train / 2·N_active·tokens inference)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmo-1b --shape train_4k \
+      --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+def np_prod(shape) -> int:
+    return int(math.prod(shape))
+
+from repro import perf
+from repro.configs import SHAPES, ArchConfig, get_config, shape_applicable
+from repro.hlo_analysis import analyze as analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import roofline_terms
+from repro.runtime import steps
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+    save_hlo: str | None = None,
+    opts: "perf.PerfOpts | None" = None,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "impl": impl,
+        "moe_policy": moe_policy,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    if opts is not None:
+        rec["perf_opts"] = {
+            k: getattr(opts, k) for k in opts.__dataclass_fields__
+        }
+    t0 = time.perf_counter()
+    lowered = steps.lower_for(
+        cfg, mesh, shape, impl=impl, moe_policy=moe_policy, opts=opts
+    )
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware accounting (XLA counts while bodies once; see
+    # repro.hlo_analysis) — these are the numbers §Roofline uses.
+    corrected = analyze_hlo(hlo)
+    if save_hlo:
+        Path(save_hlo).write_text(hlo)
+
+    pc = cfg.param_counts()
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 6 * pc["active"] * tokens
+        # params read + grads written + opt moments touched, once per step
+        min_bytes = pc["total"] * (2 * dtype_bytes + 8)
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        model_flops = 2 * pc["active"] * tokens
+        min_bytes = pc["active"] * dtype_bytes
+    else:  # decode: one token per sequence; params + cache move once
+        tokens = shape.global_batch
+        model_flops = 2 * pc["active"] * tokens
+        c_shape = steps.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+        cache_bytes = sum(
+            int(np_prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(c_shape)
+        )
+        min_bytes = pc["active"] * dtype_bytes + cache_bytes
+
+    rec.update(
+        status="ok",
+        chips=int(n_chips),
+        lower_s=round(t1 - t0, 2),
+        compile_s=round(t2 - t1, 2),
+        flops_per_device=corrected["flops"],
+        bytes_per_device=corrected["bytes"],
+        collective_bytes_per_device=corrected["collectives"],
+        unknown_trip_whiles=corrected["unknown_trip_whiles"],
+        xla_reported={  # bodies-counted-once numbers, for reference
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        },
+        mem={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        params_total=pc["total"],
+        params_active=pc["active"],
+        tokens=tokens,
+        model_flops=model_flops,
+        min_bytes_global=min_bytes,
+    )
+    rec["roofline"] = roofline_terms(rec)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--impl", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--moe-policy", default="drop", choices=["drop", "dense", "gather"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--seq-fallback", action="store_true")
+    ap.add_argument("--probs-dtype", default=None)
+    ap.add_argument("--score-dtype", default=None)
+    ap.add_argument("--norm-bf16", action="store_true")
+    ap.add_argument("--remat-policy", default=None, choices=["full", "dots"])
+    ap.add_argument("--moe-hints", action="store_true")
+    ap.add_argument("--moe-weight-gather", action="store_true")
+    ap.add_argument("--attn-block", type=int, default=None)
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ASSIGNED
+
+        cells = [
+            (a, s, m)
+            for a in ASSIGNED
+            for s in SHAPES
+            for m in ("single", "multi")
+        ]
+    else:
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, mesh_kind in cells:
+        tag = f"-{args.tag}" if args.tag else ""
+        fname = outdir / f"{arch}--{shape}--{mesh_kind}{tag}.json"
+        if fname.exists():
+            print(f"[skip existing] {fname}")
+            continue
+        print(f"[dryrun] {arch} × {shape} × {mesh_kind} ...", flush=True)
+        opts = None
+        if (
+            args.seq_fallback or args.probs_dtype or args.remat_policy
+            or args.moe_hints or args.attn_block or args.impl != "naive"
+            or args.score_dtype or args.norm_bf16 or args.moe_weight_gather
+        ):
+            opts = perf.from_flags(
+                impl=args.impl,
+                seq_shard_fallback=args.seq_fallback or None,
+                probs_dtype=args.probs_dtype,
+                score_dtype=args.score_dtype,
+                remat_policy=args.remat_policy,
+                moe_hints=args.moe_hints or None,
+                attn_block=args.attn_block,
+                norm_bf16=args.norm_bf16 or None,
+                moe_weight_gather=args.moe_weight_gather or None,
+            )
+        try:
+            rec = run_cell(
+                arch, shape, mesh_kind,
+                impl=args.impl, moe_policy=args.moe_policy,
+                save_hlo=args.save_hlo, opts=opts,
+            )
+        except Exception as e:  # a failure here is a bug in the system
+            rec = {
+                "arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "error", "error": repr(e),
+                "traceback": traceback.format_exc(),
+            }
+        fname.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (
+                f" compile={rec['compile_s']}s flops/dev={rec['flops_per_device']:.3g}"
+                f" coll={sum(rec['collective_bytes_per_device'].values()):.3g}B"
+            )
+        print(f"[{status}] {arch} × {shape} × {mesh_kind}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Model substrate: pure-functional layers, blocks, and LM assembly."""
+
+from .model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "input_specs",
+    "loss_fn",
+    "prefill",
+]

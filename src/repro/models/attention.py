@@ -1,0 +1,264 @@
+"""GQA attention: full-sequence (train/prefill) and single-token decode paths.
+
+Two implementations selectable as a *semi-static* choice (DESIGN.md §2):
+  * ``naive``   — materialise [B,KH,G,S,S] scores (paper-faithful baseline; what
+                  a straight port compiles to)
+  * ``chunked`` — lax.scan over KV blocks with online softmax (flash-style data
+                  movement in pure JAX; the beyond-paper memory-term optimisation)
+
+On real TPU hardware the Pallas kernels in ``repro.kernels`` replace both; the
+dry-run compiles the pure-JAX paths (Pallas is validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import perf
+from repro.configs import ArchConfig
+from repro.distributed.sharding import hint, hint_attn_q
+
+from .layers import apply_rope, dense_init, dtype_of, rms_norm, softcap
+
+NEG_INF = -2.0e38
+
+
+def attn_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads, cfg.head_dim), dt),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), dt),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads, cfg.head_dim), dt),
+        "wo": dense_init(ks[3], (cfg.num_heads, cfg.head_dim, cfg.d_model), dt),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((cfg.head_dim,), dt)
+        p["k_scale"] = jnp.zeros((cfg.head_dim,), dt)
+    return p
+
+
+def _qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_scale"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _group(cfg: ArchConfig, q: jax.Array) -> jax.Array:
+    """[B,S,H,dh] -> [B,S,KH,G,dh]."""
+    b, s, h, dh = q.shape
+    g = h // cfg.num_kv_heads
+    return q.reshape(b, s, cfg.num_kv_heads, g, dh)
+
+
+def _mask(
+    s_q: int,
+    s_k: int,
+    *,
+    causal: bool,
+    window: int | None,
+    q_offset: int = 0,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """[S_q, S_k] additive mask (0 / -inf-ish in the scores dtype)."""
+    qi = jnp.arange(s_q)[:, None] + q_offset
+    ki = jnp.arange(s_k)[None, :]
+    ok = jnp.ones((s_q, s_k), jnp.bool_)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    neg = jnp.asarray(jnp.finfo(dtype).min / 2, dtype)
+    return jnp.where(ok, jnp.zeros((), dtype), neg)
+
+
+def _sdpa_naive(
+    cfg: ArchConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int | None,
+) -> jax.Array:
+    """q: [B,Sq,KH,G,dh]; k,v: [B,Sk,KH,dh] -> [B,Sq,KH,G,dh]."""
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    po = perf.current()
+    sd = jnp.dtype(po.score_dtype) if po.score_dtype else jnp.float32
+    # preferred_element_type at the dot itself: otherwise the QK^T dot
+    # materialises an f32 accumulator tensor and converts afterwards
+    scores = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q, k, preferred_element_type=sd
+    ) * jnp.asarray(scale, sd)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = scores + _mask(
+        q.shape[1], k.shape[1], causal=True, window=window, dtype=sd
+    )
+    probs = jax.nn.softmax(scores, axis=-1).astype(po.probs_dtype or v.dtype)
+    return jnp.einsum(
+        "bhgqk,bkhd->bqhgd", probs, v.astype(probs.dtype)
+    ).astype(v.dtype)
+
+
+def _sdpa_chunked(
+    cfg: ArchConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int | None,
+    block: int = 1024,
+) -> jax.Array:
+    """Online-softmax over KV blocks: O(S·block) score memory instead of O(S²)."""
+    b, sq, kh, g, dh = q.shape
+    sk = k.shape[1]
+    block = min(block, sk)
+    assert sk % block == 0, (sk, block)
+    nblk = sk // block
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    kb = k.reshape(b, nblk, block, kh, dh)
+    vb = v.reshape(b, nblk, block, kh, dh)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kv_i, (k_i, v_i) = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_i.astype(jnp.float32)) * scale
+        s = softcap(s, cfg.attn_logit_softcap)
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(block)[None, :] + kv_i * block
+        ok = ki <= qi
+        if window is not None:
+            ok &= ki > qi - window
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pd = perf.current().probs_dtype
+        if pd is not None:  # cheaper PV matmul traffic (perf opt)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(pd), v_i.astype(pd)
+            ).astype(jnp.float32)
+        else:
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_i.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, a0),
+        (jnp.arange(nblk), (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0))),
+    )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return jnp.moveaxis(out, -2, 1).astype(v.dtype)  # [B,Sq,KH,G,dh]
+
+
+def attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    local: bool,
+    impl: str = "naive",
+) -> jax.Array:
+    """Full-sequence causal attention. x: [B,S,D] -> [B,S,D]."""
+    window = cfg.sliding_window if local else None
+    po = perf.current()
+    if impl == "auto":
+        impl = po.impl
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint_attn_q(q)
+    k = hint(k, "batch", None, "model", None)
+    v = hint(v, "batch", None, "model", None)
+    qg = _group(cfg, q)
+    if impl == "chunked":
+        og = _sdpa_chunked(cfg, qg, k, v, window=window, block=po.attn_block)
+    else:
+        og = _sdpa_naive(cfg, qg, k, v, window=window)
+    b, s = x.shape[:2]
+    o = og.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    o = hint_attn_q(o)
+    return hint(jnp.einsum("bshk,hkd->bsd", o, p["wo"]), "batch", None, None)
+
+
+# -------------------------------------------------------------------- decode
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    dt = dtype_of(cfg)
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    local: bool,
+    impl: str = "naive",
+) -> tuple[jax.Array, dict]:
+    """Full-sequence attention that also returns the populated KV cache."""
+    window = cfg.sliding_window if local else None
+    po = perf.current()
+    if impl == "auto":
+        impl = po.impl
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint_attn_q(q)
+    k = hint(k, "batch", None, "model", None)
+    v = hint(v, "batch", None, "model", None)
+    qg = _group(cfg, q)
+    if impl == "chunked":
+        og = _sdpa_chunked(cfg, qg, k, v, window=window, block=po.attn_block)
+    else:
+        og = _sdpa_naive(cfg, qg, k, v, window=window)
+    b, s = x.shape[:2]
+    o = og.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    o = hint_attn_q(o)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": k, "v": v}
+
+
+def decode_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    local: bool,
+) -> tuple[jax.Array, dict]:
+    """One-token decode. x: [B,1,D]; cache k/v: [B,Smax,KH,dh]; pos: scalar.
+
+    No head hints here: the cache's seq dim owns the model axis (flash-decode
+    style distributed softmax via partial-reduce + all-reduce).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint(q, "batch", None, None, None)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    qg = _group(cfg, q)  # [B,1,KH,G,dh]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    ki = jnp.arange(ck.shape[1])
+    ok = ki <= pos
+    if local and cfg.sliding_window is not None:
+        ok &= ki > pos - cfg.sliding_window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    og = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv)
+    o = og.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": ck, "v": cv}

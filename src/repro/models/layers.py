@@ -1,0 +1,124 @@
+"""Shared layer primitives (pure-functional, pytree params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import perf
+from repro.configs import ArchConfig
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    if perf.current().norm_bf16 and dt != jnp.float32:
+        # keep the big elementwise tensors (and their cotangents) in bf16;
+        # only the per-token reduction stays f32
+        return x * r.astype(dt) * (1.0 + scale.astype(jnp.float32)).astype(dt)
+    return (xf * r * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def ln_nonparam(x: jax.Array, eps: float) -> jax.Array:
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)
+    if perf.current().norm_bf16 and dt != jnp.float32:
+        return (x - mu.astype(dt)) * r.astype(dt)
+    return ((xf - mu) * r).astype(dt)
+
+
+def norm_init(cfg: ArchConfig) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), dtype_of(cfg))}
+    return {}
+
+
+def norm_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return ln_nonparam(x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------ softcap
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [..., S, H, dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))  # [dh/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(angles)[..., :, None, :]  # [..., S, 1, dh/2]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def embed_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    p = {}
+    if cfg.input_kind == "tokens":
+        p["embedding"] = (
+            jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02
+        ).astype(dtype_of(cfg))
+    return p
+
+
+def embed_apply(cfg: ArchConfig, p: dict, inputs: jax.Array) -> jax.Array:
+    """tokens [B,S] -> [B,S,D], or pass through stub-frontend embeddings."""
+    if cfg.input_kind == "tokens":
+        x = jnp.take(p["embedding"], inputs, axis=0)
+    else:
+        x = inputs.astype(dtype_of(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def head_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    if cfg.tie_embeddings and cfg.input_kind == "tokens":
+        return {}
+    return {
+        "lm_head": (
+            jax.random.normal(key, (cfg.d_model, cfg.vocab_size)) * 0.02
+        ).astype(dtype_of(cfg))
+    }
+
+
+def head_apply(
+    cfg: ArchConfig, head_p: dict, embed_p: dict, x: jax.Array
+) -> jax.Array:
+    if cfg.tie_embeddings and cfg.input_kind == "tokens":
+        w = embed_p["embedding"].T
+    else:
+        w = head_p["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def dense_init(key: jax.Array, shape: tuple, dtype, scale: float = 1.0) -> jax.Array:
+    fan_in = shape[0]
+    return (jax.random.normal(key, shape) * (scale / np.sqrt(fan_in))).astype(dtype)

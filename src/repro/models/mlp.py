@@ -1,0 +1,32 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import hint
+
+from .layers import dense_init, dtype_of
+
+
+def _act(name: str):
+    return jax.nn.silu if name == "silu" else jax.nn.gelu
+
+
+def mlp_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {
+        "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dt),
+        "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dt),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dt),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    g = _act(cfg.act)(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = hint(g * u, "batch", None, "model")
+    return hint(jnp.einsum("bsf,fd->bsd", h, p["w_down"]), "batch", None, None)

@@ -1,0 +1,252 @@
+"""Top-level LM: init / train forward / prefill / decode, scanned over depth.
+
+Params layout::
+
+    {"embed": {...}, "head": {...}, "final_norm": {...},
+     "blocks": [slot_0_params, ..., slot_{p-1}_params]}   # each stacked [m, ...]
+
+Caches mirror "blocks" (stacked per slot). All functions are pure; the runtime
+layer (repro.runtime) wraps them in jit/pjit with shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf
+from repro.configs import ArchConfig
+from repro.distributed.sharding import hint
+
+from .blocks import (
+    block_apply,
+    block_cache_init,
+    block_decode,
+    block_init,
+    block_prefill,
+)
+from .layers import dtype_of, embed_apply, embed_init, head_apply, head_init, norm_init
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    p = cfg.period
+    m = cfg.num_layers // p
+    keys = jax.random.split(key, 3 + p)
+    params: dict[str, Any] = {
+        "embed": embed_init(cfg, keys[0]),
+        "head": head_init(cfg, keys[1]),
+        "final_norm": norm_init(cfg),
+    }
+    blocks = []
+    for slot in range(p):
+        slot_keys = jax.random.split(keys[3 + slot], m)
+        blocks.append(jax.vmap(lambda k, s=slot: block_init(cfg, k, s))(slot_keys))
+    params["blocks"] = blocks
+    return params
+
+
+def _positions(batch: int, seq: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+
+
+def _stack_body(cfg: ArchConfig, *, impl: str, moe_policy: str, remat: bool):
+    """Scan body applying one period of blocks."""
+
+    def body(carry, slot_params):
+        x, aux, positions = carry
+        for slot in range(cfg.period):
+            x, a = block_apply(
+                cfg, slot, slot_params[slot], x, positions,
+                impl=impl, moe_policy=moe_policy,
+            )
+            aux = aux + a
+        return (x, aux, positions), None
+
+    if remat:
+        if perf.current().remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots
+            )
+        else:
+            body = jax.checkpoint(body)
+    return body
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    inputs: jax.Array,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+    remat: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """inputs: tokens [B,S] or stub-frontend embeddings [B,S,D].
+
+    Returns (logits [B,S,V] float32, moe_aux scalar)."""
+    if remat is None:
+        remat = cfg.remat == "block"
+    x = hint(embed_apply(cfg, params["embed"], inputs), "batch", None, None)
+    b, s = x.shape[:2]
+    positions = _positions(b, s)
+    body = _stack_body(cfg, impl=impl, moe_policy=moe_policy, remat=remat)
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux, _), _ = jax.lax.scan(
+        body, (x, aux0, positions), tuple(params["blocks"])
+    )
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = hint(
+        head_apply(cfg, params["head"], params["embed"], x),
+        "batch", None, "model",
+    )
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ArchConfig,
+    params: dict,
+    batch: dict,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, dict]:
+    """batch: {"inputs": tokens|embeds, "labels": [B,S] int32 (-1 = pad)}."""
+    logits, aux = forward(cfg, params, batch["inputs"],
+                          impl=impl, moe_policy=moe_policy)
+    labels = batch["labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = (logz - ll) * valid
+    ntok = jnp.maximum(jnp.sum(valid), 1.0)
+    loss = jnp.sum(ce) / ntok
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"ce": loss, "moe_aux": aux, "ntok": ntok}
+
+
+# ------------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> list:
+    p = cfg.period
+    m = cfg.num_layers // p
+    caches = []
+    for slot in range(p):
+        one = block_cache_init(cfg, slot, batch, max_len)
+        caches.append(jax.tree.map(lambda t: jnp.stack([t] * m), one))
+    return caches
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    inputs: jax.Array,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """Run the full prompt; returns (last-token logits [B,V], cache)."""
+    x = embed_apply(cfg, params["embed"], inputs)
+    b, s = x.shape[:2]
+    positions = _positions(b, s)
+
+    def body(carry, slot_params):
+        x = carry
+        caches = []
+        for slot in range(cfg.period):
+            x, c = block_prefill(
+                cfg, slot, slot_params[slot], x, positions,
+                impl=impl, moe_policy=moe_policy,
+            )
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(body, x, tuple(params["blocks"]))
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = head_apply(cfg, params["head"], params["embed"], x[:, -1])
+    return logits, list(caches)
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    pos: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """One token for the whole stack.
+
+    inputs: [B,1] tokens or [B,1,D] embeddings; pos: scalar int32 (current
+    write index into the KV cache). Returns (logits [B,V], new cache).
+    """
+    x = embed_apply(cfg, params["embed"], inputs)
+
+    def body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = []
+        for slot in range(cfg.period):
+            x, c = block_decode(
+                cfg, slot, slot_params[slot], x, slot_caches[slot], pos,
+                moe_policy=moe_policy,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = head_apply(cfg, params["head"], params["embed"], x[:, -1])
+    return logits, list(new_cache)
+
+
+def pad_cache(cfg: ArchConfig, cache: list, max_len: int) -> list:
+    """Grow prefill KV caches (length = prompt) to max_len for decoding."""
+
+    def pad(slot: int, tree: dict) -> dict:
+        if not cfg.mixer_at(slot).startswith("attn"):
+            return tree  # SSM caches are O(1); nothing to grow
+        def grow(t):
+            # [m, B, S, KH, dh] -> [m, B, max_len, KH, dh]
+            padw = [(0, 0)] * t.ndim
+            padw[2] = (0, max_len - t.shape[2])
+            return jnp.pad(t, padw)
+        return jax.tree.map(grow, tree)
+
+    return [pad(slot, c) for slot, c in enumerate(cache)]
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, kind: str, batch: int, seq: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    For [audio]/[vlm] archs the stub modality frontend supplies precomputed
+    frame/patch embeddings (DESIGN.md §4).
+    """
+    dt = dtype_of(cfg)
+    if cfg.input_kind == "tokens":
+        train_in = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        dec_in = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    else:
+        train_in = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dt)
+        dec_in = jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dt)
+    if kind == "train":
+        return {
+            "inputs": train_in,
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if kind == "prefill":
+        return {"inputs": train_in}
+    if kind == "decode":
+        return {"inputs": dec_in, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    raise ValueError(kind)

@@ -1,0 +1,183 @@
+"""Top-k MoE with capacity-bounded gather/scatter dispatch (dropping).
+
+Dispatch is *natively batched* (no vmap): per sequence, the S·k assignments
+get position-within-expert ranks via a one-hot cumsum, are scattered into a
+fixed [B, E, C, D] buffer (overflow dropped; the residual stream carries
+dropped tokens — Switch-Transformer semantics), run through grouped expert
+einsums, and are scattered back gate-weighted. Keeping the batch dim explicit
+lets the activation sharding hints pin it to the data axis — the vmapped
+formulation silently replicated the dispatch over the whole global batch on
+every device (found via the dry-run HLO; see EXPERIMENTS.md §Perf grok-1).
+
+All shapes static (dry-run requirement); expert weights shard over the model
+axis (EP) when E divides it, else the expert-ffn dim shards (DESIGN.md §5).
+The overflow policy is a semi-static branch: "drop" (default) vs "dense".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import perf
+from repro.configs import ArchConfig
+from repro.distributed.sharding import hint
+
+from .layers import dense_init, dtype_of
+from .mlp import _act
+
+
+def moe_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.expert_d_ff or cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (e, d, f), dt),
+        "w_up": dense_init(ks[2], (e, d, f), dt),
+        "w_down": dense_init(ks[3], (e, f, d), dt),
+    }
+
+
+def moe_capacity(cfg: ArchConfig, seq: int) -> int:
+    cap = int(cfg.capacity_factor * seq * cfg.top_k / cfg.num_experts)
+    return max(cap, cfg.top_k)
+
+
+def _route(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: [..., S, D] -> gates [..., S, k] (renormalised), idx, probs."""
+    logits = jnp.einsum("...sd,de->...se", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    return gates, idx, probs
+
+
+def _aux_loss(cfg: ArchConfig, idx: jax.Array, probs: jax.Array) -> jax.Array:
+    e = cfg.num_experts
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))  # [E]
+    ce = jnp.mean(
+        jax.nn.one_hot(idx, e).sum(axis=-2).astype(jnp.float32),
+        axis=tuple(range(idx.ndim - 1)),
+    )
+    return jnp.sum(me * ce) * (e / cfg.top_k)
+
+
+def _dispatch_batched(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: [B, S, D] -> (y [B, S, D], aux scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = moe_capacity(cfg, s)
+    gates, idx, probs = _route(cfg, p, x)  # [B,S,k], [B,S,E]
+
+    n = s * k
+    e_flat = idx.reshape(b, n)
+    g_flat = gates.reshape(b, n)
+    t_flat = jnp.broadcast_to(jnp.arange(n) // k, (b, n))
+    # position-within-expert by running count of prior same-expert assignments
+    oh = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)  # [B, N, E]
+    pos = jnp.cumsum(oh, axis=1) - 1
+    pos_flat = jnp.take_along_axis(pos, e_flat[..., None], axis=2)[..., 0]
+    keep = pos_flat < cap
+    pos_c = jnp.where(keep, pos_flat, 0)
+    e_c = jnp.where(keep, e_flat, 0)
+    bi = jnp.arange(b)[:, None]
+
+    rows_in = x[bi, t_flat] * keep[..., None].astype(x.dtype)  # [B, N, D]
+    buf = jnp.zeros((b, e, cap, d), x.dtype).at[bi, e_c, pos_c].add(rows_in)
+    po = perf.current()
+    if po.moe_hints:
+        buf = hint(buf, "batch", "model", None, None)
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if po.moe_weight_gather:
+        # Force the (small) FSDP-sharded expert weights to gather over the
+        # data axis at the use site instead of moving the (huge) dispatch
+        # buffers: EP on E when it divides the model axis, else TP on F.
+        w_gate2 = hint(w_gate, "model", None, None)
+        w_gate = w_gate2 if w_gate2 is not w_gate else hint(
+            w_gate, None, None, "model"
+        )
+        w_up2 = hint(w_up, "model", None, None)
+        w_up = w_up2 if w_up2 is not w_up else hint(w_up, None, None, "model")
+        w_down2 = hint(w_down, "model", None, None)
+        w_down = w_down2 if w_down2 is not w_down else hint(
+            w_down, None, "model", None
+        )
+
+    h = _act(cfg.act)(jnp.einsum("becd,edf->becf", buf, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", buf, w_up)
+    if po.moe_hints:
+        h = hint(h, "batch", "model", None, None)
+    out = jnp.einsum("becf,efd->becd", h, w_down)
+
+    rows_out = out[bi, e_c, pos_c] * (g_flat * keep).astype(out.dtype)[..., None]
+    y = jnp.zeros((b, s, d), x.dtype).at[bi, t_flat].add(
+        rows_out.astype(x.dtype)
+    )
+    return y, _aux_loss(cfg, idx, probs)
+
+
+def _dense_batched(cfg: ArchConfig, p: dict, x: jax.Array):
+    """Overflow-free branch: every expert computed densely, gate-weighted."""
+    b, s, d = x.shape
+    gates, idx, probs = _route(cfg, p, x)
+    comb = (
+        jnp.zeros((b, s, cfg.num_experts), jnp.float32)
+        .at[
+            jnp.arange(b)[:, None, None],
+            jnp.arange(s)[None, :, None],
+            idx,
+        ]
+        .set(gates)
+    )
+    h = _act(cfg.act)(jnp.einsum("bsd,edf->besf", x, p["w_gate"]))
+    h = h * jnp.einsum("bsd,edf->besf", x, p["w_up"])
+    out = jnp.einsum("besf,efd->besd", h, p["w_down"])
+    y = jnp.einsum("besd,bse->bsd", out.astype(jnp.float32), comb).astype(
+        x.dtype
+    )
+    return y, _aux_loss(cfg, idx, probs)
+
+
+def _gather_batched(cfg: ArchConfig, p: dict, x: jax.Array):
+    """Decode-oriented branch: gather only the *selected* experts' weights.
+
+    Capacity dispatch reads every expert's weights regardless of routing —
+    for decode (S=1) that is E/k× more weight traffic than needed (found via
+    the jamba long_500k dry-run breakdown: 62 of 80 GB/token were unselected
+    expert weights). Here the k chosen experts' weights are gathered per
+    token ([B,S,k,D,F] reads = k·D·F, not E·D·F) and applied directly.
+    Drop-free (≡ the dense policy semantically); intended for small B·S.
+    """
+    gates, idx, probs = _route(cfg, p, x)  # [B,S,k]
+    w_gate = p["w_gate"][idx]  # [B,S,k,D,F]
+    w_up = p["w_up"][idx]
+    w_down = p["w_down"][idx]  # [B,S,k,F,D]
+    h = _act(cfg.act)(jnp.einsum("bsd,bskdf->bskf", x, w_gate))
+    h = h * jnp.einsum("bsd,bskdf->bskf", x, w_up)
+    out = jnp.einsum("bskf,bskfd->bskd", h, w_down)
+    y = jnp.einsum(
+        "bskd,bsk->bsd", out.astype(jnp.float32), gates
+    ).astype(x.dtype)
+    return y, _aux_loss(cfg, idx, probs)
+
+
+_POLICIES = {
+    "drop": _dispatch_batched,
+    "dense": _dense_batched,
+    "gather": _gather_batched,
+}
+
+
+def moe_apply(
+    cfg: ArchConfig, p: dict, x: jax.Array, *, policy: str = "drop"
+) -> tuple[jax.Array, jax.Array]:
+    """x: [B,S,D] -> (y [B,S,D], aux scalar).
+
+    The policy is a semi-static branch (DESIGN.md §2): selecting one stages
+    only that dispatch strategy; production serves decode with "gather" and
+    trains with "drop" — switching = re-specialisation in the cold path.
+    """
+    x = hint(x, "batch", None, None)
+    y, aux = _POLICIES[policy](cfg, p, x)
+    return hint(y, "batch", None, None), aux

@@ -1,0 +1,239 @@
+"""Mamba-2 SSD (state-space duality) mixer: chunked scan + O(1)-state decode.
+
+Follows arXiv:2405.21060 §6 (the chunked/blocked SSD algorithm):
+  * within a chunk of length L: dense "attention-like" semiseparable matmul
+  * across chunks: recurrent state [B, H, P, N] carried by lax.scan
+
+Decode is a single recurrence step: h <- h·exp(dt·A) + dt·B⊗x ; y = C·h + D·x.
+The conv1d (k=4, depthwise, causal) keeps a rolling [B, k-1, chans] state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import hint
+
+from .layers import dense_init, dtype_of, rms_norm
+
+
+def ssm_init(cfg: ArchConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    d, din = cfg.d_model, cfg.ssm_d_inner
+    gn, h = cfg.ssm_groups * cfg.ssm_state, cfg.ssm_heads
+    return {
+        "wz": dense_init(ks[0], (d, din), dt),
+        "wx": dense_init(ks[1], (d, din), dt),
+        "wB": dense_init(ks[2], (d, gn), dt),
+        "wC": dense_init(ks[3], (d, gn), dt),
+        "wdt": dense_init(ks[4], (d, h), dt),
+        "conv": (jax.random.normal(ks[5], (cfg.conv_kernel, din + 2 * gn)) * 0.1
+                 ).astype(dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.zeros((din,), dt),
+        "out": dense_init(ks[6], (din, d), dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out)
+
+
+def _proj_inputs(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: [B,S,D] -> z, xBC(pre-conv), dt(raw)."""
+    z = hint(jnp.einsum("bsd,di->bsi", x, p["wz"]), "batch", None, "model")
+    xi = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    bi = jnp.einsum("bsd,dg->bsg", x, p["wB"])
+    ci = jnp.einsum("bsd,dg->bsg", x, p["wC"])
+    dt_raw = hint(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]), "batch", None, "model"
+    )
+    xbc = hint(jnp.concatenate([xi, bi, ci], axis=-1), "batch", None, None)
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg: ArchConfig, xbc: jax.Array):
+    din = cfg.ssm_d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    xi = xbc[..., :din]
+    bi = xbc[..., din : din + gn]
+    ci = xbc[..., din + gn :]
+    b, s = xbc.shape[:2]
+    xh = hint(
+        xi.reshape(b, s, cfg.ssm_heads, cfg.ssm_headdim),
+        "batch", None, "model", None,
+    )
+    bg = hint(
+        bi.reshape(b, s, cfg.ssm_groups, cfg.ssm_state),
+        "batch", None, None, None,
+    )
+    cg = hint(
+        ci.reshape(b, s, cfg.ssm_groups, cfg.ssm_state),
+        "batch", None, None, None,
+    )
+    return xh, bg, cg
+
+
+def _expand_groups(cfg: ArchConfig, t: jax.Array) -> jax.Array:
+    """[B,S,G,N] -> [B,S,H,N] by repeating groups over heads."""
+    reps = cfg.ssm_heads // cfg.ssm_groups
+    t = jnp.repeat(t, reps, axis=2)
+    if t.ndim == 4:
+        t = hint(t, "batch", None, "model", None)
+    return t
+
+
+def ssd_scan(
+    cfg: ArchConfig,
+    xh: jax.Array,  # [B,S,H,P]
+    bg: jax.Array,  # [B,S,H,N] (already group-expanded)
+    cg: jax.Array,  # [B,S,H,N]
+    dt: jax.Array,  # [B,S,H] (post-softplus)
+    A: jax.Array,  # [H] (negative)
+    h0: jax.Array | None = None,  # [B,H,P,N]
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    b, s, H, P = xh.shape
+    n = bg.shape[-1]
+    L = min(cfg.ssm_chunk, s)
+    s_orig = s
+    if s % L:
+        # pad to a chunk multiple with dt=0 positions: zero dt => decay 1 and
+        # zero input contribution, so the carried state is unaffected.
+        pad = L - s % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bg = jnp.pad(bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cg = jnp.pad(cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // L
+
+    def chunk(t, tail_shape):
+        return t.reshape((b, nc, L) + tail_shape)
+
+    xc = chunk(xh, (H, P)).astype(jnp.float32)
+    bc = chunk(bg, (H, n)).astype(jnp.float32)
+    cc = chunk(cg, (H, n)).astype(jnp.float32)
+    dtc = chunk(dt, (H,)).astype(jnp.float32)
+
+    da = dtc * A[None, None, None, :]  # [B,nc,L,H] log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative
+    total = cum[:, :, -1, :]  # [B,nc,H]
+
+    # intra-chunk: y[l] = sum_{l'<=l} C[l]·B[l'] exp(cum[l]-cum[l']) dt[l'] x[l']
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L',H]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bclhn,bcmhn->bclmh", cc, bc)  # [B,nc,L,L',H]
+    att = cb * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", att, xc)
+
+    # chunk-boundary states: S_c = sum_l exp(total - cum[l]) dt[l] B[l] x[l]
+    w_in = jnp.exp(total[:, :, None, :] - cum) * dtc  # [B,nc,L,H]
+    s_chunk = jnp.einsum("bclh,bclhn,bclhp->bchpn", w_in, bc, xc)
+
+    def body(h_prev, inp):
+        s_c, tot_c, cum_c, c_c = inp  # per-chunk slices (leading dim nc scanned)
+        # contribution of the incoming state to every position in this chunk
+        y_in = jnp.einsum("blhn,bhpn,blh->blhp", c_c, h_prev, jnp.exp(cum_c))
+        h_next = h_prev * jnp.exp(tot_c)[..., None, None] + s_c
+        return h_next, y_in
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(s_chunk, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+    )
+    h_final, y_inter = jax.lax.scan(body, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1).reshape(b, nc, L, H, P)
+    y = (y_intra + y_inter).reshape(b, s, H, P)[:, :s_orig]
+    return y.astype(xh.dtype), h_final
+
+
+def ssm_apply(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba2 mixer. x: [B,S,D] -> (y [B,S,D], h_final | cache)."""
+    z, xbc_pre, dt_raw = _proj_inputs(cfg, p, x)
+    xbc = _causal_conv(xbc_pre, p["conv"])
+    xh, bg, cg = _split_xbc(cfg, xbc)
+    bgh = _expand_groups(cfg, bg)
+    cgh = _expand_groups(cfg, cg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ssd_scan(cfg, xh, bgh, cgh, dt, A, h0)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    b, s = x.shape[:2]
+    y = y.reshape(b, s, cfg.ssm_d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out"])
+    if return_cache:
+        cache = {
+            "conv": xbc_pre[:, -(cfg.conv_kernel - 1) :, :],
+            "state": h_final,
+        }
+        return out, cache
+    return out, h_final
+
+
+# -------------------------------------------------------------------- decode
+def init_ssm_cache(cfg: ArchConfig, batch: int) -> dict:
+    dt = dtype_of(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.ssm_d_inner + 2 * gn), dt),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+    }
+
+
+def ssm_decode_step(
+    cfg: ArchConfig, p: dict, x: jax.Array, cache: dict
+) -> tuple[jax.Array, dict]:
+    """One token. x: [B,1,D] -> (y [B,1,D], new cache)."""
+    z, xbc, dt_raw = _proj_inputs(cfg, p, x)  # [B,1,*]
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv"])[:, None, :]
+    xbc1 = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+    xh, bg, cg = _split_xbc(cfg, xbc1)
+    bgh = _expand_groups(cfg, bg)[:, 0]  # [B,H,N]
+    cgh = _expand_groups(cfg, cg)[:, 0]
+    xh1 = xh[:, 0].astype(jnp.float32)  # [B,H,P]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])  # [B,H]
+    h = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, bgh.astype(jnp.float32), xh1
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", cgh.astype(jnp.float32), h)
+    y = y + xh1 * p["D"][None, :, None]
+    y = y.reshape(x.shape[0], 1, cfg.ssm_d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_scale"], cfg.norm_eps)
+    return (
+        jnp.einsum("bsi,id->bsd", y, p["out"]),
+        {"conv": new_conv, "state": h},
+    )

@@ -1,0 +1,52 @@
+"""Perf-iteration knobs (EXPERIMENTS.md §Perf), threaded via a context.
+
+The paper-faithful baseline is PerfOpts() defaults; each hillclimb change is
+one field. Model code reads the ambient opts so the experiment matrix stays
+out of the model signatures.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class PerfOpts:
+    # attention
+    impl: str = "naive"  # naive (paper-faithful S^2) | chunked (online softmax)
+    attn_block: int = 1024  # chunked KV block
+    seq_shard_fallback: bool = False  # shard q-seq over model when heads don't divide
+    probs_dtype: str | None = None  # cast softmax probs for the PV matmul
+    score_dtype: str | None = None  # keep attention scores sub-f32 (bf16)
+    # norms: keep the normalized product in the residual dtype so backward
+    # cotangents stay bf16 (f32 only for the per-token reduction)
+    norm_bf16: bool = False
+    # remat
+    remat_policy: str = "full"  # full | dots (checkpoint_dots)
+    # moe
+    moe_hints: bool = False  # explicit EP sharding constraints in dispatch
+    moe_weight_gather: bool = False  # force FSDP weight all-gather at use site
+
+
+_OPTS: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_perf_opts", default=PerfOpts()
+)
+
+
+def current() -> PerfOpts:
+    return _OPTS.get()
+
+
+@contextlib.contextmanager
+def use_perf_opts(opts: PerfOpts):
+    tok = _OPTS.set(opts)
+    try:
+        yield
+    finally:
+        _OPTS.reset(tok)
+
+
+def from_flags(**kw) -> PerfOpts:
+    return replace(PerfOpts(), **{k: v for k, v in kw.items() if v is not None})

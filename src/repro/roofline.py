@@ -1,0 +1,110 @@
+"""Roofline accounting from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI. All dry-run numbers are per-device (the partitioned HLO is
+the per-device program), so:
+
+  compute term    = flops_per_device / peak_flops
+  memory term     = bytes_per_device / hbm_bw
+  collective term = collective_bytes_per_device / link_bw
+"""
+
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result-shape tokens on the LHS of an HLO op line, e.g. "bf16[256,4096]{1,0}"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective op type (per-device program).
+
+    Convention (documented in EXPERIMENTS.md): we count the bytes of each
+    collective's *result* shape once — for all-reduce this equals the operand
+    size the spec asks for; for all-gather it upper-bounds the received bytes
+    (ring transfer ≈ (N-1)/N · result); `-start` ops are counted, `-done` ops
+    are not (avoids double counting async pairs).
+    """
+    out: dict[str, float] = {k: 0.0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        for op in COLLECTIVE_OPS:
+            # match " op(" or " op-start(" as the op of this instruction
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split("=", 1)[1]
+                # take only the result shape(s), before the op name
+                cut = lhs.find(op)
+                out[op] += _shape_bytes(lhs[:cut])
+                break
+    return {k: v for k, v in out.items()}
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Compute the three roofline terms (seconds) + usefulness ratio.
+
+    roofline_fraction = (fundamental floor) / (max of the three terms), where
+    the floor is the larger of the ideal compute time (MODEL_FLOPS only) and
+    the ideal memory time (params + KV/SSM cache moved exactly once per step)
+    — decode is memory-floor-bound by nature, training is compute-floor-bound.
+    """
+    f = rec["flops_per_device"]
+    b = rec["bytes_per_device"]
+    c = sum(rec["collective_bytes_per_device"].values())
+    chips = rec["chips"]
+    t_compute = f / PEAK_FLOPS
+    t_memory = b / HBM_BW
+    t_coll = c / LINK_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    hlo_total_flops = f * chips
+    useful = rec["model_flops"] / hlo_total_flops if hlo_total_flops else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    ideal_compute = rec["model_flops"] / chips / PEAK_FLOPS
+    min_bytes = rec.get("min_bytes_global", 0.0)  # params(+cache) once
+    ideal_memory = min_bytes / chips / HBM_BW
+    floor = max(ideal_compute, ideal_memory)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "ideal_compute_s": ideal_compute,
+        "ideal_memory_s": ideal_memory,
+        "roofline_fraction": (floor / bound) if bound else 0.0,
+    }

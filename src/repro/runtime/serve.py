@@ -1,0 +1,151 @@
+"""Serving engine: bucketed AOT dispatch built on semi-static conditions.
+
+The HFT analogy made literal (DESIGN.md §2): the *hot path* is the token loop
+— it must never trace, compile, hash a jit cache key, or branch on mode. The
+*cold path* is the scheduler: it buckets incoming requests (batch size,
+sampling mode), precompiles/selects the executable in a SpecTable, warms it,
+and only then admits the batch to the hot loop.
+
+``Engine.set_mode(...)`` is the paper's ``set_direction`` (with dummy-order
+warming); ``Engine.decode_loop`` is the patched-jmp hot path.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import ArchConfig
+from repro.core import SpecTable, bucket_multiple
+
+GREEDY, SAMPLE = 0, 1
+
+
+@dataclass
+class EngineConfig:
+    max_len: int = 512
+    batch_quantum: int = 4
+    max_batch: int = 64
+    temperature: float = 1.0
+    moe_policy: str = "drop"
+
+
+class Engine:
+    """Single-host reference engine (the multi-pod path reuses steps.py)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self._prefill = SpecTable("prefill")
+        self._decode = SpecTable("decode")
+        self._mode: tuple = (GREEDY,)
+        self._current: Callable | None = None  # the patched-jmp slot
+        self._current_key: tuple | None = None
+        self.stats = {"tokens": 0, "hot_calls": 0, "mode_switches": 0}
+
+    # ------------------------------------------------------------ cold path
+    def _build_decode(self, batch: int, mode: int) -> Callable:
+        cfg, ecfg = self.cfg, self.ecfg
+
+        def step(params, cache, inputs, pos, key):
+            logits, cache = models.decode_step(
+                cfg, params, cache, inputs, pos, moe_policy=ecfg.moe_policy
+            )
+            if mode == GREEDY:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                tok = jax.random.categorical(
+                    key, logits / ecfg.temperature, axis=-1
+                ).astype(jnp.int32)
+            return tok, cache
+
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(cfg, batch, ecfg.max_len)
+        )
+        if cfg.input_kind == "tokens":
+            tok_in = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        else:
+            tok_in = jax.ShapeDtypeStruct(
+                (batch, 1, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        p_shape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            p_shape,
+            c_shape,
+            tok_in,
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def set_mode(
+        self, *, batch: int, sampling: int = GREEDY, warm: bool = True
+    ) -> dict:
+        """Cold path: bucket, compile-or-fetch, rebind the slot, warm."""
+        t0 = time.perf_counter()
+        bucket = bucket_multiple(
+            batch, self.ecfg.batch_quantum, self.ecfg.max_batch
+        )
+        key = (bucket, sampling)
+        exe = self._decode.get_or_build(
+            key, lambda: self._build_decode(bucket, sampling)
+        )
+        self._current = exe  # <- the jmp patch
+        self._current_key = key
+        if warm:  # dummy-order warming (paper §4.3)
+            cache = models.init_cache(self.cfg, bucket, self.ecfg.max_len)
+            if self.cfg.input_kind == "tokens":
+                tok = jnp.zeros((bucket, 1), jnp.int32)
+            else:
+                tok = jnp.zeros(
+                    (bucket, 1, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
+                )
+            out = exe(
+                self.params, cache, tok, jnp.int32(0),
+                jnp.zeros((2,), jnp.uint32),
+            )
+            jax.block_until_ready(out)
+        self.stats["mode_switches"] += 1
+        return {
+            "bucket": bucket,
+            "key": key,
+            "switch_s": time.perf_counter() - t0,
+            "compiles": self._decode.stats.misses,
+        }
+
+    # ------------------------------------------------------------- hot path
+    def decode_loop(
+        self,
+        cache: Any,
+        first_token: jax.Array,
+        start_pos: int,
+        num_tokens: int,
+        rng: jax.Array | None = None,
+    ) -> tuple[np.ndarray, Any]:
+        """The latency-critical loop: direct executable calls only."""
+        exe = self._current
+        assert exe is not None, "set_mode() before decode_loop() (cold path)"
+        tok = first_token
+        key = rng if rng is not None else jnp.zeros((2,), jnp.uint32)
+        out = []
+        pos = start_pos
+        for _ in range(num_tokens):
+            tok2d = tok if self.cfg.input_kind == "tokens" else tok
+            tok, cache = exe(
+                self.params, cache, tok2d, jnp.int32(pos), key
+            )
+            out.append(tok)
+            tok = tok[:, None] if self.cfg.input_kind == "tokens" else tok
+            pos += 1
+            self.stats["hot_calls"] += 1
+        self.stats["tokens"] += num_tokens * int(out[0].shape[0])
+        return np.stack([np.asarray(t) for t in out], axis=1), cache

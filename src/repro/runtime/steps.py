@@ -1,0 +1,218 @@
+"""Step builders: train / prefill / decode, with sharding + donation plumbing.
+
+These produce (fn, in_shardings, out_shardings, donate) bundles ready for
+``jax.jit(...).lower(...).compile()`` — the AOT path every semi-static branch
+target goes through (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import models, perf
+from repro.configs import ArchConfig, ShapeSpec
+from repro.distributed import sharding as shd
+from repro.models.model import input_specs
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def state_shapes(cfg: ArchConfig, key=None) -> TrainState:
+    """Abstract TrainState via eval_shape (no allocation)."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    p_shape = jax.eval_shape(lambda: models.init_params(cfg, k))
+    o_shape = jax.eval_shape(lambda: adamw.init(p_shape))
+    return TrainState(params=p_shape, opt=o_shape)
+
+
+def make_train_fn(
+    cfg: ArchConfig,
+    opt_cfg: adamw.AdamWConfig | None = None,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+    remat: bool | None = None,
+    grad_compress: Callable | None = None,
+) -> Callable:
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(state: TrainState, batch: dict):
+        def lf(p):
+            return models.loss_fn(
+                cfg, p, batch, impl=impl, moe_policy=moe_policy
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state.params
+        )
+        if grad_compress is not None:
+            grads = grad_compress(grads)
+        new_p, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, state.opt, state.params
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return TrainState(params=new_p, opt=new_opt), metrics
+
+    return train_step
+
+
+def train_shardings(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec):
+    """(state_in, batch_in, state_out, metrics_out) NamedSharding trees."""
+    st = state_shapes(cfg)
+    p_spec = shd.param_pspec_tree(st.params, mesh)
+    mu_spec = shd.opt_pspec_tree(cfg, p_spec, st.params, mesh)
+    opt_spec = adamw.AdamWState(step=P(), mu=mu_spec, nu=mu_spec)
+    state_spec = TrainState(params=p_spec, opt=opt_spec)
+    batch = input_specs(cfg, "train", shape.global_batch, shape.seq_len)
+    batch_spec = {k: shd.data_pspec(v.shape, mesh) for k, v in batch.items()}
+    named = lambda t: shd.to_named(t, mesh)
+    return st, batch, named(state_spec), named(batch_spec)
+
+
+def lower_train(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+    donate: bool = True,
+    opts: perf.PerfOpts | None = None,
+):
+    fn = make_train_fn(cfg, impl=impl, moe_policy=moe_policy)
+    st, batch, state_shard, batch_shard = train_shardings(cfg, mesh, shape)
+    metrics_shard = None  # inferred (replicated scalars)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, metrics_shard),
+        donate_argnums=(0,) if donate else (),
+    )
+    with mesh, shd.use_shard_hints(mesh), perf.use_perf_opts(opts or perf.current()):
+        return jitted.lower(st, batch)
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int) -> list:
+    return jax.eval_shape(lambda: models.init_cache(cfg, batch, max_len))
+
+
+def make_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callable:
+    def serve_step(params, cache, inputs, pos):
+        logits, new_cache = models.decode_step(
+            cfg, params, cache, inputs, pos, moe_policy=moe_policy
+        )
+        return logits, new_cache
+
+    return serve_step
+
+
+def lower_decode(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    *,
+    moe_policy: str = "drop",
+    donate: bool = True,
+    impl: str = "naive",  # accepted for API uniformity; decode has one impl
+    opts: perf.PerfOpts | None = None,
+):
+    """decode shapes: one new token against a KV cache of seq_len."""
+    fn = make_decode_fn(cfg, moe_policy=moe_policy)
+    p_shape = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    c_shape = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    p_spec = shd.param_pspec_tree(p_shape, mesh)
+    c_spec = shd.cache_pspec_tree(cfg, c_shape, mesh)
+    ins = input_specs(cfg, "decode", shape.global_batch, shape.seq_len)
+    in_spec = shd.data_pspec(ins["inputs"].shape, mesh)
+    named = lambda t: shd.to_named(t, mesh)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(
+            named(p_spec),
+            named(c_spec),
+            named(in_spec),
+            shd.replicated(mesh),
+        ),
+        out_shardings=(None, named(c_spec)),
+        donate_argnums=(1,) if donate else (),
+    )
+    with mesh, shd.use_shard_hints(mesh), perf.use_perf_opts(opts or perf.current()):
+        return jitted.lower(p_shape, c_shape, ins["inputs"], ins["pos"])
+
+
+def make_prefill_fn(
+    cfg: ArchConfig, *, impl: str = "naive", moe_policy: str = "drop"
+) -> Callable:
+    def prefill_step(params, inputs):
+        return models.prefill(cfg, params, inputs, impl=impl, moe_policy=moe_policy)
+
+    return prefill_step
+
+
+def lower_prefill(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    *,
+    impl: str = "naive",
+    moe_policy: str = "drop",
+    opts: perf.PerfOpts | None = None,
+):
+    fn = make_prefill_fn(cfg, impl=impl, moe_policy=moe_policy)
+    p_shape = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_spec = shd.param_pspec_tree(p_shape, mesh)
+    ins = input_specs(cfg, "prefill", shape.global_batch, shape.seq_len)
+    in_spec = shd.data_pspec(ins["inputs"].shape, mesh)
+    # the emitted cache shards like a decode cache
+    c_shape = jax.eval_shape(
+        lambda p, i: fn(p, i)[1], p_shape, ins["inputs"]
+    )
+    c_spec = shd.cache_pspec_tree(cfg, c_shape, mesh)
+    named = lambda t: shd.to_named(t, mesh)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(named(p_spec), named(in_spec)),
+        out_shardings=(None, named(c_spec)),
+    )
+    with mesh, shd.use_shard_hints(mesh), perf.use_perf_opts(opts or perf.current()):
+        return jitted.lower(p_shape, ins["inputs"])
+
+
+def lower_for(cfg: ArchConfig, mesh: Mesh, shape: ShapeSpec, **kw):
+    if shape.kind == "train":
+        return lower_train(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return lower_prefill(cfg, mesh, shape, **kw)
+    if shape.kind == "decode":
+        return lower_decode(cfg, mesh, shape, **kw)
+    raise ValueError(shape.kind)
+
+
+def place_train_state(cfg: ArchConfig, state: TrainState, mesh: Mesh) -> TrainState:
+    """Elastic re-mesh: place a (host or otherwise-sharded) TrainState onto a
+    target mesh using the rule-derived shardings — the reshard step of
+    checkpoint-based elastic scaling (DESIGN.md §6). Works across mesh shapes
+    because checkpoints are stored unsharded per host."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    p_spec = shd.param_pspec_tree(shapes.params, mesh)
+    mu_spec = shd.opt_pspec_tree(cfg, p_spec, shapes.params, mesh)
+    opt_spec = adamw.AdamWState(step=P(), mu=mu_spec, nu=mu_spec)
+    shardings = shd.to_named(
+        TrainState(params=p_spec, opt=opt_spec), mesh
+    )
+    return jax.device_put(state, shardings)

@@ -1,0 +1,183 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (
+    KernelBranch,
+    decode_attention,
+    flash_attention,
+    flash_attention_branchy,
+)
+from repro.kernels.ref import attention_ref, decode_attention_ref
+
+
+def _qkv(key, b, h, kh, s, dh, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, dh)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kh, s, dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kh, s, dh)).astype(dtype)
+    return q, k, v
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,h,kh,s,dh",
+    [
+        (1, 2, 2, 128, 64),   # MHA
+        (2, 4, 2, 256, 64),   # GQA 2:1
+        (1, 8, 1, 128, 128),  # MQA
+    ],
+)
+def test_flash_shapes_dtypes(b, h, kh, s, dh, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, h, kh, s, dh, dtype)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), atol=TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize(
+    "mode",
+    [
+        dict(causal=True),
+        dict(causal=False),
+        dict(causal=True, window=64),
+        dict(causal=True, window=32),
+        dict(causal=True, softcap=30.0),
+        dict(causal=True, window=64, softcap=50.0),
+    ],
+)
+def test_flash_modes(mode):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 4, 2, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True, **mode)
+    ref = attention_ref(q, k, v, **mode)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64), (256, 256)])
+def test_flash_block_shapes(bq, bk):
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, 256, 64, jnp.float32)
+    out = flash_attention(
+        q, k, v, block_q=bq, block_k=bk, interpret=True, causal=True
+    )
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "flags_mode",
+    [
+        ((1, 0, 0), dict(causal=True)),
+        ((0, 0, 0), dict(causal=False)),
+        ((1, 64, 0), dict(causal=True, window=64)),
+        ((1, 0, 30), dict(causal=True, softcap=30.0)),
+    ],
+)
+def test_branchy_kernel_matches_specialised_semantics(flags_mode):
+    flags, mode = flags_mode
+    q, k, v = _qkv(jax.random.PRNGKey(3), 2, 4, 2, 256, 64, jnp.float32)
+    out = flash_attention_branchy(
+        q, k, v, jnp.array(flags, jnp.int32),
+        block_q=64, block_k=64, interpret=True,
+    )
+    ref = attention_ref(q, k, v, **mode)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("pos", [0, 1, 63, 64, 127, 255])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_positions(pos, dtype):
+    key = jax.random.PRNGKey(4)
+    b, h, kh, s, dh = 2, 4, 2, 256, 64
+    q = jax.random.normal(key, (b, h, dh)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kh, s, dh)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kh, s, dh)).astype(dtype)
+    out = decode_attention(q, k, v, jnp.int32(pos), block_k=64, interpret=True)
+    ref = decode_attention_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(
+        out.astype(np.float32), ref.astype(np.float32), atol=TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize(
+    "mode", [dict(window=64), dict(softcap=30.0), dict(window=32, softcap=50.0)]
+)
+def test_decode_modes(mode):
+    key = jax.random.PRNGKey(5)
+    b, h, kh, s, dh = 1, 8, 2, 256, 64
+    q = jax.random.normal(key, (b, h, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kh, s, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kh, s, dh))
+    pos = jnp.int32(200)
+    out = decode_attention(q, k, v, pos, block_k=64, interpret=True, **mode)
+    ref = decode_attention_ref(q, k, v, pos, **mode)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_kernel_branch_mode_switching():
+    """Kernel-level BranchChanger: gemma2-style local/global alternation."""
+    q, k, v = _qkv(jax.random.PRNGKey(6), 1, 4, 4, 128, 64, jnp.float32)
+    kb = KernelBranch("t", interpret=True)
+    kb.set_mode(causal=True, window=64)  # local layer
+    np.testing.assert_allclose(
+        kb(q, k, v), attention_ref(q, k, v, causal=True, window=64), atol=2e-5
+    )
+    kb.set_mode(causal=True)  # global layer
+    np.testing.assert_allclose(
+        kb(q, k, v), attention_ref(q, k, v, causal=True), atol=2e-5
+    )
+
+
+# ------------------------------------------------------------------ SSD kernel
+import dataclasses
+
+from repro.configs import get_config
+from repro.kernels import ssd_chunk
+from repro.models import ssm as ssm_mod
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("seq", [16, 32])
+def test_ssd_kernel_matches_scan_oracle(chunk, seq):
+    cfg = dataclasses.replace(get_config("mamba2-370m").smoke(),
+                              ssm_chunk=chunk)
+    key = jax.random.PRNGKey(chunk * 100 + seq)
+    B, H, P, N = 2, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    x = jax.random.normal(key, (B, seq, H, P))
+    bm = jax.random.normal(jax.random.fold_in(key, 1), (B, seq, H, N)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(key, 2), (B, seq, H, N)) * 0.5
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 3), (B, seq, H))
+    )
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (H,)) * 0.3)
+    y_ref, h_ref = ssm_mod.ssd_scan(cfg, x, bm, cm, dt, A)
+    y, h = ssd_chunk(x, bm, cm, dt, A, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-5)
+
+
+def test_ssd_kernel_bf16():
+    cfg = dataclasses.replace(get_config("mamba2-370m").smoke(), ssm_chunk=8)
+    key = jax.random.PRNGKey(9)
+    B, S, H, P, N = 1, 16, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    x = jax.random.normal(key, (B, S, H, P)).astype(jnp.bfloat16)
+    bm = (jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, N)) * 0.5
+          ).astype(jnp.bfloat16)
+    cm = (jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, N)) * 0.5
+          ).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 3), (B, S, H))
+    )
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (H,)) * 0.3)
+    y_ref, _ = ssm_mod.ssd_scan(cfg, x, bm, cm, dt, A)
+    y, _ = ssd_chunk(x, bm, cm, dt, A, chunk=8, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), atol=5e-2
+    )

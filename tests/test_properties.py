@@ -1,0 +1,146 @@
+"""Cross-cutting property tests (hypothesis) on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import models, perf
+from repro.configs import get_config
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "arch", ["olmo-1b", "gemma2-27b", "mamba2-370m", "jamba-1.5-large-398b"]
+)
+def test_causality(arch):
+    """Perturbing position j must not change any output at positions < j."""
+    cfg = get_config(arch).smoke()
+    params = models.init_params(cfg, KEY)
+    s, j = 24, 13
+    tok = jax.random.randint(KEY, (1, s), 0, cfg.vocab_size)
+    tok2 = tok.at[0, j].set((tok[0, j] + 7) % cfg.vocab_size)
+    l1, _ = models.forward(cfg, params, tok, remat=False)
+    l2, _ = models.forward(cfg, params, tok2, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :j]), np.asarray(l2[:, :j]), atol=1e-5,
+        err_msg=f"{arch}: future token leaked into the past",
+    )
+    assert float(jnp.max(jnp.abs(l1[:, j:] - l2[:, j:]))) > 1e-6
+
+
+def test_causality_chunked_impl():
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, KEY)
+    tok = jax.random.randint(KEY, (1, 24), 0, cfg.vocab_size)
+    tok2 = tok.at[0, 13].set((tok[0, 13] + 7) % cfg.vocab_size)
+    with perf.use_perf_opts(perf.PerfOpts(impl="chunked", attn_block=8)):
+        l1, _ = models.forward(cfg, params, tok, remat=False)
+        l2, _ = models.forward(cfg, params, tok2, remat=False)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :13]), np.asarray(l2[:, :13]), atol=1e-5
+    )
+
+
+def test_sliding_window_forgets():
+    """With window w, outputs at position p >= w+j must ignore position j."""
+    cfg = dataclasses.replace(
+        get_config("gemma2-27b").smoke(),
+        layer_pattern=("attn_local",),
+        num_layers=2,
+        sliding_window=8,
+    ).validate()
+    params = models.init_params(cfg, KEY)
+    s = 32
+    tok = jax.random.randint(KEY, (1, s), 0, cfg.vocab_size)
+    tok2 = tok.at[0, 2].set((tok[0, 2] + 3) % cfg.vocab_size)
+    l1, _ = models.forward(cfg, params, tok, remat=False)
+    l2, _ = models.forward(cfg, params, tok2, remat=False)
+    # position 2 leaves every window after 2 + 8 (+1 layer of propagation is
+    # impossible: the second layer's window also only sees the last 8)
+    horizon = 2 + 2 * 8
+    np.testing.assert_allclose(
+        np.asarray(l1[:, horizon:]), np.asarray(l2[:, horizon:]), atol=1e-5
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shift=st.integers(1, 512),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_relative_position_invariance(shift, seed):
+    """RoPE'd q·k depends only on relative distance, not absolute position."""
+    from repro.models.layers import apply_rope
+
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 4, 2, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 2, 32))
+    p0 = jnp.arange(4)[None, :]
+    p1 = p0 + shift
+    s0 = jnp.einsum(
+        "bqhd,bkhd->bhqk",
+        apply_rope(q, p0, 10000.0),
+        apply_rope(k, p0, 10000.0),
+    )
+    s1 = jnp.einsum(
+        "bqhd,bkhd->bhqk",
+        apply_rope(q, p1, 10000.0),
+        apply_rope(k, p1, 10000.0),
+    )
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(trips=st.integers(2, 12), seed=st.integers(0, 1000))
+def test_hlo_analyzer_arbitrary_scan_depth(trips, seed):
+    """Analyzer flops scale exactly with the scan trip count."""
+    from repro.hlo_analysis import analyze
+
+    def body(x, w):
+        return jnp.dot(x, w), None
+
+    def scanned(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((trips, 32, 32), jnp.float32)
+    a = analyze(jax.jit(scanned).lower(x, ws).compile().as_text())
+    assert a["flops"] == pytest.approx(trips * 2 * 32**3, rel=0.01)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_loss_ignores_padded_labels(seed):
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(seed))
+    tok = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 16), 0,
+                             cfg.vocab_size)
+    lab = tok.at[:, -4:].set(-1)
+    l1, m1 = models.loss_fn(cfg, params, {"inputs": tok, "labels": lab})
+    # changing tokens at padded positions' labels doesn't change the loss
+    lab2 = lab.at[:, -4:].set(-1)
+    l2, m2 = models.loss_fn(cfg, params, {"inputs": tok, "labels": lab2})
+    assert float(m1["ntok"]) == 2 * 12
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_decode_position_masking():
+    """Tokens beyond `pos` in the cache must not affect decode logits."""
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, KEY)
+    cache = models.init_cache(cfg, 1, 16)
+    # poison the tail of the cache with garbage
+    poisoned = jax.tree.map(
+        lambda t: t.at[..., 8:, :, :].set(99.0)
+        if t.ndim == 5 else t,
+        cache,
+    )
+    tok = jnp.zeros((1, 1), jnp.int32)
+    l1, _ = models.decode_step(cfg, params, cache, tok, jnp.int32(5))
+    l2, _ = models.decode_step(cfg, params, poisoned, tok, jnp.int32(5))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)

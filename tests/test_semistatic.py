@@ -1,0 +1,192 @@
+"""Unit + property tests for the paper's construct (BranchChanger et al.)."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BranchChanger,
+    BranchChangerError,
+    SpecTable,
+    bucket_multiple,
+    bucket_pow2,
+    reset_entry_points,
+    semi_static,
+    semi_static_switch,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    reset_entry_points()
+    yield
+    reset_entry_points()
+
+
+def test_two_way_directions():
+    bc = BranchChanger(lambda x: x + 1, lambda x: x - 1, name="t")
+    bc.compile(jax.ShapeDtypeStruct((4,), jnp.float32))
+    bc.set_direction(True)
+    assert float(bc.branch(jnp.zeros(4))[0]) == 1.0
+    bc.set_direction(False)
+    assert float(bc.branch(jnp.zeros(4))[0]) == -1.0
+
+
+def test_nary_switch():
+    fns = [lambda x, i=i: x * 0 + i for i in range(5)]
+    bc = BranchChanger(*fns, name="nary")
+    bc.compile(jax.ShapeDtypeStruct((2,), jnp.float32))
+    for i in [3, 0, 4, 2, 1]:
+        bc.set_direction(i)
+        assert float(bc.branch(jnp.zeros(2))[0]) == i
+
+
+def test_uncompiled_eager_mode():
+    bc = BranchChanger(lambda x: x * 2, lambda x: x * 3, name="eager")
+    bc.set_direction(False)
+    assert float(bc.branch(jnp.ones(()))) == 3.0
+
+
+def test_duplicate_entry_point_guard():
+    BranchChanger(lambda: 1, lambda: 2, name="dup")
+    with pytest.raises(BranchChangerError, match="entry point"):
+        BranchChanger(lambda: 1, lambda: 2, name="dup")
+
+
+def test_close_releases_entry_point():
+    bc = BranchChanger(lambda: 1, lambda: 2, name="dup2")
+    bc.close()
+    BranchChanger(lambda: 1, lambda: 2, name="dup2")  # no raise
+
+
+def test_incompatible_signatures_guard():
+    bc = BranchChanger(
+        lambda x: x, lambda x: jnp.zeros((7,), jnp.int32), name="sig"
+    )
+    with pytest.raises(BranchChangerError, match="calling convention"):
+        bc.compile(jax.ShapeDtypeStruct((4,), jnp.float32))
+
+
+def test_direction_out_of_range():
+    bc = BranchChanger(lambda: 1, lambda: 2, name="rng")
+    with pytest.raises(BranchChangerError, match="out of range"):
+        bc.set_direction(5)
+
+
+def test_warm_counts_and_works():
+    bc = BranchChanger(lambda x: x + 1, lambda x: x - 1, name="warm")
+    bc.compile(jax.ShapeDtypeStruct((4,), jnp.float32))
+    bc.set_direction(True, warm=True)
+    assert bc.stats.warms == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=1, max_size=30))
+def test_property_matches_lax_switch_oracle(directions):
+    """Any direction sequence: semi-static result == lax.switch oracle."""
+    reset_entry_points()
+    fns = [lambda x: x + 1.0, lambda x: x * 2.0, lambda x: x - 3.0]
+    bc = BranchChanger(*fns, name="prop")
+    bc.compile(jax.ShapeDtypeStruct((3,), jnp.float32))
+    x = jnp.arange(3.0)
+
+    @jax.jit
+    def oracle(i, x):
+        return jax.lax.switch(i, fns, x)
+
+    for d in directions:
+        bc.set_direction(d)
+        np.testing.assert_allclose(bc.branch(x), oracle(d, x), rtol=1e-6)
+
+
+def test_single_writer_thread_safety():
+    """Hot readers never observe a torn/invalid target while one writer flips."""
+    bc = BranchChanger(lambda x: x * 0 + 1, lambda x: x * 0 + 2, name="mt")
+    bc.compile(jax.ShapeDtypeStruct((2,), jnp.float32))
+    bc.set_direction(True)
+    stop = threading.Event()
+    bad = []
+
+    def writer():
+        d = True
+        while not stop.is_set():
+            d = not d
+            bc.set_direction(d)
+
+    def reader():
+        x = jnp.zeros(2)
+        while not stop.is_set():
+            v = float(bc.branch(x)[0])
+            if v not in (1.0, 2.0):
+                bad.append(v)
+
+    ts = [threading.Thread(target=writer)] + [
+        threading.Thread(target=reader) for _ in range(2)
+    ]
+    for t in ts:
+        t.start()
+    import time
+
+    time.sleep(0.5)
+    stop.set()
+    for t in ts:
+        t.join()
+    assert not bad
+
+
+def test_semi_static_stages_one_branch():
+    """Only the selected branch's ops appear in the jaxpr (vs lax.cond)."""
+
+    def heavy(x):
+        return x @ x.T
+
+    def light(x):
+        return x
+
+    def f_semi(x):
+        return semi_static(False, heavy, light, x)
+
+    def f_cond(x):
+        return jax.lax.cond(False, heavy, light, x)
+
+    x = jnp.ones((8, 8))
+    semi_text = str(jax.make_jaxpr(f_semi)(x))
+    cond_text = str(jax.make_jaxpr(f_cond)(x))
+    assert "dot_general" not in semi_text  # untaken branch costs nothing
+    assert "dot_general" in cond_text  # conditional stages both
+
+
+def test_semi_static_rejects_tracers():
+    with pytest.raises(BranchChangerError, match="host"):
+        jax.jit(
+            lambda p: semi_static(p, lambda: 1, lambda: 2)
+        )(jnp.array(True))
+
+
+def test_semi_static_switch_bounds():
+    with pytest.raises(BranchChangerError, match="out of range"):
+        semi_static_switch(3, [lambda: 1, lambda: 2])
+
+
+def test_spec_table():
+    t = SpecTable("t")
+    calls = []
+    exe = t.get_or_build("a", lambda: calls.append(1) or (lambda: 42))
+    assert t.get_or_build("a", lambda: calls.append(1) or (lambda: 0))() == 42
+    assert len(calls) == 1
+    assert t.stats.misses == 1 and t.stats.hits == 1
+    with pytest.raises(KeyError, match="precompile"):
+        t.get("missing")
+
+
+@given(st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_buckets(n):
+    b = bucket_pow2(n, 8, 1024)
+    assert b >= min(n, 1024) and b <= 1024 and (b & (b - 1)) == 0
+    m = bucket_multiple(n, 4, 1024)
+    assert m % 4 == 0 and m >= min(n, 4)

@@ -1,0 +1,72 @@
+"""Serving engine: bucketing, mode dispatch, hot-loop correctness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.serve import GREEDY, SAMPLE, Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def engine():
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, Engine(
+        cfg, params, EngineConfig(max_len=32, batch_quantum=2, max_batch=8)
+    )
+
+
+def test_set_mode_buckets_and_compiles(engine):
+    cfg, eng = engine
+    info = eng.set_mode(batch=3, sampling=GREEDY)
+    assert info["bucket"] == 4
+    assert (4, GREEDY) in eng._decode
+    # same bucket: cache hit, no new compile
+    before = eng._decode.stats.misses
+    eng.set_mode(batch=4, sampling=GREEDY)
+    assert eng._decode.stats.misses == before
+
+
+def test_decode_loop_produces_tokens(engine):
+    cfg, eng = engine
+    info = eng.set_mode(batch=2, sampling=GREEDY)
+    b = info["bucket"]
+    cache = models.init_cache(cfg, b, 32)
+    toks, _ = eng.decode_loop(cache, jnp.zeros((b, 1), jnp.int32), 0, 5)
+    assert toks.shape == (b, 5)
+    assert toks.dtype == np.int32
+    assert (toks >= 0).all() and (toks < cfg.vocab_size).all()
+
+
+def test_greedy_matches_direct_decode(engine):
+    """Engine hot path == calling models.decode_step + argmax directly."""
+    cfg, eng = engine
+    info = eng.set_mode(batch=2, sampling=GREEDY)
+    b = info["bucket"]
+    cache = models.init_cache(cfg, b, 32)
+    first = jnp.zeros((b, 1), jnp.int32)
+    toks, _ = eng.decode_loop(cache, first, 0, 4)
+
+    cache2 = models.init_cache(cfg, b, 32)
+    tok = first
+    want = []
+    for pos in range(4):
+        logits, cache2 = models.decode_step(
+            cfg, eng.params, cache2, tok, jnp.int32(pos)
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        want.append(np.asarray(tok[:, 0]))
+    np.testing.assert_array_equal(toks, np.stack(want, 1))
+
+
+def test_mode_switch_changes_sampling(engine):
+    cfg, eng = engine
+    eng.set_mode(batch=2, sampling=SAMPLE)
+    assert eng._current_key[1] == SAMPLE
+    eng.set_mode(batch=2, sampling=GREEDY)
+    assert eng._current_key[1] == GREEDY

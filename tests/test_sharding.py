@@ -1,0 +1,120 @@
+"""Sharding rules: every assigned arch resolves on the production meshes.
+
+Uses AbstractMesh (no devices needed) to validate the rule system: every
+param/cache spec must respect divisibility, use each mesh axis at most once
+per tensor, and give the big weights both a TP and an FSDP dim whenever the
+arch's dims divide.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro import models
+from repro.configs import ASSIGNED, get_config
+from repro.distributed import sharding as shd
+from repro.runtime import steps
+
+SINGLE = AbstractMesh((16, 16), ("data", "model"))
+MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axes_of(spec_entry):
+    if spec_entry is None:
+        return ()
+    if isinstance(spec_entry, str):
+        return (spec_entry,)
+    return tuple(spec_entry)
+
+
+def _check_tree(spec_tree, shape_tree, mesh):
+    leaves_spec = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+    leaves_shape = jax.tree.leaves(shape_tree)
+    assert len(leaves_spec) == len(leaves_shape)
+    for spec, leaf in zip(leaves_spec, leaves_shape):
+        used = []
+        for dim, entry in enumerate(spec):
+            axes = _axes_of(entry)
+            for a in axes:
+                assert a in mesh.axis_names, (spec, leaf.shape)
+                used.append(a)
+            if axes:
+                size = 1
+                for a in axes:
+                    size *= mesh.shape[a]
+                assert leaf.shape[dim] % size == 0, (
+                    spec, leaf.shape, dim, size,
+                )
+        assert len(used) == len(set(used)), f"axis reused: {spec}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+def test_param_specs_valid(arch, mesh):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    specs = shd.param_pspec_tree(shapes, mesh)
+    _check_tree(specs, shapes, mesh)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_cache_specs_valid(arch):
+    cfg = get_config(arch)
+    for batch, seq in ((128, 32768), (1, 524288)):
+        shapes = jax.eval_shape(
+            lambda: models.init_cache(cfg, batch, seq)
+        )
+        specs = shd.cache_pspec_tree(cfg, shapes, MULTI)
+        _check_tree(specs, shapes, MULTI)
+
+
+def test_big_weights_get_tp_and_fsdp():
+    cfg = get_config("deepseek-67b")
+    shapes = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    specs = shd.param_pspec_tree(shapes, SINGLE)
+    mlp = list(specs["blocks"][0]["mlp"]["w_gate"])  # [m, D, F]
+    assert "model" in mlp and "data" in mlp
+
+
+def test_qwen3_heads_fall_back_to_replicated():
+    """40 heads don't divide 16 -> attention weights keep FSDP only."""
+    cfg = get_config("qwen3-14b")
+    shapes = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    specs = shd.param_pspec_tree(shapes, SINGLE)
+    wq = specs["blocks"][0]["attn"]["wq"]  # [m, D, H=40, dh]
+    flat = list(wq)
+    assert "model" not in [a for a in flat if isinstance(a, str)]
+    assert "data" in [a for a in flat if isinstance(a, str)]
+
+
+def test_zero_over_pod_upgrades_moments():
+    cfg = get_config("grok-1-314b")  # zero_over_pod=True
+    shapes = jax.eval_shape(
+        lambda: models.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    p_spec = shd.param_pspec_tree(shapes, MULTI)
+    o_spec = shd.opt_pspec_tree(cfg, p_spec, shapes, MULTI)
+    flat = jax.tree.leaves(o_spec, is_leaf=lambda x: isinstance(x, P))
+    assert any(
+        any("pod" in _axes_of(e) for e in spec) for spec in flat
+    ), "no moment dim picked up the pod axis"
+
+
+def test_data_pspec_batch_fallbacks():
+    assert shd.data_pspec((256, 128), MULTI)[0] == ("pod", "data")
+    assert shd.data_pspec((16, 128), MULTI)[0] == "data"  # 16 % 32 != 0
+    assert shd.data_pspec((1, 128), MULTI)[0] is None
+
+
+def test_hint_noop_without_mesh_context():
+    x = jnp.ones((4, 4))
+    assert shd.hint(x, "batch", None) is x
