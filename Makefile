@@ -1,0 +1,28 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify tier1 smoke-serve bench-serving bench examples
+
+# The full gate: tier-1 tests + a CPU smoke of the serving stack.
+verify: tier1 smoke-serve
+
+# Tier-1 (ROADMAP.md): the repo's own test suite.
+tier1:
+	$(PY) -m pytest -x -q
+
+# CPU smoke: the traffic-driven serving loop, both engines, small stream.
+smoke-serve:
+	$(PY) -m repro.launch.serve --smoke --requests 12 --rate 200 \
+		--tokens-mean 5 --max-len 32 --engine both
+
+# Serving perf trajectory: writes BENCH_serving.json (per-burst vs
+# continuous-batching throughput/latency/cold-path counters).
+bench-serving:
+	$(PY) -m benchmarks.run --only serving --fast
+
+bench:
+	$(PY) -m benchmarks.run --fast
+
+examples:
+	$(PY) examples/serve_modes.py
+	$(PY) examples/failover_demo.py

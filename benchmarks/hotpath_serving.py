@@ -5,6 +5,12 @@ mode (greedy vs sampled) flips at random per request burst. Semi-static: the
 engine's mode was set in the cold path and the token loop calls the selected
 executable directly. Conditional: one jitted step that lax.cond's on a device
 flag every call. Distributions (M/SD/p99) mirror the paper's Fig 16.
+
+``serving_comparison`` extends this to the serving-runtime level (DESIGN.md
+§4/§7): one mixed greedy/sample Poisson stream driven through (a) the
+per-burst engine — recompile/rebind on mode flips — and (b) continuous
+batching — one executable per bucket, sampling params as data, zero hot-loop
+recompiles after warmup. The result feeds BENCH_serving.json.
 """
 
 from __future__ import annotations
@@ -80,3 +86,59 @@ def run(reps: int = 400) -> list[Dist]:
         measure("fig16/conditional-random-mode", conditional_burst, reps=reps,
                 warmup=20),
     ]
+
+
+def serving_comparison(
+    n_requests: int = 48,
+    rate_hz: float = 200.0,
+    *,
+    tokens_mean: float = 8.0,
+    max_len: int = 64,
+    slots: int = 8,
+    seed: int = 0,
+) -> dict:
+    """Per-burst-recompile vs continuous-batching over one mixed stream.
+
+    Both engines see the same Poisson arrivals (greedy/sample mixed 50/50).
+    The acceptance contract (ISSUE 1): the continuous report must show
+    ``compiles_after_warmup == 0`` while the burst report shows compiles and
+    rebinds tracking the mode flips.
+    """
+    from repro.runtime.scheduler import poisson_arrivals
+    from repro.runtime.serve import run_burst_stream, run_continuous_stream
+
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = EngineConfig(max_len=max_len, batch_quantum=2, max_batch=slots)
+
+    def traffic():
+        return poisson_arrivals(
+            n_requests,
+            rate_hz,
+            seed=seed,
+            tokens_mean=tokens_mean,
+            tokens_max=max_len,
+            sample_frac=0.5,
+            vocab=cfg.vocab_size,
+        )
+
+    eng_c = Engine(cfg, params, ecfg)
+    continuous = run_continuous_stream(eng_c, traffic(), slots=slots)
+    eng_c.close()
+    eng_b = Engine(cfg, params, ecfg)
+    burst = run_burst_stream(eng_b, traffic())
+    eng_b.close()
+    return {
+        "meta": {
+            "arch": cfg.name,
+            "n_requests": n_requests,
+            "rate_hz": rate_hz,
+            "tokens_mean": tokens_mean,
+            "max_len": max_len,
+            "slots": slots,
+            "seed": seed,
+        },
+        "continuous": continuous,
+        "burst": burst,
+    }

@@ -1,19 +1,45 @@
 """Benchmark harness: one module per paper table/figure (DESIGN.md §7).
 
-Prints ``name,us_per_call,derived`` CSV. Usage:
-    PYTHONPATH=src python -m benchmarks.run [--only fig14,fig22] [--fast]
+Prints ``name,us_per_call,derived`` CSV. The ``serving`` suite additionally
+writes ``BENCH_serving.json`` (per-burst vs continuous-batching numbers) so
+the serving perf trajectory is recorded across PRs. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig14,serving] [--fast]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _serving_suite(fast: bool, json_path: str) -> list[str]:
+    from . import hotpath_serving
+
+    res = hotpath_serving.serving_comparison(
+        n_requests=16 if fast else 48, slots=4 if fast else 8
+    )
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("continuous", "burst"):
+        r = res[kind]
+        rows.append(
+            f"serving/{kind}/tok_per_s,{r.get('tok_per_s', 0.0):.1f},"
+            f"p50_ms={r.get('p50_ms', 0.0):.1f};"
+            f"p99_ms={r.get('p99_ms', 0.0):.1f};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')};"
+            f"rebinds={r.get('rebinds')}"
+        )
+    rows.append(f"serving/json,0.0,written={json_path}")
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--serving-json", default="BENCH_serving.json")
     args = ap.parse_args()
 
     from . import (
@@ -39,6 +65,7 @@ def main() -> None:
         "kernel": lambda: kernel_specialization.run(5 if args.fast else 30),
         "collectives": lambda: collectives_bench.run(40 if args.fast else 200),
         "roofline": lambda: roofline_report.run(),
+        "serving": lambda: _serving_suite(args.fast, args.serving_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

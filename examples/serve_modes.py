@@ -1,32 +1,54 @@
-"""Serving with semi-static mode dispatch (paper §4.4 'hot-path optimisation').
+"""Serving with the scheduler API: arrivals in, tokens out (DESIGN.md §4).
 
-The scheduler (cold path) buckets requests and flips the engine's mode; the
-token loop (hot path) only ever makes direct executable calls.
+The old shape of this example drove the engine by hand — ``set_mode`` per
+burst (cold path), then a decode loop (hot path). The scheduler now owns
+that split: you submit arrival-stamped requests, continuous batching seats
+them in slots of one fixed-bucket executable, and greedy/sample is per-slot
+*data* — so the mixed stream below never recompiles or rebinds after the
+single warmup compile.
 
     PYTHONPATH=src python examples/serve_modes.py
 """
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import models
 from repro.configs import get_config
-from repro.runtime.serve import GREEDY, SAMPLE, Engine, EngineConfig
+from repro.runtime.scheduler import Request, poisson_arrivals
+from repro.runtime.serve import Engine, EngineConfig, run_continuous_stream
 
 cfg = get_config("olmo-1b").smoke()
 params = models.init_params(cfg, jax.random.PRNGKey(0))
 eng = Engine(cfg, params, EngineConfig(max_len=64, batch_quantum=2, max_batch=8))
 
-rng = np.random.default_rng(0)
-for burst in range(6):
-    batch = int(rng.integers(1, 8))
-    mode = GREEDY if rng.random() < 0.5 else SAMPLE
-    info = eng.set_mode(batch=batch, sampling=mode)          # cold path
-    cache = models.init_cache(cfg, info["bucket"], 64)
-    toks, _ = eng.decode_loop(cache, jnp.zeros((info["bucket"], 1), jnp.int32),
-                              0, 8)                          # hot path
-    print(f"burst {burst}: batch {batch} -> bucket {info['bucket']}, "
-          f"mode {'greedy' if mode == GREEDY else 'sample'}, "
-          f"switch {info['switch_s']*1e3:.1f} ms, tokens {toks.shape}")
-print("engine stats:", eng.stats)
+# A mixed open-loop stream: Poisson arrivals, geometric lengths, half the
+# requests greedy and half sampling at T=0.8 — the per-burst engine would pay
+# a mode flip (dispatch + possible compile) on nearly every burst of this.
+requests = poisson_arrivals(
+    12, rate_hz=150.0, seed=0, tokens_mean=6, tokens_max=32,
+    sample_frac=0.5, temperature=0.8, vocab=cfg.vocab_size,
+)
+# Requests can also be built by hand — arrivals in:
+requests.append(
+    Request(rid=len(requests), new_tokens=4, greedy=False,
+            temperature=1.2, first_token=7, arrival_s=0.05)
+)
+
+report = run_continuous_stream(eng, requests, slots=4)
+
+# ...tokens out:
+for r in sorted(requests, key=lambda r: r.rid):
+    mode = "greedy" if r.greedy else f"sample@T={r.temperature}"
+    print(f"req {r.rid:2d} [{mode:>13s}] arrived {r.arrival_s*1e3:6.1f}ms "
+          f"latency {r.latency_s*1e3:7.1f}ms tokens {r.tokens}")
+print(
+    f"\n{report['finished']} requests, {report['tokens']} tokens, "
+    f"p50 {report['p50_ms']:.1f}ms p99 {report['p99_ms']:.1f}ms, "
+    f"{report['tok_per_s']:.0f} tok/s"
+)
+print(
+    f"cold path: {report['compiles_total']} compile(s) total, "
+    f"{report['compiles_after_warmup']} after warmup, "
+    f"slot occupancy {report['occupancy']:.0%}"
+)
+assert report["compiles_after_warmup"] == 0, "hot loop must never recompile"

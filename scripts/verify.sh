@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify + CPU smoke of the serving stack (same as `make verify`,
+# for environments without make).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== serving smoke (CPU) =="
+python -m repro.launch.serve --smoke --requests 12 --rate 200 \
+  --tokens-mean 5 --max-len 32 --engine both

@@ -1,27 +1,54 @@
 """Core: semi-static conditions (the paper's contribution) for JAX.
 
-Three layers (DESIGN.md 2):
-  * host level   - BranchChanger: AOT executable table + direct-call hot path
-  * trace level  - semi_static / semi_static_switch: stage only the taken branch
-  * kernel level - Pallas specialisations (see repro.kernels)
+Four layers (DESIGN.md §2–§3):
+  * host level     - BranchChanger: fixed fan-out AOT table + direct-call hot path
+  * dispatch level - Dispatcher: open fan-out CompileCache + hot slot + policy
+  * trace level    - semi_static / semi_static_switch: stage only the taken branch
+  * kernel level   - Pallas specialisations (see repro.kernels)
 """
 
+from .dispatch import (
+    CacheStats,
+    CompileCache,
+    DispatchError,
+    DispatchPolicy,
+    DispatchStats,
+    Dispatcher,
+    live_dispatchers,
+    reset_dispatchers,
+)
 from .semistatic import (
     BranchChanger,
     BranchChangerError,
     live_entry_points,
-    reset_entry_points,
 )
-from .specialization import SpecTable, bucket_multiple, bucket_pow2
+from .semistatic import reset_entry_points as _reset_branch_changers
+from .specialization import SpecStats, SpecTable, bucket_multiple, bucket_pow2
 from .tracing import semi_static, semi_static_switch
+
+
+def reset_entry_points() -> None:
+    """Test hook: forget all live entry points (BranchChangers + Dispatchers)."""
+    _reset_branch_changers()
+    reset_dispatchers()
+
 
 __all__ = [
     "BranchChanger",
     "BranchChangerError",
+    "CacheStats",
+    "CompileCache",
+    "DispatchError",
+    "DispatchPolicy",
+    "DispatchStats",
+    "Dispatcher",
+    "SpecStats",
     "SpecTable",
     "bucket_multiple",
     "bucket_pow2",
+    "live_dispatchers",
     "live_entry_points",
+    "reset_dispatchers",
     "reset_entry_points",
     "semi_static",
     "semi_static_switch",

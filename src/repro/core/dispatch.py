@@ -1,0 +1,406 @@
+"""Unified dispatch core: the paper's construct as one layered mechanism.
+
+This module merges the two previously separate concerns (DESIGN.md §3):
+
+* ``core/semistatic.py``'s **hot slot** — a ``BranchChanger``-style single
+  mutable entry point, rebound on the cold path, called directly on the hot
+  path (the patched-``jmp`` analogue), and
+* ``core/specialization.py``'s **open fan-out table** — key -> AOT-compiled
+  executable, filled on first sight of a key.
+
+into a single ``Dispatcher``:
+
+    key --> CompileCache (bounded, evicting, single-flight builds)
+        --> DispatchPolicy (hysteresis: when is a rebind worth it?)
+        --> hot slot (direct call, no hashing, no conditionals)
+
+The ``DispatchPolicy`` makes the paper's Fig. 13 result a first-class knob:
+switching the branch direction is cheap but *not free*, so when the key
+oscillates rapidly (greedy/sample/greedy/sample...) the policy can refuse to
+thrash the slot and serve the minority key straight from the table — the
+table lookup costs one dict hit, while a rebind costs a slot write plus an
+optional warm call. Hysteresis = N means a key must be seen N times in a row
+before it captures the slot.
+
+The ``CompileCache`` closes the paper's §5.2 duplicate-entry-point hazard in
+table form: two cold-path threads racing to compile the same key would
+otherwise both pay the (seconds-long) XLA compile and one result would be
+silently dropped. Builds are single-flight — one leader compiles, followers
+block on an event and reuse the leader's executable.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Hashable
+
+
+class DispatchError(RuntimeError):
+    """Raised for dispatcher misuse that would be undefined behaviour."""
+
+
+# --------------------------------------------------------------------- cache
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    single_flight_waits: int = 0
+    compile_seconds: float = 0.0
+    keys: list = field(default_factory=list)
+
+
+class _Build:
+    """In-flight build record: followers wait on ``event``."""
+
+    __slots__ = ("event", "error")
+
+    def __init__(self) -> None:
+        self.event = threading.Event()
+        self.error: BaseException | None = None
+
+
+class CompileCache:
+    """Bounded key -> executable cache with single-flight cold-path builds.
+
+    * ``get`` is the warm path: one locked dict hit, never compiles.
+    * ``get_or_build`` is the cold path: on a miss, exactly one caller runs
+      ``builder()`` (the leader); concurrent callers for the same key block
+      until the leader finishes and then reuse its executable.
+    * ``capacity`` bounds the table; least-recently-used entries are evicted,
+      except keys pinned by a live hot slot (evicting the slot's executable
+      while the hot path holds it would be the table edition of the paper's
+      dangling-entry-point hazard).
+    """
+
+    def __init__(self, name: str = "cache", capacity: int | None = None):
+        if capacity is not None and capacity < 1:
+            raise DispatchError(f"capacity must be >= 1, got {capacity}")
+        self.name = name
+        self.capacity = capacity
+        self._table: OrderedDict[Hashable, Any] = OrderedDict()
+        self._building: dict[Hashable, _Build] = {}
+        self._pinned: set[Hashable] = set()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._table
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._table)
+
+    def keys(self) -> tuple:
+        with self._lock:
+            return tuple(self._table)
+
+    def pin(self, key: Hashable) -> None:
+        with self._lock:
+            self._pinned.add(key)
+
+    def unpin(self, key: Hashable) -> None:
+        with self._lock:
+            self._pinned.discard(key)
+
+    def get(self, key: Hashable) -> Any:
+        """Warm path: plain locked lookup, no compilation ever."""
+        with self._lock:
+            try:
+                exe = self._table[key]
+            except KeyError:
+                raise KeyError(
+                    f"CompileCache {self.name!r} has no executable for key "
+                    f"{key!r}; precompile it in the cold path with "
+                    f"get_or_build()."
+                ) from None
+            self._table.move_to_end(key)
+            self.stats.hits += 1
+            return exe
+
+    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
+        """Cold path: compile-and-insert on miss, single-flight per key."""
+        while True:
+            with self._lock:
+                if key in self._table:
+                    self._table.move_to_end(key)
+                    self.stats.hits += 1
+                    return self._table[key]
+                build = self._building.get(key)
+                if build is None:
+                    build = _Build()
+                    self._building[key] = build
+                    leader = True
+                else:
+                    leader = False
+                    self.stats.single_flight_waits += 1
+            if leader:
+                t0 = time.perf_counter()
+                try:
+                    exe = builder()
+                except BaseException as e:
+                    with self._lock:
+                        build.error = e
+                        del self._building[key]
+                    build.event.set()
+                    raise
+                with self._lock:
+                    self._table[key] = exe
+                    self._table.move_to_end(key)
+                    self.stats.misses += 1
+                    self.stats.keys.append(key)
+                    self.stats.compile_seconds += time.perf_counter() - t0
+                    self._evict_locked()
+                    del self._building[key]
+                build.event.set()
+                return exe
+            # Follower: wait for the leader, then retry the lookup (the entry
+            # may have been evicted or the leader may have failed; in either
+            # case loop and become the leader ourselves).
+            build.event.wait()
+
+    def _evict_locked(self) -> None:
+        if self.capacity is None:
+            return
+        for key in list(self._table):
+            if len(self._table) <= self.capacity:
+                break
+            if key in self._pinned:
+                continue
+            del self._table[key]
+            self.stats.evictions += 1
+
+
+# -------------------------------------------------------------------- policy
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """When does a key deserve the hot slot? (paper Fig. 13, as policy)
+
+    hysteresis   — a non-current key must be dispatched this many times in a
+                   row before the slot rebinds to it. 1 = classic
+                   ``BranchChanger`` behaviour (rebind immediately); higher
+                   values keep the slot stable under rapid oscillation, at
+                   the cost of serving the minority key from the table.
+    capacity     — bound on cached executables (None = unbounded). The
+                   current slot key is never evicted.
+    warm_on_rebind — run the dispatcher's warmer after every rebind (the
+                   paper's dummy-order BTB warming, §4.3).
+    """
+
+    hysteresis: int = 1
+    capacity: int | None = None
+    warm_on_rebind: bool = False
+
+    def __post_init__(self) -> None:
+        if self.hysteresis < 1:
+            raise DispatchError(
+                f"hysteresis must be >= 1, got {self.hysteresis}"
+            )
+
+
+class DispatchStats:
+    """Slot/table/build counters; cache counters are delegated."""
+
+    def __init__(self, cache: CompileCache):
+        self._cache = cache
+        self.slot_hits = 0  # dispatches served by the hot slot
+        self.table_dispatches = 0  # served from the table without rebinding
+        self.rebinds = 0
+        self.suppressed_rebinds = 0  # hysteresis said "not yet"
+        self.warms = 0
+        self.last_rebind_seconds = 0.0
+
+    @property
+    def hits(self) -> int:
+        return self.slot_hits + self._cache.stats.hits
+
+    @property
+    def misses(self) -> int:
+        """Builds (compiles). The serving acceptance metric: after warmup a
+        continuous-batching stream must not move this counter."""
+        return self._cache.stats.misses
+
+    @property
+    def evictions(self) -> int:
+        return self._cache.stats.evictions
+
+    @property
+    def compile_seconds(self) -> float:
+        return self._cache.stats.compile_seconds
+
+    def snapshot(self) -> dict:
+        return {
+            "slot_hits": self.slot_hits,
+            "table_dispatches": self.table_dispatches,
+            "rebinds": self.rebinds,
+            "suppressed_rebinds": self.suppressed_rebinds,
+            "builds": self.misses,
+            "evictions": self.evictions,
+            "warms": self.warms,
+        }
+
+
+# ---------------------------------------------------------------- dispatcher
+# One live Dispatcher per entry-point name (paper §5.2: multiple instances
+# sharing an entry point silently fight over it -> undefined behaviour).
+_DISPATCHERS: dict[str, "Dispatcher"] = {}
+_REGISTRY_LOCK = threading.Lock()
+
+
+class Dispatcher:
+    """Open-fan-out semi-static condition with a single hot slot.
+
+    ``builder(key)`` produces the executable for a key (typically
+    ``jit(...).lower(...).compile()``); it runs on the cold path only, at
+    most once per key (single-flight). ``dispatch(key)`` returns the
+    executable for a key and manages the hot slot per the policy.
+    ``hot(*args)`` calls the slot directly — the patched-``jmp`` hot path.
+
+    The slot rebind is a single reference assignment (the Python analogue of
+    the paper's 4-byte ``memcpy``): atomic w.r.t. concurrent hot-path
+    readers, single-writer safe without locks.
+    """
+
+    def __init__(
+        self,
+        builder: Callable[[Hashable], Any],
+        *,
+        name: str | None = None,
+        policy: DispatchPolicy | None = None,
+        warmer: Callable[[Hashable, Any], Any] | None = None,
+    ):
+        self._builder = builder
+        self.policy = policy or DispatchPolicy()
+        self._warmer = warmer
+        self._name = name or f"dispatch@{id(self):x}"
+        self.cache = CompileCache(
+            name=self._name, capacity=self.policy.capacity
+        )
+        self._current: Callable | None = None  # the hot slot
+        self._current_key: Hashable | None = None
+        self._candidate: Hashable | None = None
+        self._streak = 0
+        self.stats = DispatchStats(self.cache)
+        with _REGISTRY_LOCK:
+            if self._name in _DISPATCHERS:
+                raise DispatchError(
+                    f"More than one Dispatcher for entry point "
+                    f"{self._name!r}; multiple instances sharing an entry "
+                    f"point is undefined behaviour (paper §5.2). Pass a "
+                    f"unique name=..., or close() the old one."
+                )
+            _DISPATCHERS[self._name] = self
+
+    # ------------------------------------------------------------ properties
+    @property
+    def name(self) -> str:
+        return self._name
+
+    @property
+    def current_key(self) -> Hashable | None:
+        return self._current_key
+
+    @property
+    def current(self) -> Callable | None:
+        return self._current
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self.cache
+
+    def __len__(self) -> int:
+        return len(self.cache)
+
+    # ------------------------------------------------------------- cold path
+    def build(self, key: Hashable) -> Any:
+        """Compile (or fetch) a key without touching the slot or the policy
+        streak — pure precompilation (the AOT warm-everything pattern)."""
+        return self.cache.get_or_build(key, lambda: self._builder(key))
+
+    def dispatch(self, key: Hashable, *, warm: bool | None = None) -> Any:
+        """Return the executable for ``key``; maybe rebind the hot slot.
+
+        Fast case: ``key`` already owns the slot — one equality check, no
+        dict, no lock. Otherwise the executable is fetched/built from the
+        cache and the hysteresis policy decides whether the slot moves.
+        """
+        if key == self._current_key and self._current is not None:
+            self.stats.slot_hits += 1
+            # A sighting of the slot's own key breaks any rival streak:
+            # hysteresis counts *consecutive* dispatches of a challenger.
+            self._candidate = key
+            return self._current
+        exe = self.build(key)
+        if key == self._candidate:
+            self._streak += 1
+        else:
+            self._candidate = key
+            self._streak = 1
+        if self._streak >= self.policy.hysteresis:
+            self._rebind(key, exe, warm=warm)
+        else:
+            self.stats.suppressed_rebinds += 1
+            self.stats.table_dispatches += 1
+        return exe
+
+    def set_direction(self, key: Hashable, *, warm: bool = False) -> Any:
+        """Forced rebind, bypassing hysteresis — the ``BranchChanger``
+        ``set_direction`` analogue for open fan-out."""
+        exe = self.build(key)
+        self._rebind(key, exe, warm=warm)
+        return exe
+
+    def _rebind(self, key: Hashable, exe: Callable, *, warm: bool | None) -> None:
+        t0 = time.perf_counter()
+        old = self._current_key
+        self.cache.pin(key)
+        self._current = exe  # <- the "jmp patch"
+        self._current_key = key
+        if old is not None and old != key:
+            self.cache.unpin(old)
+        self._candidate = key
+        self._streak = self.policy.hysteresis  # saturate
+        self.stats.rebinds += 1
+        do_warm = self.policy.warm_on_rebind if warm is None else warm
+        if do_warm and self._warmer is not None:
+            self._warmer(key, exe)
+            self.stats.warms += 1
+        self.stats.last_rebind_seconds = time.perf_counter() - t0
+
+    # -------------------------------------------------------------- hot path
+    def hot(self, *args: Any) -> Any:
+        """Direct call through the slot. No conditionals, no dict, no hash."""
+        exe = self._current
+        if exe is None:
+            raise DispatchError(
+                f"Dispatcher {self._name!r} has an empty hot slot; "
+                f"dispatch()/set_direction() a key on the cold path first."
+            )
+        return exe(*args)
+
+    __call__ = hot
+
+    # ----------------------------------------------------------------- admin
+    def close(self) -> None:
+        with _REGISTRY_LOCK:
+            _DISPATCHERS.pop(self._name, None)
+
+    def __enter__(self) -> "Dispatcher":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+
+def reset_dispatchers() -> None:
+    """Test hook: forget all live dispatcher entry points."""
+    with _REGISTRY_LOCK:
+        _DISPATCHERS.clear()
+
+
+def live_dispatchers() -> tuple[str, ...]:
+    with _REGISTRY_LOCK:
+        return tuple(_DISPATCHERS)

@@ -124,10 +124,11 @@ class BranchChanger:
             lowered = jax.jit(fn, **self._jit_kwargs).lower(
                 *_tree_avals(example_args), **lower_kwargs
             )
-            exe = lowered.compile()
+            # out_info lives on the Lowered object in jax 0.4.x
             shapes = jax.tree.map(
-                lambda x: (tuple(x.shape), str(x.dtype)), exe.out_info
+                lambda x: (tuple(x.shape), str(x.dtype)), lowered.out_info
             )
+            exe = lowered.compile()
             if out_avals is None:
                 out_avals = shapes
             elif shapes != out_avals:

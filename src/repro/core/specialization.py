@@ -5,66 +5,38 @@ dispatch (serving buckets, elastic mesh shapes) needs an *open* fan-out: a table
 from specialisation key -> compiled executable, filled in the cold path, read
 with a plain dict hit on the warm path. The serving engine and the failover
 manager are built on this.
+
+``SpecTable`` is now a thin shim over ``core.dispatch.CompileCache`` (DESIGN.md
+§3): builds are single-flight — two cold-path threads racing on the same key
+compile once, not twice (the paper's §5.2 duplicate-entry-point hazard, table
+edition) — and the table can optionally be bounded/evicting. The historical
+interface (``get``/``get_or_build``/``prewarm``/``stats``) is preserved; new
+code should prefer ``core.dispatch.Dispatcher``, which adds the hot slot and
+the rebind policy on top.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, Hashable
 
 import jax
 
+from .dispatch import CacheStats, CompileCache
 
-@dataclass
-class SpecStats:
-    hits: int = 0
-    misses: int = 0
-    compile_seconds: float = 0.0
-    keys: list = field(default_factory=list)
+# Backwards-compatible alias: SpecTable.stats used to be a SpecStats.
+SpecStats = CacheStats
 
 
-class SpecTable:
-    """key -> AOT-compiled executable, with cold-path fill and stats."""
+class SpecTable(CompileCache):
+    """key -> AOT-compiled executable, with single-flight cold-path fill."""
 
-    def __init__(self, name: str = "spec"):
-        self.name = name
-        self._table: dict[Hashable, Any] = {}
-        self.stats = SpecStats()
-
-    def __contains__(self, key: Hashable) -> bool:
-        return key in self._table
-
-    def __len__(self) -> int:
-        return len(self._table)
-
-    def get(self, key: Hashable) -> Any:
-        """Hot-ish path: plain dict lookup, no compilation ever."""
-        try:
-            exe = self._table[key]
-        except KeyError:
-            raise KeyError(
-                f"SpecTable {self.name!r} has no executable for key {key!r}; "
-                f"precompile it in the cold path with get_or_build()."
-            ) from None
-        self.stats.hits += 1
-        return exe
-
-    def get_or_build(self, key: Hashable, builder: Callable[[], Any]) -> Any:
-        """Cold path: compile-and-insert on miss."""
-        if key in self._table:
-            self.stats.hits += 1
-            return self._table[key]
-        t0 = time.perf_counter()
-        exe = builder()
-        self.stats.compile_seconds += time.perf_counter() - t0
-        self.stats.misses += 1
-        self.stats.keys.append(key)
-        self._table[key] = exe
-        return exe
+    def __init__(self, name: str = "spec", capacity: int | None = None):
+        super().__init__(name=name, capacity=capacity)
 
     def prewarm(self, key: Hashable, args: tuple) -> None:
-        out = self._table[key](*args)
+        """Run an already-built entry on dummy inputs and block (BTB-warming
+        analogue); raises KeyError if the key was never built."""
+        out = self.get(key)(*args)
         jax.block_until_ready(out)
 
 

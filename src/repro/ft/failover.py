@@ -1,10 +1,12 @@
 """Fault tolerance: heartbeats, straggler watchdog, and semi-static failover.
 
 The paper's construct as a *reliability* mechanism (DESIGN.md §6): the
-degraded-mesh train step is pre-compiled as the *else branch* of a
-``BranchChanger``. Failure detection runs in the cold path (between steps);
-flipping the direction is one slot rebind + an optional warm — the hot loop
-(``plan.step(...)``) never evaluates a health conditional.
+degraded-mesh train step sits behind the same unified dispatch core the
+serving engine uses (``core.dispatch.Dispatcher``) — health states are
+dispatch keys, step callables are the cached branch targets. Failure
+detection runs in the cold path (between steps); failing over is one forced
+slot rebind (``set_direction``) — the hot loop (``plan.step(...)``) never
+evaluates a health conditional.
 """
 
 from __future__ import annotations
@@ -13,9 +15,9 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
-from repro.core import BranchChanger
+from repro.core import DispatchPolicy, Dispatcher
 
-HEALTHY, DEGRADED = True, False  # BranchChanger direction semantics
+HEALTHY, DEGRADED = True, False  # dispatch-key semantics (paper's if/else)
 
 
 class HeartbeatMonitor:
@@ -80,22 +82,27 @@ class FailoverPlan:
     on_failover: list = field(default_factory=list)
 
     def __post_init__(self) -> None:
-        self._bc = BranchChanger(
-            self.healthy_fn, self.degraded_fn, name=self.name
+        # Health states as dispatch keys on the unified core. Hysteresis is 1:
+        # a failover must take effect on the very next step, never be
+        # suppressed as "oscillation".
+        self._dsp = Dispatcher(
+            lambda healthy: self.healthy_fn if healthy else self.degraded_fn,
+            name=self.name,
+            policy=DispatchPolicy(hysteresis=1),
         )
-        self._bc.set_direction(HEALTHY)
+        self._dsp.set_direction(HEALTHY)
         self.failovers = 0
 
     @property
     def degraded(self) -> bool:
-        return self._bc.direction == 1
+        return self._dsp.current_key == DEGRADED
 
     def check(self, monitor: HeartbeatMonitor, state: Any) -> Any:
         """Cold path: called between steps. Returns (possibly resharded) state."""
         if not self.degraded and not monitor.healthy():
             if self.reshard_fn is not None:
                 state = self.reshard_fn(state)
-            self._bc.set_direction(DEGRADED)
+            self._dsp.set_direction(DEGRADED)  # forced rebind, no hysteresis
             self.failovers += 1
             for cb in self.on_failover:
                 cb(monitor.failed())
@@ -103,7 +110,7 @@ class FailoverPlan:
 
     def step(self, *args: Any) -> Any:
         """Hot path: direct call of the current executable."""
-        return self._bc.branch(*args)
+        return self._dsp.hot(*args)
 
     def close(self) -> None:
-        self._bc.close()
+        self._dsp.close()

@@ -1,62 +1,136 @@
-"""Serving driver: semi-static engine over a reduced model.
+"""Serving driver: traffic-driven server loop over the semi-static engine.
+
+Synthesises an open-loop Poisson request stream (mixed greedy/sample, random
+lengths) and drives it through the serving runtime, reporting per-request
+latency percentiles, throughput, and cold-path activity (compiles, rebinds).
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --requests 8 --tokens 16
+      --requests 24 --rate 100 --tokens-mean 8 --engine both
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import models
 from repro.configs import get_config
-from repro.runtime.serve import GREEDY, SAMPLE, Engine, EngineConfig
+from repro.runtime.scheduler import poisson_arrivals
+from repro.runtime.serve import (
+    Engine,
+    EngineConfig,
+    run_burst_stream,
+    run_continuous_stream,
+)
 
 
-def main() -> None:
+def _print_report(rep: dict) -> None:
+    head = (
+        f"[serve/{rep['engine']}] {rep.get('finished', 0)} requests, "
+        f"{rep.get('tokens', 0)} tokens"
+    )
+    if "p50_ms" in rep:
+        head += (
+            f" | latency p50 {rep['p50_ms']:.1f}ms p95 {rep['p95_ms']:.1f}ms "
+            f"p99 {rep['p99_ms']:.1f}ms | {rep['tok_per_s']:.0f} tok/s"
+        )
+    print(head, flush=True)
+    cold = {
+        k: rep[k]
+        for k in (
+            "compiles_total",
+            "compiles_after_warmup",
+            "rebinds",
+            "mode_switches",
+            "slots",
+            "steps",
+            "occupancy",
+        )
+        if k in rep
+    }
+    print(f"[serve/{rep['engine']}] cold path: {cold}", flush=True)
+
+
+def main(argv: list[str] | None = None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--tokens-mean", type=float, default=8.0,
+                    help="mean decode length (geometric)")
+    ap.add_argument("--sample-frac", type=float, default=0.5,
+                    help="fraction of requests that sample (vs greedy)")
     ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
+    ap.add_argument("--slots", type=int, default=0,
+                    help="continuous-batching slots (0 = engine max_batch)")
+    ap.add_argument("--engine", choices=("continuous", "burst", "both"),
+                    default="both")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true",
+                    help="emit the reports as one JSON object on stdout")
+    args = ap.parse_args(argv)
+    if args.rate <= 0:
+        ap.error(f"--rate must be > 0 requests/s, got {args.rate}")
+    if args.requests < 1:
+        ap.error(f"--requests must be >= 1, got {args.requests}")
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     if cfg.input_kind != "tokens":
         raise SystemExit(
-            f"{cfg.name} has a stub modality frontend; serve demo needs a "
-            f"token-input arch (e.g. olmo-1b)."
+            f"{cfg.name} has a stub modality frontend; the serving loop "
+            f"feeds sampled ids back and needs a token-input arch "
+            f"(e.g. olmo-1b)."
         )
     params = models.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, EngineConfig(max_len=args.max_len))
+    ecfg = EngineConfig(max_len=args.max_len, batch_quantum=2, max_batch=8)
 
-    rng = np.random.default_rng(0)
-    for burst in range(args.requests):
-        batch = int(rng.integers(1, 8))
-        sampling = GREEDY if rng.random() < 0.5 else SAMPLE
-        info = eng.set_mode(batch=batch, sampling=sampling)  # cold path
-        cache = models.init_cache(cfg, info["bucket"], args.max_len)
-        first = jnp.zeros((info["bucket"], 1), jnp.int32)
-        t0 = time.perf_counter()
-        toks, cache = eng.decode_loop(cache, first, 0, args.tokens)  # hot path
-        dt = time.perf_counter() - t0
-        print(
-            f"[serve] burst {burst}: batch={batch}->bucket {info['bucket']} "
-            f"mode={'greedy' if sampling == GREEDY else 'sample'} "
-            f"switch={info['switch_s']*1e3:.1f}ms "
-            f"{args.tokens} toks in {dt*1e3:.1f}ms "
-            f"({info['bucket']*args.tokens/dt:.0f} tok/s)",
-            flush=True,
+    def traffic(seed: int):
+        return poisson_arrivals(
+            args.requests,
+            args.rate,
+            seed=seed,
+            tokens_mean=args.tokens_mean,
+            tokens_max=args.max_len,
+            sample_frac=args.sample_frac,
+            vocab=cfg.vocab_size,
         )
-    print(f"[serve] stats: {eng.stats}")
+
+    reports = {}
+    if args.engine in ("continuous", "both"):
+        eng = Engine(cfg, params, ecfg)
+        reports["continuous"] = run_continuous_stream(
+            eng, traffic(args.seed), slots=args.slots or None
+        )
+        eng.close()
+    if args.engine in ("burst", "both"):
+        eng = Engine(cfg, params, ecfg)
+        reports["burst"] = run_burst_stream(eng, traffic(args.seed))
+        eng.close()
+
+    if args.json:
+        print(json.dumps(reports, indent=2))
+    else:
+        for rep in reports.values():
+            _print_report(rep)
+        if len(reports) == 2 and all(
+            "tok_per_s" in r for r in reports.values()
+        ):
+            c, b = reports["continuous"], reports["burst"]
+            print(
+                f"[serve] continuous vs burst: "
+                f"{c['tok_per_s']:.0f} vs {b['tok_per_s']:.0f} tok/s, "
+                f"p99 {c['p99_ms']:.1f} vs {b['p99_ms']:.1f} ms, "
+                f"compiles after warmup {c['compiles_after_warmup']} vs "
+                f"{b['compiles_after_warmup']}",
+                flush=True,
+            )
+    return reports
 
 
 if __name__ == "__main__":

@@ -238,26 +238,46 @@ def decode_attention(
     *,
     local: bool,
 ) -> tuple[jax.Array, dict]:
-    """One-token decode. x: [B,1,D]; cache k/v: [B,Smax,KH,dh]; pos: scalar.
+    """One-token decode. x: [B,1,D]; cache k/v: [B,Smax,KH,dh].
+
+    ``pos`` is either a scalar (the whole batch sits at one position — the
+    classic bucketed-burst engine) or a vector ``[B]`` of per-row positions
+    (continuous batching, DESIGN.md §4: slots join and leave mid-loop, each
+    at its own depth). The per-row form writes the new K/V with a one-hot
+    scatter and masks attention per row, so a slot that just joined at
+    position 0 never sees the previous occupant's stale cache rows.
 
     No head hints here: the cache's seq dim owns the model axis (flash-decode
     style distributed softmax via partial-reduce + all-reduce).
     """
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q, k, v = _qkv(cfg, p, x, positions)
     q = hint(q, "batch", None, None, None)
-    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    ki = jnp.arange(cache["k"].shape[1])
+    if per_row:
+        sel = (ki[None, :] == pos[:, None])[:, :, None, None]  # [B,S,1,1]
+        ck = jnp.where(sel, k, cache["k"])
+        cv = jnp.where(sel, v, cache["v"])
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
     qg = _group(cfg, q)  # [B,1,KH,G,dh]
     scale = 1.0 / np.sqrt(cfg.head_dim)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32) * scale
     scores = softcap(scores, cfg.attn_logit_softcap)
-    ki = jnp.arange(ck.shape[1])
-    ok = ki <= pos
-    if local and cfg.sliding_window is not None:
-        ok &= ki > pos - cfg.sliding_window
-    scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
+    if per_row:
+        ok = ki[None, :] <= pos[:, None]  # [B,S]
+        if local and cfg.sliding_window is not None:
+            ok &= ki[None, :] > pos[:, None] - cfg.sliding_window
+        scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    else:
+        ok = ki <= pos
+        if local and cfg.sliding_window is not None:
+            ok &= ki > pos - cfg.sliding_window
+        scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     og = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv)
     o = og.reshape(b, 1, cfg.num_heads, cfg.head_dim)

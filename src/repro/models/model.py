@@ -186,8 +186,10 @@ def decode_step(
 ) -> tuple[jax.Array, list]:
     """One token for the whole stack.
 
-    inputs: [B,1] tokens or [B,1,D] embeddings; pos: scalar int32 (current
-    write index into the KV cache). Returns (logits [B,V], new cache).
+    inputs: [B,1] tokens or [B,1,D] embeddings; pos: scalar int32 (shared
+    write index into the KV cache) or [B] int32 (per-row positions for
+    continuous batching — see ``attention.decode_attention`` and DESIGN.md
+    §4). Returns (logits [B,V], new cache).
     """
     x = embed_apply(cfg, params["embed"], inputs)
 

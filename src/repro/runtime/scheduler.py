@@ -1,0 +1,355 @@
+"""Request scheduler + continuous batching for the serving runtime.
+
+This is the admission layer the paper's cold/hot split demands at serving
+scale (DESIGN.md §4). The semi-static hot loop must run uninterrupted; this
+module owns everything that happens *around* it:
+
+* ``Request`` / ``RequestQueue`` — arrival-stamped requests with a
+  Poisson-friendly API (``poisson_arrivals`` synthesises open-loop traffic,
+  ``pop_due`` admits whatever has arrived by the scheduler's clock).
+* ``form_bursts`` — the per-burst baseline's batch former: group by sampling
+  mode, chunk, bucket. Each burst costs a ``set_mode`` (dispatch + possible
+  compile + rebind) before its hot loop.
+* ``ContinuousBatcher`` — slot-based continuous batching over the unified
+  decode executable (``runtime.steps.make_slot_decode_fn``): a fixed bucket
+  of S slots, per-slot active masks, per-slot positions, and per-slot packed
+  sampling params *as data*. Requests join free slots and leave on
+  completion without the hot loop ever recompiling, rebinding, or branching
+  on mode — the cold path is touched exactly once per bucket size, at
+  warmup.
+
+The batcher is model-agnostic: it drives an abstract ``step`` callable and
+leaves compilation to the engine's ``Dispatcher`` (core/dispatch.py).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucket_multiple
+
+GREEDY, SAMPLE = 0, 1
+
+
+# ------------------------------------------------------------------ requests
+@dataclass
+class Request:
+    """One decode request: ``new_tokens`` tokens from ``first_token`` on."""
+
+    rid: int
+    new_tokens: int
+    greedy: bool = True
+    temperature: float = 1.0
+    first_token: int = 0
+    arrival_s: float = 0.0
+    # Filled by the runtime:
+    tokens: list = field(default_factory=list)
+    t_admit: float | None = None
+    t_done: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.new_tokens
+
+    @property
+    def latency_s(self) -> float | None:
+        """Arrival-to-last-token latency (the serving SLO metric)."""
+        if self.t_done is None:
+            return None
+        return self.t_done - self.arrival_s
+
+
+def poisson_arrivals(
+    n: int,
+    rate_hz: float,
+    *,
+    seed: int = 0,
+    tokens_mean: float = 16.0,
+    tokens_max: int | None = None,
+    sample_frac: float = 0.5,
+    temperature: float = 1.0,
+    vocab: int | None = None,
+) -> list[Request]:
+    """Open-loop Poisson traffic: exponential inter-arrivals, geometric
+    lengths, a Bernoulli greedy/sample mix. The 'realistic data' antidote to
+    the too-predictable synthetic switch patterns the paper warns about."""
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    for rid in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        # geometric already has support {1,2,...} with mean tokens_mean
+        nt = int(rng.geometric(min(1.0, 1.0 / max(tokens_mean, 1.0))))
+        if tokens_max is not None:
+            nt = min(nt, tokens_max)
+        reqs.append(
+            Request(
+                rid=rid,
+                new_tokens=nt,
+                greedy=bool(rng.random() >= sample_frac),
+                temperature=temperature,
+                first_token=int(rng.integers(vocab)) if vocab else 0,
+                arrival_s=t,
+            )
+        )
+    return reqs
+
+
+class RequestQueue:
+    """Thread-safe arrival queue ordered by (arrival_s, rid)."""
+
+    def __init__(self, requests: Iterable[Request] = ()):  # noqa: B008
+        self._heap: list[tuple[float, int, Request]] = []
+        self._tie = itertools.count()
+        self._lock = threading.Lock()
+        self.extend(requests)
+
+    def submit(self, req: Request) -> None:
+        with self._lock:
+            heapq.heappush(self._heap, (req.arrival_s, next(self._tie), req))
+
+    def extend(self, requests: Iterable[Request]) -> None:
+        for r in requests:
+            self.submit(r)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the earliest queued request (None if empty)."""
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
+
+    def pop_due(self, now: float, limit: int | None = None) -> list[Request]:
+        """Admit: pop every request with ``arrival_s <= now`` (up to limit)."""
+        out: list[Request] = []
+        with self._lock:
+            while self._heap and self._heap[0][0] <= now:
+                if limit is not None and len(out) >= limit:
+                    break
+                out.append(heapq.heappop(self._heap)[2])
+        return out
+
+
+# ------------------------------------------------------------ burst batching
+def form_bursts(
+    requests: Sequence[Request], *, quantum: int, max_batch: int
+) -> list[tuple[int, bool, list[Request]]]:
+    """Per-burst baseline batch forming: (bucket, greedy, requests) groups.
+
+    Requests are split by sampling mode (a burst has one mode — the mode is
+    baked into the per-burst executable), chunked to ``max_batch``, and the
+    chunk size is rounded up to a compile bucket. Every returned burst costs
+    one ``Engine.set_mode`` before its hot loop.
+    """
+    bursts = []
+    for greedy in (True, False):
+        group = [r for r in requests if r.greedy == greedy]
+        for i in range(0, len(group), max_batch):
+            chunk = group[i : i + max_batch]
+            if chunk:
+                bucket = bucket_multiple(len(chunk), quantum, max_batch)
+                bursts.append((bucket, greedy, chunk))
+    return bursts
+
+
+# ---------------------------------------------------------------- the clock
+class Clock:
+    """Wall clock with virtual fast-forward.
+
+    Serving latencies are measured against this clock: it advances with real
+    time while work is in flight, and jumps over idle gaps (no due arrivals,
+    no active slots) so a low arrival rate doesn't stall a benchmark run.
+    """
+
+    def __init__(self) -> None:
+        self._t0 = time.perf_counter()
+        self._offset = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._offset
+
+    def jump_to(self, t: float) -> None:
+        """Fast-forward to virtual time ``t`` (no-op if already past it)."""
+        gap = t - self.now()
+        if gap > 0:
+            self._offset += gap
+
+
+# ------------------------------------------------------- continuous batching
+@dataclass
+class BatcherStats:
+    steps: int = 0
+    admitted: int = 0
+    finished: int = 0
+    tokens: int = 0
+    active_slot_steps: int = 0
+    idle_slot_steps: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        total = self.active_slot_steps + self.idle_slot_steps
+        return self.active_slot_steps / total if total else 0.0
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over one fixed-bucket executable.
+
+    ``step(cache, tok, pos, active, temps, greedy, keys)`` is the compiled
+    hot-loop step (params already bound by the engine); see
+    ``runtime.steps.make_slot_decode_fn`` for the contract. The batcher owns
+    the S slots' host-side state and the device cache; ``admit`` (cold path)
+    seats requests in free slots, ``step`` (hot path) advances every slot
+    with a single direct executable call.
+
+    Join/leave never touches the cold path: a join resets the slot's
+    position to 0 (per-row attention masking makes the previous occupant's
+    cache rows invisible — see ``attention.decode_attention``), a leave just
+    clears the active mask. GREEDY vs SAMPLE is per-slot *data*.
+    """
+
+    def __init__(
+        self,
+        *,
+        step: Callable,
+        num_slots: int,
+        max_len: int,
+        cache: Any,
+        seed: int = 0,
+    ):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self._step = step
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self._cache = cache  # device-side KV cache, donated through steps
+        self._rng = np.random.default_rng(seed)
+        self._slots: list[Request | None] = [None] * num_slots
+        self._tok = np.zeros((num_slots, 1), np.int32)
+        self._pos = np.zeros(num_slots, np.int32)
+        self._active = np.zeros(num_slots, bool)
+        self._temps = np.ones(num_slots, np.float32)
+        self._greedy = np.ones(num_slots, bool)
+        self._keys = self._rng.integers(
+            0, 2**32, size=(num_slots, 2), dtype=np.uint32
+        )
+        self.stats = BatcherStats()
+
+    # ------------------------------------------------------------ properties
+    @property
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.num_slots - self.active_count
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active.any())
+
+    # ------------------------------------------------------------- cold path
+    def admit(self, requests: Iterable[Request], now: float = 0.0) -> int:
+        """Seat requests in free slots. Returns the number admitted."""
+        admitted = 0
+        free = [i for i, r in enumerate(self._slots) if r is None]
+        for req in requests:
+            if not free:
+                raise RuntimeError(
+                    "ContinuousBatcher.admit called with no free slot; "
+                    "gate admissions on .free_slots."
+                )
+            if req.new_tokens > self.max_len:
+                raise ValueError(
+                    f"request {req.rid} wants {req.new_tokens} tokens but the "
+                    f"bucket's cache holds max_len={self.max_len}."
+                )
+            s = free.pop(0)  # seat in ascending slot order (deterministic)
+            self._slots[s] = req
+            self._tok[s, 0] = req.first_token
+            self._pos[s] = 0
+            self._active[s] = True
+            self._temps[s] = req.temperature
+            self._greedy[s] = req.greedy
+            self._keys[s] = self._rng.integers(
+                0, 2**32, size=2, dtype=np.uint32
+            )
+            req.t_admit = now
+            admitted += 1
+        self.stats.admitted += admitted
+        return admitted
+
+    # -------------------------------------------------------------- hot path
+    def step(self, now: float = 0.0) -> list[Request]:
+        """One hot-loop step for all slots; returns requests that finished.
+
+        A single direct call of the pre-compiled executable — no tracing, no
+        cache hashing, no mode conditionals, regardless of the request mix.
+        """
+        if not self._active.any():
+            return []
+        nxt, self._cache, pos, keys = self._step(
+            self._cache,
+            jnp.asarray(self._tok),
+            jnp.asarray(self._pos),
+            jnp.asarray(self._active),
+            jnp.asarray(self._temps),
+            jnp.asarray(self._greedy),
+            jnp.asarray(self._keys),
+        )
+        nxt = np.asarray(nxt)  # blocks until the device step is done
+        # copies: the host mutates these on join (device views are read-only)
+        self._pos = np.array(pos, np.int32)
+        self._keys = np.array(keys, np.uint32)
+        self.stats.steps += 1
+        finished: list[Request] = []
+        for s, req in enumerate(self._slots):
+            if req is None or not self._active[s]:
+                self.stats.idle_slot_steps += 1
+                continue
+            self.stats.active_slot_steps += 1
+            req.tokens.append(int(nxt[s]))
+            self.stats.tokens += 1
+            if req.done:
+                req.t_done = now
+                finished.append(req)
+                self._slots[s] = None
+                self._active[s] = False
+        self._tok = nxt[:, None].astype(np.int32)
+        self.stats.finished += len(finished)
+        return finished
+
+
+# ------------------------------------------------------------------ reports
+def latency_report(requests: Sequence[Request]) -> dict:
+    """p50/p95/p99 latency + throughput over finished requests."""
+    done = [r for r in requests if r.t_done is not None]
+    if not done:
+        return {"finished": 0}
+    lat = np.array([r.latency_s for r in done])
+    toks = sum(len(r.tokens) for r in done)
+    span = max(r.t_done for r in done) - min(r.arrival_s for r in done)
+    return {
+        "finished": len(done),
+        "tokens": toks,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p95_ms": float(np.percentile(lat, 95) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "mean_ms": float(lat.mean() * 1e3),
+        "tok_per_s": toks / span if span > 0 else float("inf"),
+        "span_s": float(span),
+    }

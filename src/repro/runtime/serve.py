@@ -1,19 +1,28 @@
-"""Serving engine: bucketed AOT dispatch built on semi-static conditions.
+"""Serving engine: bucketed AOT dispatch built on the unified dispatch core.
 
-The HFT analogy made literal (DESIGN.md §2): the *hot path* is the token loop
-— it must never trace, compile, hash a jit cache key, or branch on mode. The
-*cold path* is the scheduler: it buckets incoming requests (batch size,
-sampling mode), precompiles/selects the executable in a SpecTable, warms it,
-and only then admits the batch to the hot loop.
+The HFT analogy made literal (DESIGN.md §2/§4): the *hot path* is the token
+loop — it must never trace, compile, hash a jit cache key, or branch on mode.
+The *cold path* is the scheduler: it admits requests, picks the executable in
+the ``Dispatcher``'s compile cache, warms it, and only then lets the hot loop
+run.
 
-``Engine.set_mode(...)`` is the paper's ``set_direction`` (with dummy-order
-warming); ``Engine.decode_loop`` is the patched-jmp hot path.
+Two serving modes share one ``core.dispatch.Dispatcher``:
+
+* **Per-burst** (the paper's construct, one burst at a time):
+  ``Engine.set_mode(...)`` is ``set_direction`` (with dummy-order warming);
+  ``Engine.decode_loop`` is the patched-jmp hot path. The sampling mode is
+  baked into the executable, so every mode flip is a dispatch (and a cold
+  compile on first sight of a (bucket, mode) key).
+* **Continuous batching** (``Engine.continuous()`` →
+  ``runtime.scheduler.ContinuousBatcher``): one executable per bucket size,
+  sampling params packed per-slot *as data*. Requests join and leave
+  mid-loop; after warmup the dispatcher's compile counter never moves.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
@@ -22,7 +31,16 @@ import numpy as np
 
 from repro import models
 from repro.configs import ArchConfig
-from repro.core import SpecTable, bucket_multiple
+from repro.core import DispatchPolicy, Dispatcher, bucket_multiple
+from repro.runtime import steps as steps_mod
+from repro.runtime.scheduler import (
+    Clock,
+    ContinuousBatcher,
+    Request,
+    RequestQueue,
+    form_bursts,
+    latency_report,
+)
 
 GREEDY, SAMPLE = 0, 1
 
@@ -34,6 +52,10 @@ class EngineConfig:
     max_batch: int = 64
     temperature: float = 1.0
     moe_policy: str = "drop"
+    # Dispatch policy (DESIGN.md §3): how sticky is the hot slot, and how
+    # many executables may the compile cache keep?
+    hysteresis: int = 1
+    cache_capacity: int | None = None
 
 
 class Engine:
@@ -43,47 +65,87 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
-        self._prefill = SpecTable("prefill")
-        self._decode = SpecTable("decode")
-        self._mode: tuple = (GREEDY,)
-        self._current: Callable | None = None  # the patched-jmp slot
+        self._decode = Dispatcher(
+            self._build,
+            name=f"decode@{id(self):x}",
+            policy=DispatchPolicy(
+                hysteresis=ecfg.hysteresis, capacity=ecfg.cache_capacity
+            ),
+        )
+        self._current: Callable | None = None  # mirror of the hot slot
         self._current_key: tuple | None = None
         self.stats = {"tokens": 0, "hot_calls": 0, "mode_switches": 0}
 
+    def close(self) -> None:
+        """Release the dispatcher's entry-point name (and with it the
+        registry reference that keeps this Engine and its params alive)."""
+        self._decode.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
     # ------------------------------------------------------------ cold path
-    def _build_decode(self, batch: int, mode: int) -> Callable:
+    def _abstract_params(self):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params
+        )
+
+    def _tok_aval(self, batch: int) -> jax.ShapeDtypeStruct:
+        if self.cfg.input_kind == "tokens":
+            return jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        return jax.ShapeDtypeStruct(
+            (batch, 1, self.cfg.d_model), jnp.dtype(self.cfg.dtype)
+        )
+
+    def _build(self, key: tuple) -> Callable:
+        """Dispatcher builder: compile the executable for a dispatch key.
+
+        Keys: ``(bucket, mode)`` for per-burst steps (mode baked in), or
+        ``("cb", slots)`` for the continuous-batching step (mode as data).
+        """
+        if key[0] == "cb":
+            return self._build_slot_decode(key[1])
+        bucket, mode = key
+        return self._build_burst_decode(bucket, mode)
+
+    def _build_burst_decode(self, batch: int, mode: int) -> Callable:
         cfg, ecfg = self.cfg, self.ecfg
-
-        def step(params, cache, inputs, pos, key):
-            logits, cache = models.decode_step(
-                cfg, params, cache, inputs, pos, moe_policy=ecfg.moe_policy
-            )
-            if mode == GREEDY:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                tok = jax.random.categorical(
-                    key, logits / ecfg.temperature, axis=-1
-                ).astype(jnp.int32)
-            return tok, cache
-
+        step = steps_mod.make_sampling_decode_fn(
+            cfg,
+            mode=mode,
+            temperature=ecfg.temperature,
+            moe_policy=ecfg.moe_policy,
+        )
         c_shape = jax.eval_shape(
             lambda: models.init_cache(cfg, batch, ecfg.max_len)
         )
-        if cfg.input_kind == "tokens":
-            tok_in = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
-        else:
-            tok_in = jax.ShapeDtypeStruct(
-                (batch, 1, cfg.d_model), jnp.dtype(cfg.dtype)
-            )
-        p_shape = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params
-        )
         lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            p_shape,
+            self._abstract_params(),
             c_shape,
-            tok_in,
+            self._tok_aval(batch),
             jax.ShapeDtypeStruct((), jnp.int32),
             jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def _build_slot_decode(self, slots: int) -> Callable:
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_slot_decode_fn(cfg, moe_policy=ecfg.moe_policy)
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(cfg, slots, ecfg.max_len)
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
         return lowered.compile()
 
@@ -96,10 +158,8 @@ class Engine:
             batch, self.ecfg.batch_quantum, self.ecfg.max_batch
         )
         key = (bucket, sampling)
-        exe = self._decode.get_or_build(
-            key, lambda: self._build_decode(bucket, sampling)
-        )
-        self._current = exe  # <- the jmp patch
+        exe = self._decode.dispatch(key)
+        self._current = exe  # <- the jmp patch (engine-side mirror)
         self._current_key = key
         if warm:  # dummy-order warming (paper §4.3)
             cache = models.init_cache(self.cfg, bucket, self.ecfg.max_len)
@@ -134,18 +194,185 @@ class Engine:
         """The latency-critical loop: direct executable calls only."""
         exe = self._current
         assert exe is not None, "set_mode() before decode_loop() (cold path)"
+        batch = int(first_token.shape[0])
+        if num_tokens <= 0:
+            return np.zeros((batch, 0), np.int32), cache
+        if self.cfg.input_kind != "tokens" and num_tokens > 1:
+            raise ValueError(
+                f"{self.cfg.name} has a stub modality frontend (no token "
+                f"embedding table): sampled ids cannot be fed back as "
+                f"embeddings, so decode_loop supports num_tokens=1 only."
+            )
         tok = first_token
-        key = rng if rng is not None else jnp.zeros((2,), jnp.uint32)
+        base_key = rng if rng is not None else jnp.zeros((2,), jnp.uint32)
+        # One key per step, derived in the prologue: reusing a single key
+        # across steps would correlate every sampled token in the burst.
+        step_keys = jax.random.split(base_key, num_tokens)
         out = []
         pos = start_pos
-        for _ in range(num_tokens):
-            tok2d = tok if self.cfg.input_kind == "tokens" else tok
+        for i in range(num_tokens):
+            # tokens arrive as [B,1]; stub-frontend embeddings as [B,D] and
+            # need the singleton seq axis the model expects ([B,1,D]).
+            tok2d = tok if self.cfg.input_kind == "tokens" else tok[:, None, :]
             tok, cache = exe(
-                self.params, cache, tok2d, jnp.int32(pos), key
+                self.params, cache, tok2d, jnp.int32(pos), step_keys[i]
             )
             out.append(tok)
             tok = tok[:, None] if self.cfg.input_kind == "tokens" else tok
             pos += 1
             self.stats["hot_calls"] += 1
-        self.stats["tokens"] += num_tokens * int(out[0].shape[0])
+        self.stats["tokens"] += num_tokens * batch
         return np.stack([np.asarray(t) for t in out], axis=1), cache
+
+    # -------------------------------------------------- continuous batching
+    def continuous(self, *, slots: int | None = None, seed: int = 0) -> ContinuousBatcher:
+        """Cold path: build+warm the slot executable, return a batcher.
+
+        This is the only compile the continuous path ever pays for a given
+        bucket size; afterwards joins, leaves, and greedy/sample flips are
+        pure hot-loop data.
+        """
+        if self.cfg.input_kind != "tokens":
+            raise ValueError(
+                f"{self.cfg.name}: continuous batching feeds sampled ids "
+                f"back as inputs and needs a token-input arch."
+            )
+        s = slots or self.ecfg.max_batch
+        exe = self._decode.dispatch(("cb", s))
+        cache = models.init_cache(self.cfg, s, self.ecfg.max_len)
+        # Dummy-order warming (paper §4.3): pay device program load now. All
+        # slots are inactive, so positions stay 0 and the garbage K/V the
+        # warm call writes is masked out for any future occupant.
+        warm_out = exe(
+            self.params,
+            cache,
+            jnp.zeros((s, 1), jnp.int32),
+            jnp.zeros((s,), jnp.int32),
+            jnp.zeros((s,), jnp.bool_),
+            jnp.ones((s,), jnp.float32),
+            jnp.ones((s,), jnp.bool_),
+            jnp.zeros((s, 2), jnp.uint32),
+        )
+        jax.block_until_ready(warm_out)
+        _, cache, _, _ = warm_out
+
+        def bound_step(cache, tok, pos, active, temps, greedy, keys):
+            self.stats["hot_calls"] += 1
+            return exe(self.params, cache, tok, pos, active, temps, greedy, keys)
+
+        return ContinuousBatcher(
+            step=bound_step,
+            num_slots=s,
+            max_len=self.ecfg.max_len,
+            cache=cache,
+            seed=seed,
+        )
+
+
+# ------------------------------------------------------------ stream drivers
+def run_continuous_stream(
+    eng: Engine,
+    requests: list[Request],
+    *,
+    slots: int | None = None,
+    seed: int = 0,
+    clock: Clock | None = None,
+) -> dict:
+    """Drive a request stream through continuous batching; return a report.
+
+    The report's ``compiles_after_warmup`` is the acceptance metric: it must
+    stay 0 for any mix of greedy/sample requests once the bucket executable
+    exists.
+    """
+    cb = eng.continuous(slots=slots, seed=seed)  # warmup compile first...
+    clock = clock or Clock()  # ...so served latencies exclude it
+    warm_compiles = eng._decode.stats.misses
+    warm_rebinds = eng._decode.stats.rebinds
+    q = RequestQueue(requests)
+    finished: list[Request] = []
+    while q or cb.has_work:
+        now = clock.now()
+        due = q.pop_due(now, limit=cb.free_slots)
+        if due:
+            cb.admit(due, now=now)
+        if cb.has_work:
+            finished.extend(cb.step(now=clock.now()))
+        else:
+            nxt = q.next_arrival()
+            if nxt is None:
+                break
+            clock.jump_to(nxt)  # idle: fast-forward to the next arrival
+    report = latency_report(finished)
+    report.update(
+        engine="continuous",
+        slots=cb.num_slots,
+        steps=cb.stats.steps,
+        occupancy=round(cb.stats.occupancy, 4),
+        compiles_total=eng._decode.stats.misses,
+        compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
+        rebinds=eng._decode.stats.rebinds - warm_rebinds,
+    )
+    return report
+
+
+def run_burst_stream(
+    eng: Engine, requests: list[Request], *, clock: Clock | None = None
+) -> dict:
+    """Per-burst baseline: every burst pays set_mode (dispatch + possible
+    compile + rebind) before its hot loop; mixed modes split into separate
+    bursts because the mode is baked into the executable."""
+    clock = clock or Clock()
+    q = RequestQueue(requests)
+    rng = np.random.default_rng(0)
+    finished: list[Request] = []
+    compiles0 = eng._decode.stats.misses
+    rebinds0 = eng._decode.stats.rebinds
+    switches = 0
+    while q:
+        now = clock.now()
+        due = q.pop_due(now)
+        if not due:
+            nxt = q.next_arrival()
+            if nxt is None:
+                break
+            clock.jump_to(nxt)
+            continue
+        for r in due:  # same admission contract as ContinuousBatcher.admit
+            if r.new_tokens > eng.ecfg.max_len:
+                raise ValueError(
+                    f"request {r.rid} wants {r.new_tokens} tokens but the "
+                    f"engine's cache holds max_len={eng.ecfg.max_len}."
+                )
+        for bucket, greedy, chunk in form_bursts(
+            due, quantum=eng.ecfg.batch_quantum, max_batch=eng.ecfg.max_batch
+        ):
+            mode = GREEDY if greedy else SAMPLE
+            info = eng.set_mode(batch=len(chunk), sampling=mode)  # cold path
+            switches += 1
+            b = info["bucket"]
+            cache = models.init_cache(eng.cfg, b, eng.ecfg.max_len)
+            first = np.zeros((b, 1), np.int32)
+            for i, r in enumerate(chunk):
+                first[i, 0] = r.first_token
+                r.t_admit = clock.now()
+            steps = max(r.new_tokens for r in chunk)
+            key = jnp.asarray(
+                rng.integers(0, 2**32, size=2, dtype=np.uint32)
+            )
+            toks, _ = eng.decode_loop(  # hot path
+                cache, jnp.asarray(first), 0, steps, rng=key
+            )
+            done_t = clock.now()
+            for i, r in enumerate(chunk):
+                r.tokens = [int(t) for t in toks[i, : r.new_tokens]]
+                r.t_done = done_t
+                finished.append(r)
+    report = latency_report(finished)
+    report.update(
+        engine="burst",
+        mode_switches=switches,
+        compiles_total=eng._decode.stats.misses,
+        compiles_after_warmup=eng._decode.stats.misses - compiles0,
+        rebinds=eng._decode.stats.rebinds - rebinds0,
+    )
+    return report

@@ -115,6 +115,77 @@ def make_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callable:
     return serve_step
 
 
+def make_sampling_decode_fn(
+    cfg: ArchConfig,
+    *,
+    mode: int,
+    temperature: float = 1.0,
+    moe_policy: str = "drop",
+) -> Callable:
+    """Decode step with the sampling mode *baked into the executable*.
+
+    One compiled branch target per (bucket, mode) — the per-burst engine's
+    branch targets (DESIGN.md §2). ``mode`` 0 = greedy, 1 = sample. Flipping
+    mode means dispatching a different executable: cheap once compiled, but a
+    cold compile on first sight and a slot rebind per flip.
+    """
+
+    def step(params, cache, inputs, pos, key):
+        logits, cache = models.decode_step(
+            cfg, params, cache, inputs, pos, moe_policy=moe_policy
+        )
+        if mode == 0:  # greedy
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(
+                key, logits / temperature, axis=-1
+            ).astype(jnp.int32)
+        return tok, cache
+
+    return step
+
+
+def make_slot_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callable:
+    """Continuous-batching decode step: sampling params are *data*, not code.
+
+    The unified hot-loop signature (DESIGN.md §4) — one executable per bucket
+    size, shared by every request mix:
+
+        step(params, cache, tok[S,1], pos[S], active[S], temps[S],
+             greedy[S], keys[S,2])
+          -> (next_tok[S], cache, new_pos[S], new_keys[S,2])
+
+    Per-slot fields:
+      * ``pos``    — each slot's own cache depth; frozen while inactive.
+      * ``active`` — slots currently owned by a request; inactive slots
+                     still compute (fixed shapes = no recompile) but their
+                     outputs are ignored on the host and their positions
+                     don't advance.
+      * ``temps``/``greedy`` — packed sampling params. GREEDY vs SAMPLE is a
+        ``jnp.where`` on data, so a mode flip never recompiles or rebinds.
+      * ``keys``   — per-slot PRNG keys, split in-step so sampling streams
+        are independent per request.
+    """
+
+    def slot_step(params, cache, tok, pos, active, temps, greedy, keys):
+        logits, cache = models.decode_step(
+            cfg, params, cache, tok, pos, moe_policy=moe_policy
+        )
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = jnp.maximum(temps, 1e-4)[:, None].astype(logits.dtype)
+        sample_keys, new_keys = jnp.split(
+            jax.vmap(lambda k: jax.random.split(k, 2))(keys), 2, axis=1
+        )
+        s = jax.vmap(jax.random.categorical)(
+            sample_keys[:, 0], logits / t
+        ).astype(jnp.int32)
+        nxt = jnp.where(greedy, g, s)
+        new_pos = pos + active.astype(jnp.int32)
+        return nxt, cache, new_pos, new_keys[:, 0]
+
+    return slot_step
+
+
 def lower_decode(
     cfg: ArchConfig,
     mesh: Mesh,

@@ -1,0 +1,272 @@
+"""Unit tests for the unified dispatch core (core/dispatch.py, DESIGN.md §3):
+single-flight compile cache, bounded eviction, hysteresis policy, and the
+FailoverPlan migration onto the Dispatcher."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    CompileCache,
+    DispatchError,
+    DispatchPolicy,
+    Dispatcher,
+    SpecTable,
+    live_dispatchers,
+    reset_entry_points,
+)
+from repro.ft.failover import DEGRADED, HEALTHY, FailoverPlan, HeartbeatMonitor
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    reset_entry_points()
+    yield
+    reset_entry_points()
+
+
+# ------------------------------------------------------------- CompileCache
+def test_cache_build_once_then_hit():
+    c = CompileCache("t")
+    calls = []
+    exe = c.get_or_build("a", lambda: calls.append(1) or (lambda: 42))
+    assert c.get_or_build("a", lambda: calls.append(1) or (lambda: 0)) is exe
+    assert calls == [1]
+    assert c.stats.misses == 1 and c.stats.hits == 1
+    assert "a" in c and len(c) == 1
+
+
+def test_cache_get_never_builds():
+    c = CompileCache("t")
+    with pytest.raises(KeyError, match="precompile"):
+        c.get("missing")
+
+
+def test_cache_lru_eviction_and_pinning():
+    c = CompileCache("t", capacity=2)
+    for k in ("a", "b", "x"):
+        c.get_or_build(k, lambda k=k: k)
+    assert "a" not in c and len(c) == 2  # LRU out
+    assert c.stats.evictions == 1
+    c.pin("b")
+    c.get_or_build("y", lambda: "y")  # would evict b, but b is pinned
+    assert "b" in c and "x" not in c
+
+
+def test_cache_capacity_validation():
+    with pytest.raises(DispatchError, match="capacity"):
+        CompileCache("t", capacity=0)
+
+
+def test_cache_single_flight_builds_once():
+    """Paper §5.2 table edition: racing cold-path threads compile once."""
+    c = CompileCache("race")
+    builds = []
+
+    def slow_build():
+        time.sleep(0.05)
+        builds.append(1)
+        return lambda: 42
+
+    results = []
+    threads = [
+        threading.Thread(
+            target=lambda: results.append(c.get_or_build("k", slow_build))
+        )
+        for _ in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(builds) == 1
+    assert len(results) == 8 and all(r() == 42 for r in results)
+    assert c.stats.single_flight_waits >= 1
+
+
+def test_cache_leader_failure_releases_followers():
+    c = CompileCache("fail")
+    attempts = []
+
+    def flaky():
+        attempts.append(1)
+        if len(attempts) == 1:
+            time.sleep(0.02)
+            raise RuntimeError("compile exploded")
+        return "ok"
+
+    errs, oks = [], []
+
+    def worker():
+        try:
+            oks.append(c.get_or_build("k", flaky))
+        except RuntimeError as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # the leader raised; followers retried and built successfully
+    assert len(errs) == 1 and set(oks) == {"ok"}
+
+
+def test_spec_table_is_single_flight():
+    """SpecTable (the legacy interface) inherits single-flight builds."""
+    t = SpecTable("sf")
+    builds = []
+
+    def build():
+        time.sleep(0.03)
+        builds.append(1)
+        return lambda: 7
+
+    threads = [
+        threading.Thread(target=lambda: t.get_or_build("k", build))
+        for _ in range(6)
+    ]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(builds) == 1
+    assert t.stats.misses == 1
+
+
+# --------------------------------------------------------------- Dispatcher
+def test_dispatch_builds_and_rebinds_immediately_by_default():
+    d = Dispatcher(lambda k: (lambda: k), name="d")
+    assert d.dispatch("A")() == "A"
+    assert d.current_key == "A"
+    d.dispatch("B")
+    assert d.current_key == "B"  # hysteresis=1: classic BranchChanger
+    assert d.stats.rebinds == 2 and d.stats.misses == 2
+    assert d.hot() == "B"
+
+
+def test_dispatch_slot_hit_is_fast_path():
+    d = Dispatcher(lambda k: (lambda: k), name="d")
+    d.dispatch("A")
+    before = d.stats.slot_hits
+    d.dispatch("A")
+    assert d.stats.slot_hits == before + 1
+    assert d.stats.misses == 1  # no rebuild
+
+
+def test_hysteresis_suppresses_oscillation():
+    """Fig. 13 as policy: rapid A/B/A/B never moves the slot."""
+    d = Dispatcher(
+        lambda k: (lambda: k), name="d", policy=DispatchPolicy(hysteresis=2)
+    )
+    d.dispatch("A")
+    d.dispatch("A")
+    assert d.current_key == "A"
+    for _ in range(8):
+        assert d.dispatch("B")() == "B"  # still served, from the table
+        assert d.dispatch("A")() == "A"
+    assert d.current_key == "A"
+    assert d.stats.suppressed_rebinds >= 8
+
+
+def test_hysteresis_streak_captures_slot():
+    d = Dispatcher(
+        lambda k: (lambda: k), name="d", policy=DispatchPolicy(hysteresis=3)
+    )
+    d.dispatch("A")  # streak 1
+    d.dispatch("A")  # streak 2
+    d.dispatch("A")  # streak 3 -> capture
+    assert d.current_key == "A"
+    d.dispatch("B")
+    d.dispatch("B")
+    assert d.current_key == "A"
+    d.dispatch("B")
+    assert d.current_key == "B"
+
+
+def test_set_direction_bypasses_hysteresis():
+    d = Dispatcher(
+        lambda k: (lambda: k), name="d", policy=DispatchPolicy(hysteresis=99)
+    )
+    d.set_direction("A")
+    assert d.current_key == "A" and d.hot() == "A"
+
+
+def test_policy_validation():
+    with pytest.raises(DispatchError, match="hysteresis"):
+        DispatchPolicy(hysteresis=0)
+
+
+def test_slot_key_never_evicted():
+    d = Dispatcher(
+        lambda k: (lambda: k),
+        name="d",
+        policy=DispatchPolicy(capacity=2),
+    )
+    d.set_direction("hot")
+    for k in ("a", "b", "c", "e"):
+        d.build(k)
+    assert "hot" in d  # pinned by the slot
+    assert d.hot() == "hot"
+
+
+def test_duplicate_entry_point_guard_and_close():
+    Dispatcher(lambda k: k, name="dup")
+    with pytest.raises(DispatchError, match="entry point"):
+        Dispatcher(lambda k: k, name="dup")
+    assert "dup" in live_dispatchers()
+    reset_entry_points()
+    d = Dispatcher(lambda k: k, name="dup")  # no raise after reset
+    d.close()
+    Dispatcher(lambda k: k, name="dup")  # no raise after close
+
+
+def test_empty_slot_raises():
+    d = Dispatcher(lambda k: k, name="d")
+    with pytest.raises(DispatchError, match="empty hot slot"):
+        d.hot()
+
+
+def test_warmer_runs_on_rebind():
+    warmed = []
+    d = Dispatcher(
+        lambda k: (lambda: k),
+        name="d",
+        warmer=lambda key, exe: warmed.append(key),
+        policy=DispatchPolicy(warm_on_rebind=True),
+    )
+    d.dispatch("A")
+    assert warmed == ["A"] and d.stats.warms == 1
+    d.dispatch("A")  # slot hit: no warm
+    assert warmed == ["A"]
+
+
+# ------------------------------------------------------------- FailoverPlan
+def test_failover_plan_on_dispatcher():
+    plan = FailoverPlan(
+        healthy_fn=lambda x: ("healthy", x),
+        degraded_fn=lambda x: ("degraded", x),
+        reshard_fn=lambda s: s + 1,
+        name="t-failover",
+    )
+    mon = HeartbeatMonitor(["w0"], timeout_s=0.01)
+    assert not plan.degraded
+    assert plan.step(1) == ("healthy", 1)
+    mon.beat("w0", t=-100.0)  # stale -> failed
+    state = plan.check(mon, 0)
+    assert state == 1  # resharded
+    assert plan.degraded and plan.failovers == 1
+    assert plan.step(2) == ("degraded", 2)
+    # idempotent: a second check doesn't fail over again
+    assert plan.check(mon, state) == state and plan.failovers == 1
+    plan.close()
+
+
+def test_failover_name_guard():
+    plan = FailoverPlan(
+        healthy_fn=lambda: 0, degraded_fn=lambda: 1, name="t-guard"
+    )
+    with pytest.raises(DispatchError, match="entry point"):
+        FailoverPlan(healthy_fn=lambda: 0, degraded_fn=lambda: 1, name="t-guard")
+    plan.close()

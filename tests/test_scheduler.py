@@ -1,0 +1,258 @@
+"""Scheduler + continuous batching tests (runtime/scheduler.py, DESIGN.md §4):
+admission/bucketing, slot join/leave correctness vs a naive per-request loop,
+and the zero-recompile contract for mixed greedy/sample streams."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.scheduler import (
+    ContinuousBatcher,
+    Request,
+    RequestQueue,
+    form_bursts,
+    latency_report,
+    poisson_arrivals,
+)
+from repro.runtime.serve import (
+    GREEDY,
+    SAMPLE,
+    Engine,
+    EngineConfig,
+    run_continuous_stream,
+)
+
+
+# ----------------------------------------------------------- queue/arrivals
+def test_poisson_arrivals_shape():
+    reqs = poisson_arrivals(
+        50, 100.0, seed=3, tokens_mean=8, tokens_max=32, vocab=128
+    )
+    assert len(reqs) == 50
+    arr = [r.arrival_s for r in reqs]
+    assert arr == sorted(arr) and arr[0] > 0
+    assert all(1 <= r.new_tokens <= 32 for r in reqs)
+    assert all(0 <= r.first_token < 128 for r in reqs)
+    modes = {r.greedy for r in reqs}
+    assert modes == {True, False}  # a mixed stream
+
+
+def test_queue_pop_due_ordering_and_limit():
+    reqs = [
+        Request(rid=i, new_tokens=1, arrival_s=t)
+        for i, t in enumerate([0.3, 0.1, 0.2, 0.9])
+    ]
+    q = RequestQueue(reqs)
+    assert len(q) == 4
+    assert q.next_arrival() == pytest.approx(0.1)
+    due = q.pop_due(0.25, limit=1)
+    assert [r.rid for r in due] == [1]
+    due = q.pop_due(0.35)
+    assert [r.rid for r in due] == [2, 0]  # arrival order
+    assert q.pop_due(0.5) == []
+    assert len(q) == 1
+
+
+def test_form_bursts_groups_by_mode_and_buckets():
+    reqs = [
+        Request(rid=i, new_tokens=1, greedy=(i % 3 != 0)) for i in range(10)
+    ]
+    bursts = form_bursts(reqs, quantum=4, max_batch=8)
+    for bucket, greedy, chunk in bursts:
+        assert all(r.greedy == greedy for r in chunk)
+        assert bucket % 4 == 0 and bucket >= len(chunk)
+    assert sum(len(c) for _, _, c in bursts) == 10
+
+
+# --------------------------------------- batcher bookkeeping (no model/jit)
+def _fake_step(cache, tok, pos, active, temps, greedy, keys):
+    """Deterministic stand-in for the compiled slot step: next = tok+1."""
+    nxt = tok[:, 0] + 1
+    return nxt, cache, pos + active.astype(jnp.int32), keys
+
+
+def test_batcher_join_leave_bookkeeping():
+    cb = ContinuousBatcher(
+        step=_fake_step, num_slots=2, max_len=16, cache=None, seed=0
+    )
+    r0 = Request(rid=0, new_tokens=3, first_token=10)
+    r1 = Request(rid=1, new_tokens=1, first_token=20)
+    assert cb.admit([r0, r1], now=0.0) == 2
+    assert cb.free_slots == 0
+    done = cb.step(now=1.0)
+    assert done == [r1] and r1.t_done == 1.0  # r1 finished, slot freed
+    assert cb.free_slots == 1
+    r2 = Request(rid=2, new_tokens=2, first_token=30)
+    cb.admit([r2], now=1.5)
+    while cb.has_work:
+        cb.step(now=2.0)
+    assert r0.tokens == [11, 12, 13]  # fake step: +1 per token
+    assert r2.tokens == [31, 32]
+    assert cb.stats.finished == 3 and cb.stats.admitted == 3
+    assert cb.stats.tokens == 6
+
+
+def test_batcher_admission_guards():
+    cb = ContinuousBatcher(
+        step=_fake_step, num_slots=1, max_len=4, cache=None
+    )
+    with pytest.raises(ValueError, match="max_len"):
+        cb.admit([Request(rid=0, new_tokens=5)])
+    cb.admit([Request(rid=1, new_tokens=1)])
+    with pytest.raises(RuntimeError, match="free slot"):
+        cb.admit([Request(rid=2, new_tokens=1)])
+
+
+def test_latency_report_percentiles():
+    reqs = []
+    for i in range(10):
+        r = Request(rid=i, new_tokens=1, arrival_s=0.0)
+        r.tokens = [1]
+        r.t_done = 0.1 * (i + 1)
+        reqs.append(r)
+    rep = latency_report(reqs)
+    assert rep["finished"] == 10 and rep["tokens"] == 10
+    assert rep["p50_ms"] <= rep["p95_ms"] <= rep["p99_ms"]
+
+
+# ------------------------------------------------------- model-level (smoke)
+@pytest.fixture(scope="module")
+def engine():
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, Engine(
+        cfg, params, EngineConfig(max_len=32, batch_quantum=4, max_batch=4)
+    )
+
+
+def _greedy_reqs(lengths, first_tokens, t0=0.0):
+    return [
+        Request(rid=i, new_tokens=n, greedy=True, first_token=f, arrival_s=t0)
+        for i, (n, f) in enumerate(zip(lengths, first_tokens))
+    ]
+
+
+def test_continuous_join_leave_matches_sequential(engine):
+    """Overlapped slot occupancy == one-request-at-a-time (same executable):
+    a slot's stream is isolated from joins/leaves in other slots."""
+    cfg, eng = engine
+    lengths, firsts = [6, 3, 5, 2], [5, 9, 13, 17]
+
+    cb = eng.continuous(slots=4, seed=0)
+    overlapped = _greedy_reqs(lengths, firsts)
+    cb.admit(overlapped, now=0.0)
+    while cb.has_work:
+        cb.step()
+
+    sequential = _greedy_reqs(lengths, firsts)
+    cb2 = eng.continuous(slots=4, seed=0)
+    for r in sequential:
+        cb2.admit([r], now=0.0)
+        while cb2.has_work:
+            cb2.step()
+
+    for a, b in zip(overlapped, sequential):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
+
+
+def test_continuous_greedy_matches_burst_engine(engine):
+    """A lone greedy request in the batcher == the per-burst hot loop row."""
+    cfg, eng = engine
+    info = eng.set_mode(batch=4, sampling=GREEDY)
+    b = info["bucket"]
+    first = np.zeros((b, 1), np.int32)
+    first[0, 0] = 11
+    cache = models.init_cache(cfg, b, eng.ecfg.max_len)
+    toks, _ = eng.decode_loop(cache, jnp.asarray(first), 0, 5)
+
+    cb = eng.continuous(slots=b)
+    req = Request(rid=0, new_tokens=5, greedy=True, first_token=11)
+    cb.admit([req])
+    while cb.has_work:
+        cb.step()
+    assert req.tokens == [int(t) for t in toks[0]]
+
+
+def test_mixed_stream_zero_recompiles_after_warmup(engine):
+    """The acceptance contract: greedy/sample mix never touches the cold
+    path once the bucket executable exists."""
+    cfg, eng = engine
+    eng.continuous(slots=4)  # warmup compile for this bucket size
+    compiles_warm = eng._decode.stats.misses
+    reqs = poisson_arrivals(
+        16, 500.0, seed=7, tokens_mean=4, tokens_max=16,
+        sample_frac=0.5, vocab=cfg.vocab_size,
+    )
+    assert {r.greedy for r in reqs} == {True, False}
+    rep = run_continuous_stream(eng, reqs, slots=4)
+    assert rep["finished"] == 16
+    assert eng._decode.stats.misses == compiles_warm
+    assert rep["compiles_after_warmup"] == 0
+
+
+def test_sampled_slots_respect_temperature_isolation(engine):
+    """Two sampling requests with different keys produce independent
+    streams; a greedy request in the same bucket stays deterministic."""
+    cfg, eng = engine
+    cb = eng.continuous(slots=4, seed=123)
+    reqs = [
+        Request(rid=0, new_tokens=8, greedy=True, first_token=3),
+        Request(rid=1, new_tokens=8, greedy=False, temperature=1.0, first_token=3),
+        Request(rid=2, new_tokens=8, greedy=False, temperature=1.0, first_token=3),
+    ]
+    cb.admit(reqs)
+    while cb.has_work:
+        cb.step()
+    # greedy row reproducible across runs
+    cb2 = eng.continuous(slots=4, seed=456)
+    req_g = Request(rid=0, new_tokens=8, greedy=True, first_token=3)
+    cb2.admit([req_g])
+    while cb2.has_work:
+        cb2.step()
+    assert req_g.tokens == reqs[0].tokens
+    # distinct per-slot keys -> (overwhelmingly) distinct sampled streams
+    assert reqs[1].tokens != reqs[2].tokens
+
+
+def test_decode_loop_zero_tokens_guard(engine):
+    cfg, eng = engine
+    info = eng.set_mode(batch=4, sampling=GREEDY)
+    b = info["bucket"]
+    cache = models.init_cache(cfg, b, eng.ecfg.max_len)
+    toks, cache2 = eng.decode_loop(
+        cache, jnp.zeros((b, 1), jnp.int32), 0, 0
+    )
+    assert toks.shape == (b, 0)
+    assert cache2 is cache  # untouched
+
+
+def test_engine_hysteresis_under_mode_oscillation():
+    """With hysteresis=2, alternating greedy/sample bursts are served from
+    the table — the hot slot never thrashes (paper Fig. 13 as policy)."""
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg,
+        params,
+        EngineConfig(max_len=16, batch_quantum=4, max_batch=4, hysteresis=2),
+    )
+    eng.set_mode(batch=4, sampling=GREEDY, warm=False)
+    eng.set_mode(batch=4, sampling=GREEDY, warm=False)  # slot: (4, GREEDY)
+    assert eng._decode.current_key == (4, GREEDY)
+    rebinds = eng._decode.stats.rebinds
+    for _ in range(4):
+        eng.set_mode(batch=4, sampling=SAMPLE, warm=False)
+        eng.set_mode(batch=4, sampling=GREEDY, warm=False)
+    assert eng._decode.stats.rebinds == rebinds  # slot never moved
+    assert eng._decode.current_key == (4, GREEDY)
+    # both modes still served correct executables (from the table)
+    assert eng._current_key == (4, GREEDY)
+    eng.set_mode(batch=4, sampling=SAMPLE, warm=False)
+    assert eng._current_key == (4, SAMPLE)
+    eng.close()

@@ -16,8 +16,9 @@ from repro.configs import ASSIGNED, get_config
 from repro.distributed import sharding as shd
 from repro.runtime import steps
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax 0.4.x AbstractMesh signature: a tuple of (axis_name, size) pairs.
+SINGLE = AbstractMesh((("data", 16), ("model", 16)))
+MULTI = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _axes_of(spec_entry):
