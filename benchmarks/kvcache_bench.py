@@ -1,0 +1,131 @@
+"""Paged KV-cache scenario — shared prefixes, long tails, overcommit.
+
+The workload the dense cache cannot serve (DESIGN.md §9): every request
+carries one of a few common prompt prefixes (system prompts) plus a private
+suffix, and decode lengths are long-tailed. The page pool is sized *below*
+``slots × max_len`` — dense slot-caches at this budget could only seat
+``pool_tokens // max_len`` requests, while the paged engine shares prefix
+pages and seats the full slot count.
+
+``kvcache_comparison`` drives the same shared-prefix stream through:
+
+* the paged engine (page pool + prefix cache + capacity-bucket dispatch), and
+* the dense continuous engine as the latency baseline (its cache is allowed
+  the full ``slots × max_len`` budget — the comparison is paged-at-a-fraction
+  vs dense-at-full-budget).
+
+The acceptance contract (ISSUE 2): ``peak_concurrent`` must beat the dense
+seat count at the same memory budget, and ``compiles_after_warmup`` must not
+exceed the distinct capacity buckets seen — zero hot-loop recompiles between
+bucket crossings. The result feeds BENCH_kvcache.json.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.scheduler import shared_prefix_arrivals
+from repro.runtime.serve import (
+    Engine,
+    EngineConfig,
+    run_continuous_stream,
+    run_paged_stream,
+)
+
+
+def kvcache_comparison(
+    n_requests: int = 48,
+    rate_hz: float = 200.0,
+    *,
+    max_len: int = 64,
+    slots: int = 8,
+    page_size: int = 8,
+    pool_frac: float = 0.6,
+    prefix_len: int = 16,
+    num_prefixes: int = 3,
+    tokens_mean: float = 8.0,
+    seed: int = 0,
+) -> dict:
+    """Shared-prefix stream: paged engine (undersized pool) vs dense engine.
+
+    ``pool_frac`` sizes the page pool as a fraction of the dense budget
+    (``slots × max_len`` tokens); ``dense_equiv_slots`` is how many dense
+    slot-caches that same memory would hold.
+    """
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    num_pages = max(
+        slots, int(slots * max_len * pool_frac) // page_size
+    )
+
+    def traffic():
+        return shared_prefix_arrivals(
+            n_requests,
+            rate_hz,
+            seed=seed,
+            num_prefixes=num_prefixes,
+            prefix_len=prefix_len,
+            tokens_mean=tokens_mean,
+            total_max=max_len,
+            vocab=cfg.vocab_size,
+        )
+
+    ecfg = EngineConfig(
+        max_len=max_len,
+        batch_quantum=2,
+        max_batch=slots,
+        page_size=page_size,
+        num_pages=num_pages,
+    )
+    eng_p = Engine(cfg, params, ecfg)
+    paged = run_paged_stream(eng_p, traffic(), slots=slots)
+    eng_p.close()
+
+    # Dense baseline at the FULL budget: teacher-forcing prompts through the
+    # dense batcher needs prompt+generation to fit max_len, which it does by
+    # construction (total_max=max_len above). Requests are rewritten to the
+    # dense batcher's single-seed contract: decode prompt+suffix tokens.
+    eng_d = Engine(cfg, params, ecfg)
+    dense_reqs = []
+    for r in traffic():
+        r.new_tokens = min(r.total_tokens - 1, max_len)
+        r.prompt = ()
+        dense_reqs.append(r)
+    dense = run_continuous_stream(eng_d, dense_reqs, slots=slots)
+    eng_d.close()
+
+    dense_equiv_slots = (num_pages * page_size) // max_len
+    return {
+        "meta": {
+            "arch": cfg.name,
+            "n_requests": n_requests,
+            "rate_hz": rate_hz,
+            "max_len": max_len,
+            "slots": slots,
+            "page_size": page_size,
+            "num_pages": num_pages,
+            "pool_frac": pool_frac,
+            "prefix_len": prefix_len,
+            "num_prefixes": num_prefixes,
+            "seed": seed,
+            # what the paged pool's memory would buy as dense slot-caches
+            "dense_equiv_slots": dense_equiv_slots,
+            "dense_budget_tokens": slots * max_len,
+        },
+        "paged": paged,
+        "dense": dense,
+        "acceptance": {
+            "concurrency_beats_dense_budget": (
+                paged.get("peak_concurrent", 0) > dense_equiv_slots
+            ),
+            "no_recompiles_between_crossings": (
+                paged.get("compiles_after_warmup", 1)
+                <= max(paged.get("bucket_crossings", 0), 1)
+            ),
+            "all_served": paged.get("unserved", 1) == 0,
+        },
+    }

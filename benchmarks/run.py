@@ -13,6 +13,40 @@ import json
 import sys
 
 
+def _kvcache_suite(fast: bool, json_path: str) -> list[str]:
+    from . import kvcache_bench
+
+    res = kvcache_bench.kvcache_comparison(
+        n_requests=16 if fast else 48, slots=4 if fast else 8
+    )
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    p = res["paged"]
+    rows.append(
+        f"kvcache/paged/tok_per_s,{p.get('tok_per_s', 0.0):.1f},"
+        f"p50_ms={p.get('p50_ms', 0.0):.1f};"
+        f"p99_ms={p.get('p99_ms', 0.0):.1f};"
+        f"peak_concurrent={p.get('peak_concurrent')};"
+        f"share_ratio={p.get('share_ratio')};"
+        f"preemptions={p.get('preemptions')};"
+        f"bucket_crossings={p.get('bucket_crossings')};"
+        f"compiles_after_warmup={p.get('compiles_after_warmup')}"
+    )
+    d = res["dense"]
+    rows.append(
+        f"kvcache/dense/tok_per_s,{d.get('tok_per_s', 0.0):.1f},"
+        f"p50_ms={d.get('p50_ms', 0.0):.1f};"
+        f"p99_ms={d.get('p99_ms', 0.0):.1f};"
+        f"dense_equiv_slots={res['meta']['dense_equiv_slots']}"
+    )
+    rows.append(
+        f"kvcache/acceptance,0.0,{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"kvcache/json,0.0,written={json_path}")
+    return rows
+
+
 def _serving_suite(fast: bool, json_path: str) -> list[str]:
     from . import hotpath_serving
 
@@ -40,6 +74,7 @@ def main() -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--serving-json", default="BENCH_serving.json")
+    ap.add_argument("--kvcache-json", default="BENCH_kvcache.json")
     args = ap.parse_args()
 
     from . import (
@@ -66,6 +101,7 @@ def main() -> None:
         "collectives": lambda: collectives_bench.run(40 if args.fast else 200),
         "roofline": lambda: roofline_report.run(),
         "serving": lambda: _serving_suite(args.fast, args.serving_json),
+        "kvcache": lambda: _kvcache_suite(args.fast, args.kvcache_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: validate freshly written BENCH_*.json files.
+
+The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
+
+* BENCH_serving.json — the continuous engine must report
+  ``compiles_after_warmup == 0``: once the bucket executable exists, no
+  greedy/sample mix may ever touch the compiler again.
+* BENCH_kvcache.json — the paged engine must (a) keep post-warmup compiles
+  at zero (capacity buckets are AOT-warmed; crossings are pure rebinds),
+  (b) seat more concurrent requests than its pool's memory would buy as
+  dense slot-caches, and (c) serve every request (preempt/defer, never
+  reject).
+
+Usage: python scripts/bench_check.py [BENCH_serving.json BENCH_kvcache.json]
+Missing files are skipped with a warning (suites can be run selectively);
+any present-but-failing contract exits 1.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def check_serving(data: dict) -> list[str]:
+    errors = []
+    cont = data.get("continuous", {})
+    caw = cont.get("compiles_after_warmup")
+    if caw is None:
+        errors.append("serving: continuous report lacks compiles_after_warmup")
+    elif caw > 0:
+        errors.append(
+            f"serving: continuous engine recompiled after warmup "
+            f"(compiles_after_warmup={caw}, must be 0)"
+        )
+    return errors
+
+
+def check_kvcache(data: dict) -> list[str]:
+    errors = []
+    paged = data.get("paged", {})
+    caw = paged.get("compiles_after_warmup")
+    if caw is None:
+        errors.append("kvcache: paged report lacks compiles_after_warmup")
+    elif caw > 0:
+        errors.append(
+            f"kvcache: paged engine recompiled after warmup "
+            f"(compiles_after_warmup={caw}, must be 0 with AOT buckets)"
+        )
+    acc = data.get("acceptance", {})
+    for key in (
+        "concurrency_beats_dense_budget",
+        "no_recompiles_between_crossings",
+        "all_served",
+    ):
+        if not acc.get(key, False):
+            errors.append(f"kvcache: acceptance flag {key!r} is not True")
+    return errors
+
+
+CHECKS = {
+    "BENCH_serving.json": check_serving,
+    "BENCH_kvcache.json": check_kvcache,
+}
+
+
+def main(argv: list[str]) -> int:
+    paths = [pathlib.Path(p) for p in argv] or [
+        pathlib.Path(name) for name in CHECKS
+    ]
+    errors: list[str] = []
+    checked = 0
+    for path in paths:
+        check = CHECKS.get(path.name)
+        if check is None:
+            print(f"[bench_check] no contract for {path.name}, skipping")
+            continue
+        if not path.exists():
+            print(f"[bench_check] WARNING: {path} missing, skipping")
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        errs = check(data)
+        checked += 1
+        if errs:
+            errors.extend(errs)
+        else:
+            print(f"[bench_check] {path.name}: OK")
+    for e in errors:
+        print(f"[bench_check] FAIL: {e}", file=sys.stderr)
+    if checked == 0:
+        print("[bench_check] FAIL: no benchmark JSON found", file=sys.stderr)
+        return 1
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -6,6 +6,10 @@ ops              — jit'd wrappers + KernelBranch (kernel-level BranchChanger)
 ref              — pure-jnp oracles
 """
 
+from .decode_attention import (
+    paged_decode_attention,
+    paged_decode_attention_reference,
+)
 from .ops import (
     KernelBranch,
     decode_attention,
@@ -19,5 +23,7 @@ __all__ = [
     "decode_attention",
     "flash_attention",
     "flash_attention_branchy",
+    "paged_decode_attention",
+    "paged_decode_attention_reference",
     "ssd_chunk",
 ]

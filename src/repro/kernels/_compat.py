@@ -1,0 +1,21 @@
+"""Version-tolerant aliases for the pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+releases; this repo must build against either spelling (the pinned 0.4.x
+toolchain here only has ``TPUCompilerParams``).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+if CompilerParams is None:  # pragma: no cover - unknown future rename
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels._compat for this jax."
+    )
+
+__all__ = ["CompilerParams"]

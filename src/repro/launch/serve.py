@@ -17,12 +17,13 @@ import jax
 
 from repro import models
 from repro.configs import get_config
-from repro.runtime.scheduler import poisson_arrivals
+from repro.runtime.scheduler import poisson_arrivals, shared_prefix_arrivals
 from repro.runtime.serve import (
     Engine,
     EngineConfig,
     run_burst_stream,
     run_continuous_stream,
+    run_paged_stream,
 )
 
 
@@ -51,6 +52,22 @@ def _print_report(rep: dict) -> None:
         if k in rep
     }
     print(f"[serve/{rep['engine']}] cold path: {cold}", flush=True)
+    if rep.get("engine") == "paged":
+        paged = {
+            k: rep[k]
+            for k in (
+                "pool_pages",
+                "pages_in_use_peak",
+                "peak_concurrent",
+                "share_ratio",
+                "overcommit_ratio",
+                "preemptions",
+                "bucket_crossings",
+                "cow_copies",
+            )
+            if k in rep
+        }
+        print(f"[serve/paged] kvcache: {paged}", flush=True)
 
 
 def main(argv: list[str] | None = None) -> dict:
@@ -67,8 +84,17 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous-batching slots (0 = engine max_batch)")
-    ap.add_argument("--engine", choices=("continuous", "burst", "both"),
+    ap.add_argument("--engine",
+                    choices=("continuous", "burst", "paged", "both", "all"),
                     default="both")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="paged engine: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="paged engine: pool pages (0 = dense-equivalent)")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="paged engine: shared prompt prefix length")
+    ap.add_argument("--num-prefixes", type=int, default=3,
+                    help="paged engine: number of distinct shared prefixes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -88,7 +114,13 @@ def main(argv: list[str] | None = None) -> dict:
             f"(e.g. olmo-1b)."
         )
     params = models.init_params(cfg, jax.random.PRNGKey(0))
-    ecfg = EngineConfig(max_len=args.max_len, batch_quantum=2, max_batch=8)
+    ecfg = EngineConfig(
+        max_len=args.max_len,
+        batch_quantum=2,
+        max_batch=8,
+        page_size=args.page_size,
+        num_pages=args.num_pages,
+    )
 
     def traffic(seed: int):
         return poisson_arrivals(
@@ -101,16 +133,35 @@ def main(argv: list[str] | None = None) -> dict:
             vocab=cfg.vocab_size,
         )
 
+    def prefix_traffic(seed: int):
+        return shared_prefix_arrivals(
+            args.requests,
+            args.rate,
+            seed=seed,
+            num_prefixes=args.num_prefixes,
+            prefix_len=args.prefix_len,
+            tokens_mean=args.tokens_mean,
+            total_max=args.max_len,
+            sample_frac=args.sample_frac,
+            vocab=cfg.vocab_size,
+        )
+
     reports = {}
-    if args.engine in ("continuous", "both"):
+    if args.engine in ("continuous", "both", "all"):
         eng = Engine(cfg, params, ecfg)
         reports["continuous"] = run_continuous_stream(
             eng, traffic(args.seed), slots=args.slots or None
         )
         eng.close()
-    if args.engine in ("burst", "both"):
+    if args.engine in ("burst", "both", "all"):
         eng = Engine(cfg, params, ecfg)
         reports["burst"] = run_burst_stream(eng, traffic(args.seed))
+        eng.close()
+    if args.engine in ("paged", "all"):
+        eng = Engine(cfg, params, ecfg)
+        reports["paged"] = run_paged_stream(
+            eng, prefix_traffic(args.seed), slots=args.slots or None
+        )
         eng.close()
 
     if args.json:

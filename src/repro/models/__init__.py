@@ -1,21 +1,27 @@
 """Model substrate: pure-functional layers, blocks, and LM assembly."""
 
 from .model import (
+    copy_cache_pages,
     decode_step,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
     input_specs,
     loss_fn,
+    paged_decode_step,
     prefill,
 )
 
 __all__ = [
+    "copy_cache_pages",
     "decode_step",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "init_params",
     "input_specs",
     "loss_fn",
+    "paged_decode_step",
     "prefill",
 ]

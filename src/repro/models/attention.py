@@ -194,6 +194,39 @@ def attention(
 
 
 # -------------------------------------------------------------------- decode
+def _decode_sdpa_rows(
+    cfg: ArchConfig,
+    p: dict,
+    q: jax.Array,
+    keys: jax.Array,
+    vals: jax.Array,
+    pos: jax.Array,
+    *,
+    local: bool,
+) -> jax.Array:
+    """Per-row masked SDPA tail shared by dense per-row decode and paged
+    decode: q [B,1,H,dh]; keys/vals [B,L,KH,dh] (each row's *logical* cache
+    view — dense rows or gathered pages); pos i32[B]. One implementation so
+    the paged path's bit-for-bit-equals-dense guarantee (DESIGN.md §9) can't
+    drift. Returns the projected output [B,1,D]."""
+    b = q.shape[0]
+    qg = _group(cfg, q)  # [B,1,KH,G,dh]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scores = (
+        jnp.einsum("bqhgd,bkhd->bhgqk", qg, keys).astype(jnp.float32) * scale
+    )
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    ki = jnp.arange(keys.shape[1])
+    ok = ki[None, :] <= pos[:, None]  # [B,L]
+    if local and cfg.sliding_window is not None:
+        ok &= ki[None, :] > pos[:, None] - cfg.sliding_window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(vals.dtype)
+    og = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vals)
+    o = og.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
 def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
     dt = dtype_of(cfg)
     shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
@@ -264,21 +297,90 @@ def decode_attention(
     else:
         ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    if per_row:
+        return (
+            _decode_sdpa_rows(cfg, p, q, ck, cv, pos, local=local),
+            {"k": ck, "v": cv},
+        )
     qg = _group(cfg, q)  # [B,1,KH,G,dh]
     scale = 1.0 / np.sqrt(cfg.head_dim)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck).astype(jnp.float32) * scale
     scores = softcap(scores, cfg.attn_logit_softcap)
-    if per_row:
-        ok = ki[None, :] <= pos[:, None]  # [B,S]
-        if local and cfg.sliding_window is not None:
-            ok &= ki[None, :] > pos[:, None] - cfg.sliding_window
-        scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
-    else:
-        ok = ki <= pos
-        if local and cfg.sliding_window is not None:
-            ok &= ki > pos - cfg.sliding_window
-        scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
+    ok = ki <= pos
+    if local and cfg.sliding_window is not None:
+        ok &= ki > pos - cfg.sliding_window
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[None, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
     og = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv)
     o = og.reshape(b, 1, cfg.num_heads, cfg.head_dim)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), {"k": ck, "v": cv}
+
+
+# ------------------------------------------------------------- paged decode
+def init_paged_kv_cache(
+    cfg: ArchConfig, num_pages: int, page_size: int
+) -> dict:
+    """Pooled KV pages shared by every request (DESIGN.md §9).
+
+    ``num_pages`` counts *total* physical pages including the reserved null
+    page 0 (``kvcache.PagePool(n, ps)`` needs ``n + 1`` here). Unlike the
+    dense cache there is no batch axis: concurrency is bounded by pages, not
+    by ``B × max_len``.
+    """
+    dt = dtype_of(cfg)
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def paged_decode_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    block_tables: jax.Array,
+    *,
+    local: bool,
+) -> tuple[jax.Array, dict]:
+    """One-token decode through a paged KV cache.
+
+    x: [B,1,D]; cache k/v: [P, page_size, KH, dh] (pooled pages);
+    ``block_tables``: i32[B, pages_bucket] page ids mapping each row's
+    logical positions onto physical pages (0 = the null page); ``pos``:
+    i32[B] per-row positions.
+
+    The write is a scatter into ``pages[bt[b, pos//ps], pos%ps]``; the hot
+    loop never checks capacity — the table's width (``pages_bucket``) is a
+    compile-time constant, and growing past it is a cold-path rebind to the
+    next bucket's executable (DESIGN.md §9). Inactive slots carry all-null
+    tables so their writes land in the null page, which no live table
+    references. The read is a page gather; positions past ``pos`` (incl.
+    whatever garbage the null page holds) are masked exactly like the dense
+    per-row path, so paged and dense decode agree bit-for-bit.
+
+    On TPU the gather+SDPA lowers to ``kernels.paged_decode_attention``
+    (block-table indirection in the index map); this pure-jax path is its
+    oracle and the CPU/dry-run implementation.
+    """
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    num_pages, ps = cache["k"].shape[:2]
+    pages_bucket = bt.shape[1]
+    positions = pos[:, None]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint(q, "batch", None, None, None)
+    # ---- write: scatter the new K/V row into each request's current page
+    page_idx = jnp.clip(pos // ps, 0, pages_bucket - 1)
+    wpage = jnp.take_along_axis(bt, page_idx[:, None], axis=1)[:, 0]
+    woff = pos % ps
+    ck = cache["k"].at[wpage, woff].set(k[:, 0])
+    cv = cache["v"].at[wpage, woff].set(v[:, 0])
+    # ---- read: gather each request's pages into its logical view
+    seq = pages_bucket * ps
+    gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    return (
+        _decode_sdpa_rows(cfg, p, q, gk, gv, pos, local=local),
+        {"k": ck, "v": cv},
+    )

@@ -115,6 +115,54 @@ def block_prefill(
     return x, cache
 
 
+def block_paged_cache_init(
+    cfg: ArchConfig, slot: int, num_pages: int, page_size: int
+) -> dict:
+    """Per-slot paged cache entry (attention mixers only, DESIGN.md §9)."""
+    mixer = cfg.mixer_at(slot)
+    if not mixer.startswith("attn"):
+        raise ValueError(
+            f"{cfg.name}: slot {slot} mixer {mixer!r} has recurrent state; "
+            f"the paged KV path supports attention-only stacks."
+        )
+    return attn.init_paged_kv_cache(cfg, num_pages, page_size)
+
+
+def block_paged_decode(
+    cfg: ArchConfig,
+    slot: int,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    pos: jax.Array,
+    block_tables: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, dict]:
+    """Single-token block step through the paged KV cache (DESIGN.md §9)."""
+    mixer = cfg.mixer_at(slot)
+    h = norm_apply(cfg, p["norm1"], x)
+    if not mixer.startswith("attn"):
+        raise ValueError(
+            f"{cfg.name}: slot {slot} mixer {mixer!r}: paged decode is "
+            f"attention-only (see block_paged_cache_init)."
+        )
+    h, cache = attn.paged_decode_attention(
+        cfg, p["attn"], h, cache, pos, block_tables,
+        local=(mixer == "attn_local"),
+    )
+    x = x + h
+    mlp = cfg.mlp_at(slot)
+    if mlp != "none":
+        h = norm_apply(cfg, p["norm2"], x)
+        if mlp == "mlp":
+            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
+        else:
+            h, _ = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
+        x = x + h
+    return x, cache
+
+
 def block_decode(
     cfg: ArchConfig,
     slot: int,

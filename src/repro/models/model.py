@@ -26,6 +26,8 @@ from .blocks import (
     block_cache_init,
     block_decode,
     block_init,
+    block_paged_cache_init,
+    block_paged_decode,
     block_prefill,
 )
 from .layers import dtype_of, embed_apply, embed_init, head_apply, head_init, norm_init
@@ -210,6 +212,70 @@ def decode_step(
     x = norm_apply(cfg, params["final_norm"], x)
     logits = head_apply(cfg, params["head"], params["embed"], x[:, -1])
     return logits, list(new_cache)
+
+
+def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int) -> list:
+    """Pooled paged KV cache, stacked per period slot (DESIGN.md §9).
+
+    ``num_pages`` includes the reserved null page 0. No batch axis: the same
+    physical pages back every request via block tables, which is what lets
+    shared prefixes dedupe and concurrency overcommit the dense ``B×max_len``
+    bound. Attention-only stacks (SSM state is per-slot, not pageable).
+    """
+    p = cfg.period
+    m = cfg.num_layers // p
+    caches = []
+    for slot in range(p):
+        one = block_paged_cache_init(cfg, slot, num_pages, page_size)
+        caches.append(jax.tree.map(lambda t: jnp.stack([t] * m), one))
+    return caches
+
+
+def paged_decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    pos: jax.Array,
+    block_tables: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """One token for the whole stack through the paged KV cache.
+
+    inputs: [B,1] tokens or [B,1,D] embeddings; pos: [B] int32 per-row
+    positions; block_tables: i32[B, pages_bucket] page ids (DESIGN.md §9).
+    Returns (logits [B,V], new cache).
+    """
+    x = embed_apply(cfg, params["embed"], inputs)
+
+    def body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = []
+        for slot in range(cfg.period):
+            x, c = block_paged_decode(
+                cfg, slot, slot_params[slot], x, slot_caches[slot], pos,
+                block_tables, moe_policy=moe_policy,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = head_apply(cfg, params["head"], params["embed"], x[:, -1])
+    return logits, list(new_cache)
+
+
+def copy_cache_pages(cache: list, src: jax.Array, dst: jax.Array) -> list:
+    """Copy one physical page's contents (every layer) — the device half of
+    copy-on-write (``kvcache.BlockTable.ensure_writable``). Cold path only;
+    jit once per engine with donation so it is a cheap in-place scatter."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    # leaves are [m, P, page_size, KH, dh]: page axis is 1
+    return jax.tree.map(lambda t: t.at[:, dst].set(t[:, src]), cache)
 
 
 def pad_cache(cfg: ArchConfig, cache: list, max_len: int) -> list:

@@ -1,0 +1,422 @@
+"""Paged KV cache: page pool, block tables, and prefix sharing (DESIGN.md §9).
+
+The dense serving cache gives every slot a private ``[max_len]`` KV buffer, so
+memory — not compute — caps concurrency. This module replaces that with the
+classic paged design: physical KV storage is a pool of fixed-size pages
+(``[num_pages, page_size, KH, dh]`` on device), and each request owns a
+*block table* — an ordered list of page ids — that maps its logical token
+positions onto physical pages.
+
+Everything in this module is **host-side cold-path bookkeeping**: the hot loop
+only ever sees the packed ``[S, pages_bucket]`` int32 block-table array. The
+capacity a request needs (its page count, rounded to a bucket) is a
+*semi-static dispatch key* (DESIGN.md §2/§9): it changes rarely — once per
+``pages_bucket * page_size`` generated tokens — relative to how often the
+decode step executes, so the bucket picks the executable on the cold path and
+the hot loop never re-checks capacity.
+
+Components:
+
+* ``PagePool``     — free list + per-page reference counts. Page 0 is the
+                     reserved *null page*: inactive slots' writes land there,
+                     it is never allocated, and no live block table points at
+                     it.
+* ``BlockTable``   — a request's page list + logical length. ``fork`` shares
+                     every page (ref++) for cheap prefix cloning;
+                     ``ensure_writable`` implements copy-on-write when a
+                     shared page is about to be written.
+* ``PrefixCache``  — a trie over *full pages* of prompt tokens mapping token
+                     chunks to already-populated physical pages (vLLM-style
+                     automatic prefix caching). Matching requests attach to
+                     the shared pages instead of recomputing the prefix;
+                     unreferenced cached pages are evicted LRU-first when the
+                     pool runs dry.
+
+Device-side page *contents* are moved by a ``copy_page`` callback supplied by
+the engine (a single jitted gather/scatter, see ``models.copy_cache_pages``)
+so this module stays importable without a device.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional, Sequence
+
+NULL_PAGE = 0
+
+
+class KVCacheError(RuntimeError):
+    """Raised for page-accounting misuse (double free, foreign page, ...)."""
+
+
+# ------------------------------------------------------------------ page pool
+@dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    cow_copies: int = 0
+    prefix_hits: int = 0  # pages attached from the prefix cache
+    prefix_inserts: int = 0
+    prefix_evictions: int = 0
+    peak_in_use: int = 0
+    alloc_failures: int = 0
+
+
+class PagePool:
+    """Fixed-size page allocator with reference counts.
+
+    ``num_pages`` counts *allocatable* pages; the device cache holds
+    ``num_pages + 1`` physical pages because page 0 is the reserved null page
+    (never allocated, target of inactive-slot writes).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1:
+            raise KVCacheError(f"num_pages must be >= 1, got {num_pages}")
+        if page_size < 1:
+            raise KVCacheError(f"page_size must be >= 1, got {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # page ids 1..num_pages are allocatable; 0 is the null page
+        self._free: deque[int] = deque(range(1, num_pages + 1))
+        self._ref = [0] * (num_pages + 1)
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------ accounting
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def total_tokens(self) -> int:
+        """Token capacity of the allocatable pool."""
+        return self.num_pages * self.page_size
+
+    def refcount(self, pid: int) -> int:
+        self._check_pid(pid)
+        return self._ref[pid]
+
+    def check(self) -> None:
+        """Invariant: every page is exactly free or ref'd, never both/neither."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise KVCacheError("free list contains duplicates")
+        for pid in range(1, self.num_pages + 1):
+            if pid in free and self._ref[pid] != 0:
+                raise KVCacheError(f"page {pid} free but ref={self._ref[pid]}")
+            if pid not in free and self._ref[pid] == 0:
+                raise KVCacheError(f"page {pid} leaked (ref=0, not free)")
+        if self._ref[NULL_PAGE] != 0:
+            raise KVCacheError("null page acquired a refcount")
+
+    def _check_pid(self, pid: int) -> None:
+        if not 0 <= pid <= self.num_pages:
+            raise KVCacheError(
+                f"page id {pid} outside pool [0, {self.num_pages}]"
+            )
+
+    # ------------------------------------------------------------- alloc/free
+    def alloc(self) -> Optional[int]:
+        """Pop a free page with ref=1, or None when the pool is dry."""
+        if not self._free:
+            self.stats.alloc_failures += 1
+            return None
+        pid = self._free.popleft()
+        self._ref[pid] = 1
+        self.stats.allocs += 1
+        self.stats.peak_in_use = max(self.stats.peak_in_use, self.pages_in_use)
+        return pid
+
+    def incref(self, pid: int) -> None:
+        self._check_pid(pid)
+        if pid == NULL_PAGE:
+            raise KVCacheError("cannot take a reference on the null page")
+        if self._ref[pid] == 0:
+            raise KVCacheError(f"incref on free page {pid}")
+        self._ref[pid] += 1
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        self._check_pid(pid)
+        if pid == NULL_PAGE:
+            raise KVCacheError("cannot release the null page")
+        if self._ref[pid] == 0:
+            raise KVCacheError(f"double free of page {pid}")
+        self._ref[pid] -= 1
+        if self._ref[pid] == 0:
+            self._free.append(pid)
+            self.stats.frees += 1
+            return True
+        return False
+
+
+# ---------------------------------------------------------------- block table
+@dataclass
+class BlockTable:
+    """One request's page mapping: ``pages[i]`` holds logical tokens
+    ``[i*page_size, (i+1)*page_size)``; ``num_tokens`` is the logical length
+    (== the request's next write position)."""
+
+    pool: PagePool
+    pages: list[int] = field(default_factory=list)
+    num_tokens: int = 0
+
+    @property
+    def capacity(self) -> int:
+        return len(self.pages) * self.pool.page_size
+
+    @property
+    def num_pages(self) -> int:
+        return len(self.pages)
+
+    def page_index(self, pos: int) -> int:
+        return pos // self.pool.page_size
+
+    def append_page(self) -> bool:
+        """Grow capacity by one freshly-allocated page. False on OOM."""
+        pid = self.pool.alloc()
+        if pid is None:
+            return False
+        self.pages.append(pid)
+        return True
+
+    def ensure_capacity(self, pos: int) -> bool:
+        """Make sure the page holding ``pos`` exists. False on OOM."""
+        while self.page_index(pos) >= len(self.pages):
+            if not self.append_page():
+                return False
+        return True
+
+    def ensure_writable(
+        self, pos: int, copy_page: Callable[[int, int], None] | None = None
+    ) -> bool:
+        """Copy-on-write: the page holding ``pos`` must be exclusively owned
+        before the hot loop scatters new K/V into it. Returns False on OOM.
+
+        ``copy_page(src, dst)`` moves device-side page contents; None skips
+        the data move (host-only tests).
+        """
+        if not self.ensure_capacity(pos):
+            return False
+        idx = self.page_index(pos)
+        pid = self.pages[idx]
+        if self.pool.refcount(pid) == 1:
+            return True
+        new = self.pool.alloc()
+        if new is None:
+            return False
+        if copy_page is not None:
+            copy_page(pid, new)
+        self.pool.decref(pid)
+        self.pages[idx] = new
+        self.pool.stats.cow_copies += 1
+        return True
+
+    def fork(self) -> "BlockTable":
+        """Clone sharing every physical page (ref++); writes then COW."""
+        for pid in self.pages:
+            self.pool.incref(pid)
+        return BlockTable(
+            pool=self.pool, pages=list(self.pages), num_tokens=self.num_tokens
+        )
+
+    def release(self) -> None:
+        """Drop this table's references; the table must not be used after."""
+        for pid in self.pages:
+            self.pool.decref(pid)
+        self.pages = []
+        self.num_tokens = 0
+
+
+# --------------------------------------------------------------- prefix trie
+class _TrieNode:
+    __slots__ = ("chunk", "page", "children", "parent", "last_used")
+
+    def __init__(
+        self,
+        chunk: tuple[int, ...] | None,
+        page: int,
+        parent: "_TrieNode | None",
+    ):
+        self.chunk = chunk
+        self.page = page
+        self.children: dict[tuple[int, ...], _TrieNode] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class PrefixCache:
+    """Trie over full-page prompt chunks -> populated physical pages.
+
+    Each node pins its page with one pool reference (cached-but-idle pages
+    stay resident until evicted). ``match`` walks the trie and *additionally*
+    increfs each matched page on behalf of the attaching request, so a cached
+    page referenced by R live requests has refcount R+1.
+
+    Only *full* pages are cached: a partially-filled page is still being
+    written by its owner and can never be safely shared (this is what makes
+    writes COW-free on the prompt path — shared pages are read-only by
+    construction).
+    """
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self._root = _TrieNode(None, NULL_PAGE, None)
+        self._clock = 0
+        self._nodes = 0
+
+    def __len__(self) -> int:
+        return self._nodes
+
+    @property
+    def cached_pages(self) -> int:
+        return self._nodes
+
+    def _chunks(self, tokens: Sequence[int]) -> list[tuple[int, ...]]:
+        ps = self.pool.page_size
+        n_full = len(tokens) // ps
+        return [
+            tuple(tokens[i * ps : (i + 1) * ps]) for i in range(n_full)
+        ]
+
+    # ----------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int]) -> tuple[list[int], int]:
+        """Longest full-page prefix of ``tokens`` already cached.
+
+        Returns ``(page_ids, matched_tokens)``; every returned page has been
+        incref'd for the caller (release via ``BlockTable.release`` once the
+        pages are adopted into a table, or ``pool.decref`` directly).
+        """
+        self._clock += 1
+        node = self._root
+        pages: list[int] = []
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None:
+                break
+            child.last_used = self._clock
+            self.pool.incref(child.page)
+            pages.append(child.page)
+            node = child
+        self.pool.stats.prefix_hits += len(pages)
+        return pages, len(pages) * self.pool.page_size
+
+    # ---------------------------------------------------------------- insert
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
+        """Register populated full pages for ``tokens``; returns #inserted.
+
+        ``pages[i]`` must hold the KV of chunk i. Chunks already present are
+        skipped (first writer wins — the existing page stays canonical).
+        """
+        self._clock += 1
+        chunks = self._chunks(tokens)
+        if len(pages) < len(chunks):
+            raise KVCacheError(
+                f"insert: {len(chunks)} full chunks but {len(pages)} pages"
+            )
+        node = self._root
+        inserted = 0
+        for chunk, pid in zip(chunks, pages):
+            child = node.children.get(chunk)
+            if child is None:
+                if pid == NULL_PAGE:
+                    raise KVCacheError("cannot cache the null page")
+                self.pool.incref(pid)  # the trie's own pin
+                child = _TrieNode(chunk, pid, node)
+                node.children[chunk] = child
+                self._nodes += 1
+                inserted += 1
+                self.pool.stats.prefix_inserts += 1
+            child.last_used = self._clock
+            node = child
+        return inserted
+
+    # ----------------------------------------------------------------- evict
+    def evict(self, want_pages: int = 1) -> int:
+        """Drop up to ``want_pages`` *idle* cached pages (LRU leaves first).
+
+        A node is evictable when it has no children and its page's only
+        remaining reference is the trie's pin (no live request shares it).
+        Returns the number of pages actually freed back to the pool.
+
+        One trie walk total: candidates are heaped up front, and evicting a
+        leaf only re-examines its parent (which may have just become a
+        leaf) — O(nodes + freed·log nodes), not O(nodes²).
+        """
+        if want_pages <= 0:
+            return 0
+
+        def evictable(n: _TrieNode) -> bool:
+            return not n.children and self.pool.refcount(n.page) == 1
+
+        heap = [
+            (n.last_used, id(n), n) for n in self._iter_nodes() if evictable(n)
+        ]
+        heapq.heapify(heap)
+        freed = 0
+        while freed < want_pages and heap:
+            _, _, victim = heapq.heappop(heap)
+            if not evictable(victim):  # stale entry (child added since)
+                continue
+            parent = victim.parent
+            assert parent is not None and victim.chunk is not None
+            del parent.children[victim.chunk]
+            self._nodes -= 1
+            self.pool.decref(victim.page)
+            self.pool.stats.prefix_evictions += 1
+            freed += 1
+            if parent is not self._root and evictable(parent):
+                heapq.heappush(heap, (parent.last_used, id(parent), parent))
+        return freed
+
+    def _iter_nodes(self):
+        stack = list(self._root.children.values())
+        while stack:
+            n = stack.pop()
+            yield n
+            stack.extend(n.children.values())
+
+    def clear(self) -> int:
+        """Release every cached page (pool drain helper)."""
+        total = 0
+        while True:
+            freed = self.evict(self._nodes or 1)
+            total += freed
+            if freed == 0:
+                return total
+
+
+# ------------------------------------------------------------- share metrics
+def sharing_report(tables: Iterable[BlockTable], pool: PagePool) -> dict:
+    """Logical vs physical page accounting across live block tables.
+
+    ``share_ratio`` = logical pages referenced / distinct physical pages —
+    1.0 means no sharing; 2.0 means every physical page backs two requests
+    on average. ``logical_tokens`` > ``pool.total_tokens`` is the overcommit
+    the dense design cannot express.
+    """
+    logical_pages = 0
+    logical_tokens = 0
+    physical: set[int] = set()
+    for t in tables:
+        logical_pages += len(t.pages)
+        logical_tokens += t.num_tokens
+        physical.update(t.pages)
+    phys = len(physical)
+    return {
+        "logical_pages": logical_pages,
+        "physical_pages": phys,
+        "logical_tokens": logical_tokens,
+        "pool_tokens": pool.total_tokens,
+        "pages_in_use": pool.pages_in_use,
+        "share_ratio": (logical_pages / phys) if phys else 1.0,
+        "overcommit_ratio": (
+            logical_tokens / pool.total_tokens if pool.total_tokens else 0.0
+        ),
+    }

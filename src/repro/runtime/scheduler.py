@@ -17,6 +17,10 @@ module owns everything that happens *around* it:
   completion without the hot loop ever recompiling, rebinding, or branching
   on mode — the cold path is touched exactly once per bucket size, at
   warmup.
+* ``PagedContinuousBatcher`` — the same slot machinery against a paged KV
+  pool (``runtime.kvcache``, DESIGN.md §9): block tables instead of dense
+  per-slot caches, prefix sharing, preemption on pool exhaustion, and the
+  capacity bucket as a semi-static dispatch key.
 
 The batcher is model-agnostic: it drives an abstract ``step`` callable and
 leaves compilation to the engine's ``Dispatcher`` (core/dispatch.py).
@@ -34,7 +38,7 @@ from typing import Any, Callable, Iterable, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bucket_multiple
+from repro.core import bucket_multiple, bucket_pow2
 
 GREEDY, SAMPLE = 0, 1
 
@@ -42,7 +46,14 @@ GREEDY, SAMPLE = 0, 1
 # ------------------------------------------------------------------ requests
 @dataclass
 class Request:
-    """One decode request: ``new_tokens`` tokens from ``first_token`` on."""
+    """One decode request: ``new_tokens`` tokens from ``first_token`` on.
+
+    ``prompt`` (optional) is a token prefix that is teacher-forced before
+    generation starts — the paged engine dedupes common prompt prefixes
+    through the ``kvcache.PrefixCache`` (DESIGN.md §9). Empty prompt means
+    the classic single-seed-token request (``first_token``). ``priority``
+    orders preemption under pool pressure: lower values are evicted first.
+    """
 
     rid: int
     new_tokens: int
@@ -50,10 +61,26 @@ class Request:
     temperature: float = 1.0
     first_token: int = 0
     arrival_s: float = 0.0
+    prompt: tuple = ()
+    priority: int = 0
     # Filled by the runtime:
     tokens: list = field(default_factory=list)
     t_admit: float | None = None
     t_done: float | None = None
+    preemptions: int = 0
+
+    def __post_init__(self) -> None:
+        if self.prompt:
+            self.first_token = int(self.prompt[0])
+
+    @property
+    def effective_prompt(self) -> tuple:
+        return self.prompt if self.prompt else (self.first_token,)
+
+    @property
+    def total_tokens(self) -> int:
+        """Logical KV length at completion: prompt + generated tokens."""
+        return len(self.effective_prompt) + self.new_tokens
 
     @property
     def done(self) -> bool:
@@ -100,6 +127,78 @@ def poisson_arrivals(
                 temperature=temperature,
                 first_token=int(rng.integers(vocab)) if vocab else 0,
                 arrival_s=t,
+            )
+        )
+    return reqs
+
+
+def shared_prefix_arrivals(
+    n: int,
+    rate_hz: float,
+    *,
+    seed: int = 0,
+    num_prefixes: int = 4,
+    prefix_len: int = 32,
+    suffix_len_mean: float = 4.0,
+    tokens_mean: float = 8.0,
+    tokens_max: int | None = None,
+    total_max: int | None = None,
+    heavy_frac: float = 0.2,
+    heavy_mult: float = 6.0,
+    sample_frac: float = 0.5,
+    temperature: float = 1.0,
+    vocab: int = 256,
+    priorities: Sequence[int] = (0, 1),
+) -> list[Request]:
+    """Shared-prefix Poisson traffic with long-tail decode lengths.
+
+    The paged-KV scenario family (DESIGN.md §9): every request's prompt is
+    one of ``num_prefixes`` common prefixes (system prompts / few-shot
+    headers) plus a short private suffix, and decode lengths mix a geometric
+    body with a heavy tail (``heavy_frac`` of requests draw from a
+    ``heavy_mult``× longer geometric). Dense caches must provision
+    ``slots × max_len`` for this; paged caches share the prefix pages and
+    only the tail pays for its length.
+    """
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    if prefix_len < 1:
+        raise ValueError(f"prefix_len must be >= 1, got {prefix_len}")
+    if total_max is not None and prefix_len > total_max - 2:
+        raise ValueError(
+            f"prefix_len={prefix_len} leaves no room for generation under "
+            f"total_max={total_max}"
+        )
+    rng = np.random.default_rng(seed)
+    prefixes = [
+        tuple(int(t) for t in rng.integers(0, vocab, size=prefix_len))
+        for _ in range(num_prefixes)
+    ]
+    reqs = []
+    t = 0.0
+    for rid in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        mean = tokens_mean * (
+            heavy_mult if rng.random() < heavy_frac else 1.0
+        )
+        nt = int(rng.geometric(min(1.0, 1.0 / max(mean, 1.0))))
+        if tokens_max is not None:
+            nt = min(nt, tokens_max)
+        ns = int(rng.geometric(min(1.0, 1.0 / max(suffix_len_mean, 1.0))))
+        if total_max is not None:
+            # keep prompt + generation inside a request's capacity cap
+            nt = max(1, min(nt, total_max - prefix_len - 1))
+            ns = max(0, min(ns, total_max - prefix_len - nt))
+        suffix = tuple(int(x) for x in rng.integers(0, vocab, size=ns))
+        reqs.append(
+            Request(
+                rid=rid,
+                new_tokens=nt,
+                greedy=bool(rng.random() >= sample_frac),
+                temperature=temperature,
+                arrival_s=t,
+                prompt=prefixes[int(rng.integers(num_prefixes))] + suffix,
+                priority=int(priorities[int(rng.integers(len(priorities)))]),
             )
         )
     return reqs
@@ -330,6 +429,297 @@ class ContinuousBatcher:
                 self._slots[s] = None
                 self._active[s] = False
         self._tok = nxt[:, None].astype(np.int32)
+        self.stats.finished += len(finished)
+        return finished
+
+
+# ------------------------------------------------- paged continuous batching
+@dataclass
+class PagedBatcherStats(BatcherStats):
+    preemptions: int = 0
+    bucket_crossings: int = 0
+    starved_admissions: int = 0  # distinct requests deferred for pages
+    rejected_oversize: int = 0  # requests that can never fit the page cap
+    prompt_tokens: int = 0  # teacher-forced (not emitted) steps
+    shared_tokens: int = 0  # prompt tokens skipped via the prefix cache
+
+
+class PagedContinuousBatcher:
+    """Continuous batching against a paged KV pool (DESIGN.md §9).
+
+    The slot-state machinery mirrors ``ContinuousBatcher``; what changes is
+    capacity. Slots no longer own ``[max_len]`` cache rows — each active
+    request owns a ``kvcache.BlockTable`` over the shared ``PagePool``, and
+    the hot-loop executable is keyed by ``("cb", slots, pages_bucket)``
+    where ``pages_bucket`` is the (bucketed) widest block table currently
+    active. The bucket moves rarely — once per ``page_size × bucket`` tokens
+    — so the capacity check lives entirely on the cold path: ``dispatch_fn``
+    (the engine's Dispatcher) returns the bucket's executable and the hot
+    loop calls it directly.
+
+    Admission walks the ``PrefixCache``: prompt pages already populated by an
+    earlier request are adopted by reference (ref++), the teacher-forcing
+    cursor starts after them, and completed prompts insert their full pages
+    back into the trie. On pool exhaustion the batcher first evicts idle
+    cached pages, then preempts the lowest-priority active request (its
+    pages recycle; the request re-queues and restarts) — admission never
+    hard-rejects.
+    """
+
+    def __init__(
+        self,
+        *,
+        dispatch_fn: Callable[[int], Callable],
+        pool,
+        prefix_cache,
+        cache: Any,
+        num_slots: int,
+        max_pages_per_req: int,
+        cache_copy: Callable | None = None,
+        seed: int = 0,
+    ):
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self._dispatch = dispatch_fn
+        self.pool = pool
+        self.prefix = prefix_cache
+        self._cache = cache  # pooled device pages, donated through steps
+        self.num_slots = num_slots
+        self.max_pages_per_req = max_pages_per_req
+        # device half of COW: cache_copy(cache, src, dst) -> cache (e.g. a
+        # jitted models.copy_cache_pages); None skips the data move.
+        self._cache_copy = cache_copy
+        self._rng = np.random.default_rng(seed)
+        self._slots: list[Request | None] = [None] * num_slots
+        self._tables: list[Any] = [None] * num_slots
+        self._cursor = np.zeros(num_slots, np.int64)  # next prompt index fed
+        self._tok = np.zeros((num_slots, 1), np.int32)
+        self._pos = np.zeros(num_slots, np.int32)
+        self._active = np.zeros(num_slots, bool)
+        self._temps = np.ones(num_slots, np.float32)
+        self._greedy = np.ones(num_slots, bool)
+        self._keys = self._rng.integers(
+            0, 2**32, size=(num_slots, 2), dtype=np.uint32
+        )
+        self._prompt_cached = np.zeros(num_slots, bool)
+        self._pages_bucket = 1
+        self.preempted: list[Request] = []
+        self.rejected: list[Request] = []  # oversized: can never be seated
+        self._starved_rids: set[int] = set()
+        self.stats = PagedBatcherStats()
+
+    # ------------------------------------------------------------ properties
+    @property
+    def active_count(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.num_slots - self.active_count
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active.any())
+
+    @property
+    def pages_bucket(self) -> int:
+        return self._pages_bucket
+
+    def live_tables(self):
+        return [t for t in self._tables if t is not None]
+
+    # ------------------------------------------------------------- cold path
+    def _reclaim_pages(self, want: int, requester_priority: int) -> bool:
+        """Free >= ``want`` pages: evict idle prefix pages, then preempt
+        strictly-lower-priority requests. False if pressure can't be met."""
+        if self.pool.pages_free >= want:
+            return True
+        self.prefix.evict(want - self.pool.pages_free)
+        while self.pool.pages_free < want:
+            victim = self._pick_victim(requester_priority)
+            if victim is None:
+                return False
+            self._preempt_slot(victim)
+            self.prefix.evict(want - self.pool.pages_free)
+        return True
+
+    def _pick_victim(self, requester_priority: int) -> int | None:
+        """Lowest-priority active slot strictly below the requester; ties
+        break toward the most recently admitted (least sunk work)."""
+        best, best_key = None, None
+        for s, req in enumerate(self._slots):
+            if req is None or not self._active[s]:
+                continue
+            if req.priority >= requester_priority:
+                continue
+            key = (req.priority, -(req.t_admit or 0.0))
+            if best_key is None or key < best_key:
+                best, best_key = s, key
+        return best
+
+    def _preempt_slot(self, s: int) -> None:
+        req = self._slots[s]
+        assert req is not None
+        self._tables[s].release()
+        self._tables[s] = None
+        self._slots[s] = None
+        self._active[s] = False
+        req.tokens = []
+        req.t_admit = None
+        req.preemptions += 1
+        self.stats.preemptions += 1
+        self.preempted.append(req)
+
+    def admit(self, requests: Iterable[Request], now: float = 0.0) -> list:
+        """Seat requests in free slots; returns the requests deferred for
+        lack of pages (callers re-queue them — admission never rejects)."""
+        from repro.runtime.kvcache import BlockTable
+
+        deferred: list[Request] = []
+        free = [i for i, r in enumerate(self._slots) if r is None]
+        for req in requests:
+            if not free:
+                raise RuntimeError(
+                    "PagedContinuousBatcher.admit called with no free slot; "
+                    "gate admissions on .free_slots."
+                )
+            prompt = req.effective_prompt
+            need_pages = -(-req.total_tokens // self.pool.page_size)
+            if need_pages > self.max_pages_per_req:
+                # can never fit, at any load: reject this one request rather
+                # than crash the stream (deferring would loop forever)
+                self.stats.rejected_oversize += 1
+                self.rejected.append(req)
+                continue
+            # Prefix-cache walk: adopt already-populated full prompt pages,
+            # but never the page holding the last prompt token — that token
+            # is re-fed to prime generation, and keeping its page private
+            # makes prompt-path writes COW-free (shared pages stay read-only
+            # by construction).
+            pages, matched = self.prefix.match(prompt)
+            usable = min(len(pages), (len(prompt) - 1) // self.pool.page_size)
+            for pid in pages[usable:]:
+                self.pool.decref(pid)
+            pages = pages[:usable]
+            matched = usable * self.pool.page_size
+            table = BlockTable(pool=self.pool, pages=pages,
+                               num_tokens=matched)
+            # first private page: the one the re-fed prompt token writes into
+            if not self._reclaim_pages(1, req.priority) or (
+                not table.ensure_capacity(matched)
+            ):
+                table.release()
+                if req.rid not in self._starved_rids:  # count requests once
+                    self._starved_rids.add(req.rid)
+                    self.stats.starved_admissions += 1
+                deferred.append(req)
+                continue
+            s = free.pop(0)
+            self._slots[s] = req
+            self._tables[s] = table
+            self._cursor[s] = matched
+            self._tok[s, 0] = prompt[matched]
+            self._pos[s] = matched
+            self._active[s] = True
+            self._temps[s] = req.temperature
+            self._greedy[s] = req.greedy
+            self._keys[s] = self._rng.integers(
+                0, 2**32, size=2, dtype=np.uint32
+            )
+            self._prompt_cached[s] = False
+            req.t_admit = now
+            self.stats.admitted += 1
+            self.stats.shared_tokens += matched
+        return deferred
+
+    def _page_upkeep(self) -> None:
+        """Pre-step cold path: every active slot must own a writable page
+        for its current position; growth/COW happens here, never in-loop."""
+        for s, req in enumerate(self._slots):
+            if req is None or not self._active[s]:
+                continue
+            table = self._tables[s]
+            pos = int(self._pos[s])
+            need = table.page_index(pos) + 1 - table.num_pages
+            if need > 0 and not self._reclaim_pages(need, req.priority):
+                # can't grow: preempt the requester itself (lowest standing)
+                self._preempt_slot(s)
+                continue
+            if not table.ensure_writable(pos, self._device_copy_page):
+                self._preempt_slot(s)
+
+    def _device_copy_page(self, src: int, dst: int) -> None:
+        if self._cache_copy is not None:
+            self._cache = self._cache_copy(self._cache, src, dst)
+
+    # -------------------------------------------------------------- hot path
+    def step(self, now: float = 0.0) -> list[Request]:
+        """One decode step for all slots; returns finished requests.
+
+        Cold path first (page upkeep, bucket dispatch — both no-ops on the
+        vast majority of steps), then a single direct executable call.
+        """
+        self._page_upkeep()
+        if not self._active.any():
+            return []
+        bucket = bucket_pow2(
+            max(t.num_pages for t in self.live_tables() if t) or 1,
+            1,
+            self.max_pages_per_req,
+        )
+        if bucket != self._pages_bucket:
+            self.stats.bucket_crossings += 1
+            self._pages_bucket = bucket
+        step = self._dispatch(bucket)  # cold: slot-hit unless bucket moved
+        bt = np.zeros((self.num_slots, bucket), np.int32)  # NULL_PAGE fill
+        for s, table in enumerate(self._tables):
+            if table is not None and self._active[s]:
+                bt[s, : table.num_pages] = table.pages
+        nxt, self._cache, pos, keys = step(
+            self._cache,
+            jnp.asarray(self._tok),
+            jnp.asarray(self._pos),
+            jnp.asarray(bt),
+            jnp.asarray(self._active),
+            jnp.asarray(self._temps),
+            jnp.asarray(self._greedy),
+            jnp.asarray(self._keys),
+        )
+        nxt = np.asarray(nxt)  # blocks until the device step is done
+        self._pos = np.array(pos, np.int32)
+        self._keys = np.array(keys, np.uint32)
+        self.stats.steps += 1
+        finished: list[Request] = []
+        for s, req in enumerate(self._slots):
+            if req is None or not self._active[s]:
+                self.stats.idle_slot_steps += 1
+                continue
+            self.stats.active_slot_steps += 1
+            table = self._tables[s]
+            table.num_tokens = int(self._pos[s])
+            prompt = req.effective_prompt
+            if self._cursor[s] + 1 < len(prompt):
+                # teacher forcing: feed the next prompt token, drop the sample
+                self._cursor[s] += 1
+                self._tok[s, 0] = prompt[self._cursor[s]]
+                self.stats.prompt_tokens += 1
+                continue
+            if not self._prompt_cached[s]:
+                # prompt fully written: publish its full pages for sharing
+                full = len(prompt) // self.pool.page_size
+                if full > 0:
+                    self.prefix.insert(prompt, table.pages[:full])
+                self._prompt_cached[s] = True
+            req.tokens.append(int(nxt[s]))
+            self._tok[s, 0] = nxt[s]
+            self.stats.tokens += 1
+            if req.done:
+                req.t_done = now
+                finished.append(req)
+                table.release()
+                self._tables[s] = None
+                self._slots[s] = None
+                self._active[s] = False
         self.stats.finished += len(finished)
         return finished
 

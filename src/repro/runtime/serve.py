@@ -17,6 +17,13 @@ Two serving modes share one ``core.dispatch.Dispatcher``:
   ``runtime.scheduler.ContinuousBatcher``): one executable per bucket size,
   sampling params packed per-slot *as data*. Requests join and leave
   mid-loop; after warmup the dispatcher's compile counter never moves.
+
+Plus the paged variant (``Engine.paged_continuous()`` →
+``PagedContinuousBatcher``, DESIGN.md §9): KV lives in a shared page pool,
+requests map positions through block tables, and the dispatch key grows a
+third coordinate — ``("cb", slots, pages_bucket)`` — the semi-static
+capacity bucket. All buckets are AOT-warmed (log-sized fan-out), so bucket
+crossings rebind but never compile.
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ from repro.runtime import steps as steps_mod
 from repro.runtime.scheduler import (
     Clock,
     ContinuousBatcher,
+    PagedContinuousBatcher,
     Request,
     RequestQueue,
     form_bursts,
@@ -56,6 +64,11 @@ class EngineConfig:
     # many executables may the compile cache keep?
     hysteresis: int = 1
     cache_capacity: int | None = None
+    # Paged KV cache (DESIGN.md §9): page granularity and pool size
+    # (allocatable pages, excluding the reserved null page). 0 pages means
+    # "dense-equivalent": slots × max_len tokens worth of pages.
+    page_size: int = 16
+    num_pages: int = 0
 
 
 class Engine:
@@ -107,6 +120,8 @@ class Engine:
         ``("cb", slots)`` for the continuous-batching step (mode as data).
         """
         if key[0] == "cb":
+            if len(key) == 3:  # ("cb", slots, pages_bucket): paged decode
+                return self._build_paged_slot_decode(key[1], key[2])
             return self._build_slot_decode(key[1])
         bucket, mode = key
         return self._build_burst_decode(bucket, mode)
@@ -148,6 +163,43 @@ class Engine:
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
         return lowered.compile()
+
+    def _build_paged_slot_decode(self, slots: int, pages_bucket: int) -> Callable:
+        """Executable for the ``("cb", slots, pages_bucket)`` dispatch key.
+
+        Capacity is the semi-static condition here (DESIGN.md §9): the block
+        table's width is baked into the shapes, so the hot loop never checks
+        whether a request fits — outgrowing the bucket re-dispatches on the
+        cold path exactly like a paper branch-direction change.
+        """
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_paged_slot_decode_fn(
+            cfg, moe_policy=ecfg.moe_policy
+        )
+        c_shape = jax.eval_shape(
+            lambda: models.init_paged_cache(
+                cfg, self.pool_pages + 1, ecfg.page_size
+            )
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots, pages_bucket), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
+    @property
+    def pool_pages(self) -> int:
+        """Allocatable page count (excluding the null page)."""
+        if self.ecfg.num_pages > 0:
+            return self.ecfg.num_pages
+        return (self.ecfg.max_batch * self.ecfg.max_len) // self.ecfg.page_size
 
     def set_mode(
         self, *, batch: int, sampling: int = GREEDY, warm: bool = True
@@ -269,6 +321,101 @@ class Engine:
         )
 
 
+    # ---------------------------------------------- paged continuous batching
+    def paged_continuous(
+        self,
+        *,
+        slots: int | None = None,
+        seed: int = 0,
+        warm_all_buckets: bool = True,
+    ) -> PagedContinuousBatcher:
+        """Cold path: build the page pool + prefix cache and warm the
+        capacity buckets; returns a paged batcher (DESIGN.md §9).
+
+        The dispatcher key is ``("cb", slots, pages_bucket)``: one executable
+        per capacity bucket, found/rebound by the hysteresis policy as
+        requests grow. The pooled page cache itself is bucket-independent —
+        a rebind swaps the executable, never the cache.
+
+        ``warm_all_buckets`` precompiles every power-of-two bucket up to the
+        per-request page cap (the paper's AOT warm-everything pattern): the
+        bucket fan-out is log-sized, so a handful of cold compiles at warmup
+        buys a stream with *zero* compiles — every bucket crossing is then a
+        pure slot rebind.
+        """
+        from repro.runtime.kvcache import PagePool, PrefixCache
+
+        if self.cfg.input_kind != "tokens":
+            raise ValueError(
+                f"{self.cfg.name}: continuous batching feeds sampled ids "
+                f"back as inputs and needs a token-input arch."
+            )
+        s = slots or self.ecfg.max_batch
+        ecfg = self.ecfg
+        pool = PagePool(self.pool_pages, ecfg.page_size)
+        prefix = PrefixCache(pool)
+        cache = models.init_paged_cache(
+            self.cfg, self.pool_pages + 1, ecfg.page_size
+        )
+        max_pages_per_req = min(
+            self.pool_pages, -(-ecfg.max_len // ecfg.page_size)
+        )
+
+        def dispatch(pages_bucket: int) -> Callable:
+            exe = self._decode.dispatch(("cb", s, pages_bucket))
+
+            def bound_step(cache, tok, pos, bt, active, temps, greedy, keys):
+                self.stats["hot_calls"] += 1
+                return exe(
+                    self.params, cache, tok, pos, bt, active, temps, greedy,
+                    keys,
+                )
+
+            return bound_step
+
+        if warm_all_buckets:  # AOT warm-everything: log-sized bucket fan-out
+            pb = 1
+            while True:
+                self._decode.build(("cb", s, pb))
+                if pb >= max_pages_per_req:
+                    break
+                pb = min(pb * 2, max_pages_per_req)
+
+        # Dummy-order warming (paper §4.3) of the smallest bucket: all slots
+        # inactive, null block tables — writes land in the null page.
+        exe = self._decode.dispatch(("cb", s, 1))
+        warm_out = exe(
+            self.params,
+            cache,
+            jnp.zeros((s, 1), jnp.int32),
+            jnp.zeros((s,), jnp.int32),
+            jnp.zeros((s, 1), jnp.int32),
+            jnp.zeros((s,), jnp.bool_),
+            jnp.ones((s,), jnp.float32),
+            jnp.ones((s,), jnp.bool_),
+            jnp.zeros((s, 2), jnp.uint32),
+        )
+        jax.block_until_ready(warm_out)
+        cache = warm_out[1]
+
+        # COW device half (cold path): one jitted in-place page copy; the
+        # batcher threads it through the same cache its steps donate.
+        copy_jit = jax.jit(models.copy_cache_pages, donate_argnums=(0,))
+
+        return PagedContinuousBatcher(
+            dispatch_fn=dispatch,
+            pool=pool,
+            prefix_cache=prefix,
+            cache=cache,
+            num_slots=s,
+            max_pages_per_req=max_pages_per_req,
+            cache_copy=lambda c, src, dst: copy_jit(
+                c, jnp.int32(src), jnp.int32(dst)
+            ),
+            seed=seed,
+        )
+
+
 # ------------------------------------------------------------ stream drivers
 def run_continuous_stream(
     eng: Engine,
@@ -374,5 +521,104 @@ def run_burst_stream(
         compiles_total=eng._decode.stats.misses,
         compiles_after_warmup=eng._decode.stats.misses - compiles0,
         rebinds=eng._decode.stats.rebinds - rebinds0,
+    )
+    return report
+
+
+def run_paged_stream(
+    eng: Engine,
+    requests: list[Request],
+    *,
+    slots: int | None = None,
+    seed: int = 0,
+    clock: Clock | None = None,
+) -> dict:
+    """Drive a request stream through the paged KV engine; return a report.
+
+    The acceptance contract (ISSUE 2): the only post-warmup compiles are
+    first sightings of a new ``pages_bucket`` — between bucket crossings the
+    hot loop never recompiles, and sharing lets peak *logical* tokens exceed
+    the pool's physical token capacity.
+    """
+    from repro.runtime.kvcache import sharing_report
+
+    cb = eng.paged_continuous(slots=slots, seed=seed)  # warmup compile first
+    clock = clock or Clock()  # ...so served latencies exclude it
+    warm_compiles = eng._decode.stats.misses
+    warm_rebinds = eng._decode.stats.rebinds
+    q = RequestQueue(requests)
+    finished: list[Request] = []
+    peak_share: dict = {"share_ratio": 1.0, "overcommit_ratio": 0.0,
+                        "logical_tokens": 0}
+    peak_concurrent = 0
+    stall_steps = 0
+    while q or cb.has_work:
+        now = clock.now()
+        due = q.pop_due(now, limit=cb.free_slots)
+        deferred: list[Request] = []
+        if due:
+            deferred = cb.admit(due, now=now)
+            for r in deferred:
+                q.submit(r)  # deferred for pages: retried, never rejected
+        if cb.has_work:
+            finished.extend(cb.step(now=clock.now()))
+            for r in cb.preempted:
+                q.submit(r)
+            cb.preempted.clear()
+            peak_concurrent = max(peak_concurrent, cb.active_count)
+            share = sharing_report(cb.live_tables(), cb.pool)
+            if share["logical_tokens"] >= peak_share["logical_tokens"]:
+                peak_share = share
+            stall_steps = 0
+            continue
+        if deferred:
+            # Queued work but nothing admissible and nothing running: drop
+            # idle prefix pages and retry before declaring a stall.
+            if cb.prefix.evict(cb.pool.num_pages) == 0:
+                stall_steps += 1
+                if stall_steps > 2:
+                    break  # pool too small for any queued request
+            continue
+        nxt = q.next_arrival()
+        if nxt is None:
+            break
+        clock.jump_to(nxt)  # idle: fast-forward to the next arrival
+    report = latency_report(finished)
+    report.update(
+        engine="paged",
+        slots=cb.num_slots,
+        steps=cb.stats.steps,
+        occupancy=round(cb.stats.occupancy, 4),
+        page_size=cb.pool.page_size,
+        pool_pages=cb.pool.num_pages,
+        pool_tokens=cb.pool.total_tokens,
+        pages_in_use_peak=cb.pool.stats.peak_in_use,
+        peak_concurrent=peak_concurrent,
+        peak_logical_tokens=peak_share["logical_tokens"],
+        share_ratio=round(peak_share["share_ratio"], 4),
+        overcommit_ratio=round(peak_share["overcommit_ratio"], 4),
+        shared_prompt_tokens=cb.stats.shared_tokens,
+        prompt_tokens=cb.stats.prompt_tokens,
+        # throughput incl. teacher-forced prompt work (what the device did;
+        # ``tok_per_s`` counts only emitted tokens)
+        proc_tok_per_s=(
+            round(
+                (report.get("tokens", 0) + cb.stats.prompt_tokens)
+                / report["span_s"],
+                1,
+            )
+            if report.get("span_s")
+            else 0.0
+        ),
+        preemptions=cb.stats.preemptions,
+        starved_admissions=cb.stats.starved_admissions,
+        rejected_oversize=cb.stats.rejected_oversize,
+        bucket_crossings=cb.stats.bucket_crossings,
+        cow_copies=cb.pool.stats.cow_copies,
+        prefix_evictions=cb.pool.stats.prefix_evictions,
+        unserved=len(requests) - len(finished),
+        compiles_total=eng._decode.stats.misses,
+        compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
+        rebinds=eng._decode.stats.rebinds - warm_rebinds,
     )
     return report

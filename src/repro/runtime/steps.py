@@ -186,6 +186,48 @@ def make_slot_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callabl
     return slot_step
 
 
+def make_paged_slot_decode_fn(
+    cfg: ArchConfig, *, moe_policy: str = "drop"
+) -> Callable:
+    """Paged continuous-batching decode step (DESIGN.md §9).
+
+    Same contract as ``make_slot_decode_fn`` with one extra input — the
+    packed block tables:
+
+        step(params, cache, tok[S,1], pos[S], block_tables[S,PB], active[S],
+             temps[S], greedy[S], keys[S,2])
+          -> (next_tok[S], cache, new_pos[S], new_keys[S,2])
+
+    ``cache`` is the pooled page cache (``models.init_paged_cache``), shared
+    by every slot. ``PB`` (``pages_bucket``) is baked into the executable's
+    shapes: it is the semi-static capacity key — one executable per
+    ``("cb", slots, pages_bucket)``, and a request growing past the bucket
+    is a cold-path rebind, never a hot-loop capacity check. Inactive slots
+    carry all-null block tables, so their (structurally unavoidable) writes
+    land in the reserved null page.
+    """
+
+    def paged_slot_step(
+        params, cache, tok, pos, block_tables, active, temps, greedy, keys
+    ):
+        logits, cache = models.paged_decode_step(
+            cfg, params, cache, tok, pos, block_tables, moe_policy=moe_policy
+        )
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = jnp.maximum(temps, 1e-4)[:, None].astype(logits.dtype)
+        sample_keys, new_keys = jnp.split(
+            jax.vmap(lambda k: jax.random.split(k, 2))(keys), 2, axis=1
+        )
+        s = jax.vmap(jax.random.categorical)(
+            sample_keys[:, 0], logits / t
+        ).astype(jnp.int32)
+        nxt = jnp.where(greedy, g, s)
+        new_pos = pos + active.astype(jnp.int32)
+        return nxt, cache, new_pos, new_keys[:, 0]
+
+    return paged_slot_step
+
+
 def lower_decode(
     cfg: ArchConfig,
     mesh: Mesh,
