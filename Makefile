@@ -1,11 +1,11 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify tier1 smoke-serve smoke-paged bench-serving bench-kvcache \
-	bench-check bench examples
+.PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill bench-serving \
+	bench-kvcache bench-prefill bench-check bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
-verify: tier1 smoke-serve smoke-paged
+verify: tier1 smoke-serve smoke-paged smoke-prefill
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -30,6 +30,12 @@ smoke-paged:
 		--tokens-mean 5 --max-len 32 --engine paged \
 		--page-size 8 --num-pages 20 --prefix-len 8
 
+# CPU smoke: chunked prefill on long distinct prompts (DESIGN.md §10).
+smoke-prefill:
+	$(PY) -m repro.launch.serve --smoke --requests 8 --rate 200 \
+		--tokens-mean 4 --max-len 96 --engine paged \
+		--page-size 16 --num-pages 28 --prompt-len 48 --prefill-chunk 16
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters).
 bench-serving:
@@ -40,9 +46,15 @@ bench-serving:
 bench-kvcache:
 	$(PY) -m benchmarks.run --only kvcache --fast
 
+# Chunked-prefill scenario: writes BENCH_prefill.json (long-prompt TTFT,
+# chunked vs token-by-token ingestion, zero post-warmup compiles).
+bench-prefill:
+	$(PY) -m benchmarks.run --only prefill --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
-	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json
+	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
+		BENCH_prefill.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

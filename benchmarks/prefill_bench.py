@@ -1,0 +1,168 @@
+"""Chunked prefill scenario — time-to-first-token vs decode-speed ingestion.
+
+The workload the chunked-prefill lane exists for (DESIGN.md §10): requests
+arrive with *long, distinct* prompts (no shared prefixes — the prefix cache
+can't help, every prompt token must be ingested) and short decode tails.
+Token-by-token forcing pays one full decode step per prompt token, so TTFT
+grows linearly with prompt length at decode throughput; the chunked lane
+ingests C tokens per step through the AOT-warmed ``("pf", chunk_bucket)``
+executables, so TTFT collapses to a handful of chunk steps.
+
+``prefill_comparison`` drives the same long-prompt stream through four
+engines:
+
+* paged + chunked prefill (the tentpole configuration),
+* paged + token-by-token (the baseline the acceptance gate compares against),
+* dense continuous + chunked prefill (satellite: the dense engine's prompt
+  path routes through the same chunk machinery),
+* dense continuous + token-by-token.
+
+The acceptance contract (ISSUE 3): chunked TTFT p95 must beat the
+token-by-token TTFT p95 (the ISSUE targets >= 3x on prompts >= 64), with
+``compiles_after_warmup == 0`` across every chunk-bucket crossing. The
+result feeds BENCH_prefill.json (gated by scripts/bench_check.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.scheduler import (
+    Request,
+    attach_distinct_prompts,
+    poisson_arrivals,
+)
+from repro.runtime.serve import (
+    Engine,
+    EngineConfig,
+    run_continuous_stream,
+    run_paged_stream,
+)
+
+
+def long_prompt_requests(
+    n: int,
+    rate_hz: float,
+    *,
+    prompt_len: int,
+    new_tokens: int,
+    vocab: int,
+    seed: int = 0,
+) -> list[Request]:
+    """Distinct long prompts, fixed greedy decode tails, Poisson arrivals —
+    the serving traffic synthesisers with the §10 prompt attach; fixed
+    tails isolate TTFT from decode-length variance."""
+    reqs = poisson_arrivals(
+        n, rate_hz, seed=seed, tokens_mean=new_tokens,
+        tokens_max=new_tokens, sample_frac=0.0, vocab=vocab,
+    )
+    for r in reqs:
+        r.new_tokens = new_tokens
+    return attach_distinct_prompts(
+        reqs, prompt_len, vocab=vocab, seed=seed + 1
+    )
+
+
+def prefill_comparison(
+    n_requests: int = 8,
+    rate_hz: float = 400.0,
+    *,
+    prompt_len: int = 96,
+    new_tokens: int = 6,
+    max_len: int = 128,
+    slots: int = 4,
+    page_size: int = 16,
+    prefill_chunk: int = 64,
+    seed: int = 0,
+) -> dict:
+    """Long-prompt stream: chunked prefill vs token-by-token, paged + dense."""
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    # roomy pool: this benchmark isolates prefill speed from page pressure
+    num_pages = slots * (-(-max_len // page_size)) + 4
+
+    def traffic():
+        return long_prompt_requests(
+            n_requests, rate_hz, prompt_len=prompt_len,
+            new_tokens=new_tokens, vocab=cfg.vocab_size, seed=seed,
+        )
+
+    def ecfg(chunk: int) -> EngineConfig:
+        return EngineConfig(
+            max_len=max_len,
+            batch_quantum=2,
+            max_batch=slots,
+            page_size=page_size,
+            num_pages=num_pages,
+            prefill_chunk=chunk,
+        )
+
+    runs = {}
+    for name, chunk, runner in (
+        ("chunked", prefill_chunk, run_paged_stream),
+        ("sequential", 0, run_paged_stream),
+        ("dense_chunked", prefill_chunk, run_continuous_stream),
+        ("dense_sequential", 0, run_continuous_stream),
+    ):
+        reset_entry_points()
+        eng = Engine(cfg, params, ecfg(chunk))
+        rep = runner(eng, traffic(), slots=slots)
+        eng.close()
+        if rep.get("span_s"):
+            # device-side ingestion rate: prompt + emitted tokens over span
+            rep["prefill_tok_per_s"] = round(
+                rep.get("prompt_tokens", 0) / rep["span_s"], 1
+            )
+        runs[name] = rep
+
+    c, s = runs["chunked"], runs["sequential"]
+    speedup = (
+        s.get("ttft_p95_ms", 0.0) / c["ttft_p95_ms"]
+        if c.get("ttft_p95_ms")
+        else 0.0
+    )
+    dense_speedup = (
+        runs["dense_sequential"].get("ttft_p95_ms", 0.0)
+        / runs["dense_chunked"]["ttft_p95_ms"]
+        if runs["dense_chunked"].get("ttft_p95_ms")
+        else 0.0
+    )
+    return {
+        "meta": {
+            "arch": cfg.name,
+            "n_requests": n_requests,
+            "rate_hz": rate_hz,
+            "prompt_len": prompt_len,
+            "new_tokens": new_tokens,
+            "max_len": max_len,
+            "slots": slots,
+            "page_size": page_size,
+            "num_pages": num_pages,
+            "prefill_chunk": prefill_chunk,
+            "seed": seed,
+        },
+        **runs,
+        "acceptance": {
+            # the regression gate (scripts/bench_check.py): chunked must beat
+            # decode-speed ingestion on TTFT p95 with zero compiles after
+            # warmup across all chunk-bucket crossings
+            "chunked_ttft_beats_sequential": (
+                c.get("ttft_p95_ms", float("inf"))
+                < s.get("ttft_p95_ms", 0.0)
+            ),
+            "ttft_speedup_p95": round(speedup, 2),
+            "dense_ttft_speedup_p95": round(dense_speedup, 2),
+            "no_compiles_after_warmup": (
+                c.get("compiles_after_warmup", 1) == 0
+                and runs["dense_chunked"].get("compiles_after_warmup", 1) == 0
+            ),
+            "all_served": (
+                c.get("finished", 0) == n_requests
+                and s.get("finished", 0) == n_requests
+            ),
+        },
+    }

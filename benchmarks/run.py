@@ -47,6 +47,33 @@ def _kvcache_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _prefill_suite(fast: bool, json_path: str) -> list[str]:
+    from . import prefill_bench
+
+    res = prefill_bench.prefill_comparison(n_requests=8 if fast else 12)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("chunked", "sequential", "dense_chunked", "dense_sequential"):
+        r = res[kind]
+        rows.append(
+            f"prefill/{kind}/ttft_p95_ms,{r.get('ttft_p95_ms', 0.0):.1f},"
+            f"ttft_p50_ms={r.get('ttft_p50_ms', 0.0):.1f};"
+            f"ttft_p99_ms={r.get('ttft_p99_ms', 0.0):.1f};"
+            f"prefill_tok_per_s={r.get('prefill_tok_per_s', 0.0)};"
+            f"prefill_chunks={r.get('prefill_chunks')};"
+            f"chunk_bucket_crossings={r.get('chunk_bucket_crossings')};"
+            f"h2d_uploads={r.get('h2d_uploads')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    rows.append(
+        f"prefill/acceptance,0.0,"
+        f"{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"prefill/json,0.0,written={json_path}")
+    return rows
+
+
 def _serving_suite(fast: bool, json_path: str) -> list[str]:
     from . import hotpath_serving
 
@@ -75,6 +102,7 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--serving-json", default="BENCH_serving.json")
     ap.add_argument("--kvcache-json", default="BENCH_kvcache.json")
+    ap.add_argument("--prefill-json", default="BENCH_prefill.json")
     args = ap.parse_args()
 
     from . import (
@@ -102,6 +130,7 @@ def main() -> None:
         "roofline": lambda: roofline_report.run(),
         "serving": lambda: _serving_suite(args.fast, args.serving_json),
         "kvcache": lambda: _kvcache_suite(args.fast, args.kvcache_json),
+        "prefill": lambda: _prefill_suite(args.fast, args.prefill_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

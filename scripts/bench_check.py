@@ -11,8 +11,11 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
   (b) seat more concurrent requests than its pool's memory would buy as
   dense slot-caches, and (c) serve every request (preempt/defer, never
   reject).
+* BENCH_prefill.json — chunked prefill (DESIGN.md §10) must beat
+  token-by-token prompt ingestion on TTFT p95, with zero post-warmup
+  compiles across every chunk-bucket crossing and every request served.
 
-Usage: python scripts/bench_check.py [BENCH_serving.json BENCH_kvcache.json]
+Usage: python scripts/bench_check.py [BENCH_*.json ...]
 Missing files are skipped with a warning (suites can be run selectively);
 any present-but-failing contract exits 1.
 """
@@ -60,9 +63,42 @@ def check_kvcache(data: dict) -> list[str]:
     return errors
 
 
+def check_prefill(data: dict) -> list[str]:
+    errors = []
+    chunked = data.get("chunked", {})
+    seq = data.get("sequential", {})
+    c95 = chunked.get("ttft_p95_ms")
+    s95 = seq.get("ttft_p95_ms")
+    if c95 is None or s95 is None:
+        errors.append("prefill: reports lack ttft_p95_ms")
+    elif not c95 < s95:
+        errors.append(
+            f"prefill: chunked TTFT p95 ({c95:.1f}ms) must beat "
+            f"token-by-token ({s95:.1f}ms)"
+        )
+    caw = chunked.get("compiles_after_warmup")
+    if caw is None:
+        errors.append("prefill: chunked report lacks compiles_after_warmup")
+    elif caw > 0:
+        errors.append(
+            f"prefill: chunked engine recompiled after warmup "
+            f"(compiles_after_warmup={caw}, must be 0 with AOT chunk buckets)"
+        )
+    acc = data.get("acceptance", {})
+    for key in (
+        "chunked_ttft_beats_sequential",
+        "no_compiles_after_warmup",
+        "all_served",
+    ):
+        if not acc.get(key, False):
+            errors.append(f"prefill: acceptance flag {key!r} is not True")
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
+    "BENCH_prefill.json": check_prefill,
 }
 
 

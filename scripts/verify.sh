@@ -23,3 +23,8 @@ echo "== paged kvcache smoke (CPU) =="
 python -m repro.launch.serve --smoke --requests 12 --rate 200 \
   --tokens-mean 5 --max-len 32 --engine paged \
   --page-size 8 --num-pages 20 --prefix-len 8
+
+echo "== chunked prefill smoke (CPU) =="
+python -m repro.launch.serve --smoke --requests 8 --rate 200 \
+  --tokens-mean 4 --max-len 96 --engine paged \
+  --page-size 16 --num-pages 28 --prompt-len 48 --prefill-chunk 16

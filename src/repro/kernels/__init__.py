@@ -10,6 +10,10 @@ from .decode_attention import (
     paged_decode_attention,
     paged_decode_attention_reference,
 )
+from .prefill_attention import (
+    paged_prefill_attention,
+    paged_prefill_attention_reference,
+)
 from .ops import (
     KernelBranch,
     decode_attention,
@@ -25,5 +29,7 @@ __all__ = [
     "flash_attention_branchy",
     "paged_decode_attention",
     "paged_decode_attention_reference",
+    "paged_prefill_attention",
+    "paged_prefill_attention_reference",
     "ssd_chunk",
 ]

@@ -17,7 +17,11 @@ import jax
 
 from repro import models
 from repro.configs import get_config
-from repro.runtime.scheduler import poisson_arrivals, shared_prefix_arrivals
+from repro.runtime.scheduler import (
+    attach_distinct_prompts,
+    poisson_arrivals,
+    shared_prefix_arrivals,
+)
 from repro.runtime.serve import (
     Engine,
     EngineConfig,
@@ -37,6 +41,11 @@ def _print_report(rep: dict) -> None:
             f" | latency p50 {rep['p50_ms']:.1f}ms p95 {rep['p95_ms']:.1f}ms "
             f"p99 {rep['p99_ms']:.1f}ms | {rep['tok_per_s']:.0f} tok/s"
         )
+    if "ttft_p95_ms" in rep:
+        head += (
+            f" | ttft p50 {rep['ttft_p50_ms']:.1f}ms "
+            f"p95 {rep['ttft_p95_ms']:.1f}ms"
+        )
     print(head, flush=True)
     cold = {
         k: rep[k]
@@ -48,6 +57,10 @@ def _print_report(rep: dict) -> None:
             "slots",
             "steps",
             "occupancy",
+            "prefill_chunk",
+            "prefill_chunks",
+            "chunk_bucket_crossings",
+            "h2d_uploads",
         )
         if k in rep
     }
@@ -95,6 +108,12 @@ def main(argv: list[str] | None = None) -> dict:
                     help="paged engine: shared prompt prefix length")
     ap.add_argument("--num-prefixes", type=int, default=3,
                     help="paged engine: number of distinct shared prefixes")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: max prompt tokens ingested per "
+                         "step (0 = token-by-token teacher forcing)")
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="attach a distinct random prompt of this length to "
+                         "every request (continuous/paged engines)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -103,6 +122,13 @@ def main(argv: list[str] | None = None) -> dict:
         ap.error(f"--rate must be > 0 requests/s, got {args.rate}")
     if args.requests < 1:
         ap.error(f"--requests must be >= 1, got {args.requests}")
+    if args.prompt_len > 0 and args.engine in ("burst", "both", "all"):
+        # the per-burst driver seeds first_token only and never ingests
+        # prompts; a side-by-side report would compare different workloads
+        ap.error(
+            "--prompt-len requires --engine continuous or paged "
+            "(the burst driver does not ingest prompts)"
+        )
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -120,18 +146,24 @@ def main(argv: list[str] | None = None) -> dict:
         max_batch=8,
         page_size=args.page_size,
         num_pages=args.num_pages,
+        prefill_chunk=args.prefill_chunk,
     )
 
     def traffic(seed: int):
-        return poisson_arrivals(
+        reqs = poisson_arrivals(
             args.requests,
             args.rate,
             seed=seed,
             tokens_mean=args.tokens_mean,
-            tokens_max=args.max_len,
+            tokens_max=max(1, args.max_len - max(args.prompt_len, 1) + 1),
             sample_frac=args.sample_frac,
             vocab=cfg.vocab_size,
         )
+        if args.prompt_len > 0:  # distinct long prompts (DESIGN.md §10)
+            attach_distinct_prompts(
+                reqs, args.prompt_len, vocab=cfg.vocab_size, seed=seed + 1
+            )
+        return reqs
 
     def prefix_traffic(seed: int):
         return shared_prefix_arrivals(
@@ -159,8 +191,14 @@ def main(argv: list[str] | None = None) -> dict:
         eng.close()
     if args.engine in ("paged", "all"):
         eng = Engine(cfg, params, ecfg)
+        # --prompt-len switches the paged stream from the shared-prefix
+        # workload (DESIGN.md §9) to long distinct prompts (DESIGN.md §10)
+        paged_reqs = (
+            traffic(args.seed) if args.prompt_len > 0
+            else prefix_traffic(args.seed)
+        )
         reports["paged"] = run_paged_stream(
-            eng, prefix_traffic(args.seed), slots=args.slots or None
+            eng, paged_reqs, slots=args.slots or None
         )
         eng.close()
 

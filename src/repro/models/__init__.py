@@ -1,6 +1,7 @@
 """Model substrate: pure-functional layers, blocks, and LM assembly."""
 
 from .model import (
+    chunked_decode_step,
     copy_cache_pages,
     decode_step,
     forward,
@@ -10,10 +11,12 @@ from .model import (
     input_specs,
     loss_fn,
     paged_decode_step,
+    paged_prefill_step,
     prefill,
 )
 
 __all__ = [
+    "chunked_decode_step",
     "copy_cache_pages",
     "decode_step",
     "forward",
@@ -23,5 +26,6 @@ __all__ = [
     "input_specs",
     "loss_fn",
     "paged_decode_step",
+    "paged_prefill_step",
     "prefill",
 ]

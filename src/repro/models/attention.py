@@ -204,26 +204,34 @@ def _decode_sdpa_rows(
     *,
     local: bool,
 ) -> jax.Array:
-    """Per-row masked SDPA tail shared by dense per-row decode and paged
-    decode: q [B,1,H,dh]; keys/vals [B,L,KH,dh] (each row's *logical* cache
-    view — dense rows or gathered pages); pos i32[B]. One implementation so
-    the paged path's bit-for-bit-equals-dense guarantee (DESIGN.md §9) can't
-    drift. Returns the projected output [B,1,D]."""
-    b = q.shape[0]
-    qg = _group(cfg, q)  # [B,1,KH,G,dh]
+    """Per-row masked SDPA tail shared by dense per-row decode, paged
+    decode, and the chunked prefill paths: q [B,Sq,H,dh]; keys/vals
+    [B,L,KH,dh] (each row's *logical* cache view — dense rows or gathered
+    pages); pos is i32[B] (one query per row, Sq == 1) or i32[B,Sq]
+    (per-query causal frontiers — chunked prefill, DESIGN.md §10). One
+    implementation so the paged path's bit-for-bit-equals-dense guarantee
+    (DESIGN.md §9) can't drift. Returns the projected output [B,Sq,D]."""
+    b, sq = q.shape[:2]
+    qg = _group(cfg, q)  # [B,Sq,KH,G,dh]
     scale = 1.0 / np.sqrt(cfg.head_dim)
     scores = (
         jnp.einsum("bqhgd,bkhd->bhgqk", qg, keys).astype(jnp.float32) * scale
     )
     scores = softcap(scores, cfg.attn_logit_softcap)
     ki = jnp.arange(keys.shape[1])
-    ok = ki[None, :] <= pos[:, None]  # [B,L]
-    if local and cfg.sliding_window is not None:
-        ok &= ki[None, :] > pos[:, None] - cfg.sliding_window
-    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
+    if pos.ndim == 2:  # [B,Sq]: each chunk row has its own causal frontier
+        ok = ki[None, None, :] <= pos[:, :, None]  # [B,Sq,L]
+        if local and cfg.sliding_window is not None:
+            ok &= ki[None, None, :] > pos[:, :, None] - cfg.sliding_window
+        scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+    else:
+        ok = ki[None, :] <= pos[:, None]  # [B,L]
+        if local and cfg.sliding_window is not None:
+            ok &= ki[None, :] > pos[:, None] - cfg.sliding_window
+        scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]
     probs = jax.nn.softmax(scores, axis=-1).astype(vals.dtype)
     og = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vals)
-    o = og.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    o = og.reshape(b, sq, cfg.num_heads, cfg.head_dim)
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 
@@ -382,5 +390,113 @@ def paged_decode_attention(
     gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
     return (
         _decode_sdpa_rows(cfg, p, q, gk, gv, pos, local=local),
+        {"k": ck, "v": cv},
+    )
+
+
+# ----------------------------------------------------------- chunked prefill
+def paged_prefill_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    start: jax.Array,
+    block_tables: jax.Array,
+    length: jax.Array,
+    *,
+    local: bool,
+) -> tuple[jax.Array, dict]:
+    """Chunk-of-C-tokens prompt ingestion through the paged KV cache.
+
+    x: [B,C,D] chunk embeddings; cache k/v: [P, page_size, KH, dh];
+    ``start``: i32[B] logical position of each row's first chunk token;
+    ``length``: i32[B] real tokens in the chunk (columns >= length are
+    bucket padding); ``block_tables``: i32[B, pages_bucket].
+
+    Scatter-writes all C new K/V positions through the block table in one
+    step — padded columns are redirected to the null page 0, so bucket
+    padding never corrupts live pages — then attends causally over the
+    gathered pages: query row i sees logical positions <= start+i, which
+    covers both the pre-existing cache and the in-flight chunk (the chunk's
+    own K/V is read back from the pages it just wrote). Bit-for-bit equal
+    on CPU to C iterations of ``paged_decode_attention``: future chunk rows
+    are masked to exactly-zero probability, so their (different) garbage
+    contributes exactly 0.0 to every softmax sum (DESIGN.md §10).
+
+    C (the chunk bucket) is a compile-time constant — the semi-static chunk
+    key ``("pf", chunk_bucket)`` — so chunk-size variation dispatches on the
+    cold path and never branches per step.
+    """
+    b, c = x.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    _, ps = cache["k"].shape[:2]
+    pages_bucket = bt.shape[1]
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = start[:, None] + offs[None, :]  # [B,C]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint(q, "batch", None, None, None)
+    # ---- write: scatter every real chunk row through the block table;
+    # padded rows land in the reserved null page (id 0).
+    page_idx = jnp.clip(positions // ps, 0, pages_bucket - 1)
+    wpage = jnp.take_along_axis(bt, page_idx, axis=1)  # [B,C]
+    wpage = jnp.where(offs[None, :] < length[:, None], wpage, 0)
+    woff = positions % ps
+    ck = cache["k"].at[wpage, woff].set(k)
+    cv = cache["v"].at[wpage, woff].set(v)
+    # ---- read: gather pages, mask per query row (causal within the chunk)
+    seq = pages_bucket * ps
+    gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    return (
+        _decode_sdpa_rows(cfg, p, q, gk, gv, positions, local=local),
+        {"k": ck, "v": cv},
+    )
+
+
+def chunked_decode_attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    start: jax.Array,
+    length: jax.Array,
+    *,
+    local: bool,
+) -> tuple[jax.Array, dict]:
+    """Chunk-of-C-tokens prompt ingestion into the dense per-slot cache.
+
+    x: [B,C,D]; cache k/v: [B,Smax,KH,dh]; ``start``: i32[B] per-row first
+    chunk position; ``length``: i32[B] real tokens (rows with length 0 are
+    idle and write nothing). The dense-cache counterpart of
+    ``paged_prefill_attention`` — a slot's private cache rows are just a
+    trivial identity block table (DESIGN.md §10) — generalising
+    ``decode_attention``'s per-row one-token path to C tokens: the chunk is
+    inserted with a per-row masked select and each query row is causally
+    masked at its own position, so join/leave isolation holds exactly as in
+    the single-token path. Bit-for-bit equal on CPU to C iterations of the
+    per-row ``decode_attention``.
+    """
+    b, c = x.shape[:2]
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    positions = start[:, None] + offs[None, :]  # [B,C]
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = hint(q, "batch", None, None, None)
+    ki = jnp.arange(cache["k"].shape[1])
+    # masked insert: cache row j takes chunk row j-start when it is inside
+    # this row's [start, start+length) write window
+    sel = (ki[None, :] >= start[:, None]) & (
+        ki[None, :] < start[:, None] + length[:, None]
+    )  # [B,Smax]
+    idx = jnp.clip(ki[None, :] - start[:, None], 0, c - 1)  # [B,Smax]
+    sel4 = sel[:, :, None, None]
+    idx4 = idx[:, :, None, None]
+    ck = jnp.where(sel4, jnp.take_along_axis(k, idx4, axis=1), cache["k"])
+    cv = jnp.where(sel4, jnp.take_along_axis(v, idx4, axis=1), cache["v"])
+    return (
+        _decode_sdpa_rows(cfg, p, q, ck, cv, positions, local=local),
         {"k": ck, "v": cv},
     )

@@ -42,6 +42,23 @@ def block_init(cfg: ArchConfig, key: jax.Array, slot: int) -> dict:
     return p
 
 
+def _block_tail(
+    cfg: ArchConfig, slot: int, p: dict, x: jax.Array, *, moe_policy: str
+) -> tuple[jax.Array, jax.Array]:
+    """Residual MLP/MoE tail shared by every block variant. Returns
+    (x, moe_aux); aux is zero unless the slot routes through a MoE."""
+    aux = jnp.zeros((), jnp.float32)
+    mlp = cfg.mlp_at(slot)
+    if mlp != "none":
+        h = norm_apply(cfg, p["norm2"], x)
+        if mlp == "mlp":
+            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
+        else:
+            h, aux = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
+        x = x + h
+    return x, aux
+
+
 def block_apply(
     cfg: ArchConfig,
     slot: int,
@@ -63,16 +80,7 @@ def block_apply(
     else:
         h, _ = ssm_mod.ssm_apply(cfg, p["ssm"], h)
     x = x + h
-    aux = jnp.zeros((), jnp.float32)
-    mlp = cfg.mlp_at(slot)
-    if mlp != "none":
-        h = norm_apply(cfg, p["norm2"], x)
-        if mlp == "mlp":
-            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
-        else:
-            h, aux = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
-        x = x + h
-    return x, aux
+    return _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
 
 
 def block_cache_init(
@@ -104,14 +112,7 @@ def block_prefill(
     else:
         h, cache = ssm_mod.ssm_apply(cfg, p["ssm"], h, return_cache=True)
     x = x + h
-    mlp = cfg.mlp_at(slot)
-    if mlp != "none":
-        h = norm_apply(cfg, p["norm2"], x)
-        if mlp == "mlp":
-            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
-        else:
-            h, _ = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
-        x = x + h
+    x, _ = _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
     return x, cache
 
 
@@ -152,14 +153,66 @@ def block_paged_decode(
         local=(mixer == "attn_local"),
     )
     x = x + h
-    mlp = cfg.mlp_at(slot)
-    if mlp != "none":
-        h = norm_apply(cfg, p["norm2"], x)
-        if mlp == "mlp":
-            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
-        else:
-            h, _ = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
-        x = x + h
+    x, _ = _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
+    return x, cache
+
+
+def block_paged_prefill(
+    cfg: ArchConfig,
+    slot: int,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    start: jax.Array,
+    block_tables: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, dict]:
+    """Chunked-prefill block step through the paged KV cache (DESIGN.md §10)."""
+    mixer = cfg.mixer_at(slot)
+    h = norm_apply(cfg, p["norm1"], x)
+    if not mixer.startswith("attn"):
+        raise ValueError(
+            f"{cfg.name}: slot {slot} mixer {mixer!r}: paged prefill is "
+            f"attention-only (see block_paged_cache_init)."
+        )
+    h, cache = attn.paged_prefill_attention(
+        cfg, p["attn"], h, cache, start, block_tables, length,
+        local=(mixer == "attn_local"),
+    )
+    x = x + h
+    x, _ = _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
+    return x, cache
+
+
+def block_chunk_decode(
+    cfg: ArchConfig,
+    slot: int,
+    p: dict,
+    x: jax.Array,
+    cache: dict,
+    start: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, dict]:
+    """Chunked-prefill block step into the dense per-slot cache
+    (DESIGN.md §10). Attention-only: SSM state is recurrent and would need
+    a per-chunk scan — those stacks fall back to token-by-token forcing."""
+    mixer = cfg.mixer_at(slot)
+    h = norm_apply(cfg, p["norm1"], x)
+    if not mixer.startswith("attn"):
+        raise ValueError(
+            f"{cfg.name}: slot {slot} mixer {mixer!r}: chunked prefill is "
+            f"attention-only; teacher-force SSM stacks token by token."
+        )
+    h, cache = attn.chunked_decode_attention(
+        cfg, p["attn"], h, cache, start, length,
+        local=(mixer == "attn_local"),
+    )
+    x = x + h
+    x, _ = _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
     return x, cache
 
 
@@ -183,12 +236,5 @@ def block_decode(
     else:
         h, cache = ssm_mod.ssm_decode_step(cfg, p["ssm"], h, cache)
     x = x + h
-    mlp = cfg.mlp_at(slot)
-    if mlp != "none":
-        h = norm_apply(cfg, p["norm2"], x)
-        if mlp == "mlp":
-            h = mlp_mod.mlp_apply(cfg, p["mlp"], h)
-        else:
-            h, _ = moe_mod.moe_apply(cfg, p["moe"], h, policy=moe_policy)
-        x = x + h
+    x, _ = _block_tail(cfg, slot, p, x, moe_policy=moe_policy)
     return x, cache

@@ -24,10 +24,12 @@ from repro.distributed.sharding import hint
 from .blocks import (
     block_apply,
     block_cache_init,
+    block_chunk_decode,
     block_decode,
     block_init,
     block_paged_cache_init,
     block_paged_decode,
+    block_paged_prefill,
     block_prefill,
 )
 from .layers import dtype_of, embed_apply, embed_init, head_apply, head_init, norm_init
@@ -265,6 +267,100 @@ def paged_decode_step(
 
     x = norm_apply(cfg, params["final_norm"], x)
     logits = head_apply(cfg, params["head"], params["embed"], x[:, -1])
+    return logits, list(new_cache)
+
+
+def _last_real_row(x: jax.Array, length: jax.Array) -> jax.Array:
+    """x: [B,C,D]; pick row ``length - 1`` per batch element -> [B,D].
+
+    The chunked-prefill head input: only the last *real* chunk token's
+    hidden state primes generation (bucket-padding rows carry garbage)."""
+    last = jnp.clip(jnp.asarray(length, jnp.int32) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+
+
+def paged_prefill_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    block_tables: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """Chunk-of-C prompt tokens for the whole stack through the paged KV
+    cache (DESIGN.md §10).
+
+    inputs: [B,C] tokens (columns >= ``length`` are bucket padding); start:
+    i32[B] first chunk position; block_tables: i32[B, PB]; length: i32[B].
+    Returns (logits of the last real chunk row [B,V], new cache) — the
+    logits that prime generation when the chunk reaches the prompt end.
+    Bit-for-bit equal on CPU to feeding the same C tokens through C
+    iterations of ``paged_decode_step``.
+    """
+    x = embed_apply(cfg, params["embed"], inputs)
+
+    def body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = []
+        for slot in range(cfg.period):
+            x, c = block_paged_prefill(
+                cfg, slot, slot_params[slot], x, slot_caches[slot], start,
+                block_tables, length, moe_policy=moe_policy,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = head_apply(
+        cfg, params["head"], params["embed"], _last_real_row(x, length)
+    )
+    return logits, list(new_cache)
+
+
+def chunked_decode_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """Chunk-of-C prompt tokens for the whole stack into the dense per-slot
+    cache (DESIGN.md §10) — the dense engine's prompt path.
+
+    inputs: [B,C] tokens; start: i32[B] per-row first position; length:
+    i32[B] real tokens (0 = idle row). Returns (logits of the last real
+    chunk row [B,V], new cache). Bit-for-bit equal on CPU to C iterations
+    of ``decode_step`` with per-row positions.
+    """
+    x = embed_apply(cfg, params["embed"], inputs)
+
+    def body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = []
+        for slot in range(cfg.period):
+            x, c = block_chunk_decode(
+                cfg, slot, slot_params[slot], x, slot_caches[slot], start,
+                length, moe_policy=moe_policy,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
+    from .layers import norm_apply
+
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = head_apply(
+        cfg, params["head"], params["embed"], _last_real_row(x, length)
+    )
     return logits, list(new_cache)
 
 

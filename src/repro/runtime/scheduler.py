@@ -22,6 +22,15 @@ module owns everything that happens *around* it:
   per-slot caches, prefix sharing, preemption on pool exhaustion, and the
   capacity bucket as a semi-static dispatch key.
 
+Both batchers ingest prompts through a **chunked prefill lane** when the
+engine provides one (DESIGN.md §10): seated requests sit in a PREFILL state
+and a per-step token budget funds one C-token chunk (C from the log-sized
+bucket set {8, 16, 32, ...} — a semi-static dispatch key, never a per-step
+conditional) alongside the decoding slots, flipping to DECODE when the
+cursor reaches the prompt end. Without the lane, prompts fall back to
+token-by-token teacher forcing at decode speed — the baseline
+``benchmarks/prefill_bench.py`` measures against.
+
 The batcher is model-agnostic: it drives an abstract ``step`` callable and
 leaves compilation to the engine's ``Dispatcher`` (core/dispatch.py).
 """
@@ -41,6 +50,10 @@ import numpy as np
 from repro.core import bucket_multiple, bucket_pow2
 
 GREEDY, SAMPLE = 0, 1
+
+# Smallest chunked-prefill bucket: chunk sizes are drawn from the log-sized
+# set {8, 16, 32, ..., prefill_chunk} (DESIGN.md §10).
+CHUNK_BUCKET_MIN = 8
 
 
 # ------------------------------------------------------------------ requests
@@ -66,6 +79,7 @@ class Request:
     # Filled by the runtime:
     tokens: list = field(default_factory=list)
     t_admit: float | None = None
+    t_first: float | None = None  # first emitted token (TTFT anchor)
     t_done: float | None = None
     preemptions: int = 0
 
@@ -204,6 +218,29 @@ def shared_prefix_arrivals(
     return reqs
 
 
+def attach_distinct_prompts(
+    requests: Sequence[Request],
+    prompt_len: int,
+    *,
+    vocab: int,
+    seed: int = 0,
+) -> list[Request]:
+    """Give every request its own random ``prompt_len``-token prompt.
+
+    The chunked-prefill scenario family (DESIGN.md §10): distinct prompts
+    defeat the prefix cache, so every prompt token must actually be
+    ingested — TTFT gains are earned by the chunk lane, not by sharing.
+    One source of truth for the launcher and the prefill benchmark.
+    """
+    rng = np.random.default_rng(seed)
+    for r in requests:
+        r.prompt = tuple(
+            int(x) for x in rng.integers(0, vocab, size=prompt_len)
+        )
+        r.first_token = int(r.prompt[0])
+    return list(requests)
+
+
 class RequestQueue:
     """Thread-safe arrival queue ordered by (arrival_s, rid)."""
 
@@ -298,6 +335,10 @@ class BatcherStats:
     tokens: int = 0
     active_slot_steps: int = 0
     idle_slot_steps: int = 0
+    prompt_tokens: int = 0  # teacher-forced (not emitted) tokens
+    prefill_chunks: int = 0  # chunked-prefill executable calls
+    chunk_bucket_crossings: int = 0
+    h2d_uploads: int = 0  # host->device coordinate uploads (see _DeviceMirror)
 
     @property
     def occupancy(self) -> float:
@@ -305,7 +346,123 @@ class BatcherStats:
         return self.active_slot_steps / total if total else 0.0
 
 
-class ContinuousBatcher:
+class _DeviceMirror:
+    """Host->device upload dedup for the hot loop's coordinate arrays.
+
+    The per-slot arrays (tok/pos/active/temps/greedy/keys/block tables)
+    change rarely — admits, finishes, prefill flips — relative to how often
+    the step executes. Re-uploading all of them with ``jnp.asarray`` every
+    step is the data-movement analogue of re-evaluating a branch the paper
+    moved off the hot path. The mirror keeps one device-resident copy per
+    name: ``get`` uploads only when the host copy was ``touch``ed since the
+    last step, and ``put`` adopts device arrays the step itself returned
+    (positions, keys, next tokens) so steady-state decode re-uploads
+    nothing. ``stats.h2d_uploads`` counts actual uploads.
+    """
+
+    def __init__(self, stats: BatcherStats):
+        self._dev: dict[str, Any] = {}
+        self._stats = stats
+
+    def touch(self, *names: str) -> None:
+        """Host mutated these arrays: the next ``get`` re-uploads."""
+        for n in names:
+            self._dev.pop(n, None)
+
+    def get(self, name: str, host: Any) -> Any:
+        if name not in self._dev:
+            self._dev[name] = jnp.asarray(host)
+            self._stats.h2d_uploads += 1
+        return self._dev[name]
+
+    def put(self, name: str, dev: Any) -> None:
+        """Adopt a device array the step returned (no upload needed)."""
+        self._dev[name] = dev
+
+
+class _ChunkedPrefillMixin:
+    """Prefill-lane scheduling shared by both batchers (DESIGN.md §10):
+    FIFO slot pick, the budget split, chunk-bucket accounting, and the
+    flip-time first-token priming. The lanes themselves differ only in
+    storage bookkeeping (dense rows vs pages) and the executable signature.
+    """
+
+    def _pick_prefill_slot(self) -> int | None:
+        """FIFO: the earliest-admitted slot still in PREFILL state."""
+        cands = [
+            s for s in range(self.num_slots)
+            if self._prefilling[s] and self._active[s]
+        ]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (self._slots[s].t_admit or 0.0, s))
+
+    def _plan_chunk(self, s: int) -> tuple[Request, tuple, int, int, int]:
+        """Budget split for slot ``s``'s next chunk: the decoding slots
+        consume one token each this step, the remainder funds the chunk —
+        clamped to [1, prefill_chunk] so prefill always progresses — and
+        the length rounds up to a compile bucket. Pure planning, no side
+        effects: a chunk aborted by preemption records nothing. Returns
+        (req, prompt, cursor, chunk, bucket)."""
+        req = self._slots[s]
+        prompt = req.effective_prompt
+        cursor = int(self._cursor[s])
+        remaining = len(prompt) - cursor
+        n_decode = int((self._active & ~self._prefilling).sum())
+        budget_left = self.token_budget - n_decode
+        chunk = max(1, min(remaining, budget_left, self.prefill_chunk))
+        if chunk == remaining and chunk + 1 > budget_left and remaining > 1:
+            # a flipping slot also decodes its first token this step; shrink
+            # the final chunk so that token stays inside the step budget
+            chunk -= 1
+        bucket = bucket_pow2(chunk, CHUNK_BUCKET_MIN, self.prefill_chunk)
+        return req, prompt, cursor, chunk, bucket
+
+    def _note_chunk_bucket(self, bucket: int) -> None:
+        """Crossing accounting, called only for chunks that actually run."""
+        if bucket != self._chunk_bucket:
+            self.stats.chunk_bucket_crossings += 1
+            self._chunk_bucket = bucket
+
+    def _count_prefilling_slot_steps(self) -> None:
+        """One occupancy tick per prefilling slot: active only for the slot
+        that received this step's chunk (the lane serves one per step)."""
+        for s in range(self.num_slots):
+            if self._slots[s] is None or not self._prefilling[s]:
+                continue
+            if s == self._chunk_slot:
+                self.stats.active_slot_steps += 1
+            else:
+                self.stats.idle_slot_steps += 1
+
+    def _count_slot_steps(self, decoding) -> None:
+        """Occupancy accounting for prefill-only steps (the decode lane was
+        skipped, so the per-slot loop never ran)."""
+        self._count_prefilling_slot_steps()
+        for s in range(self.num_slots):
+            if self._slots[s] is None or self._prefilling[s]:
+                if self._slots[s] is None:
+                    self.stats.idle_slot_steps += 1
+                continue
+            # seated but excluded from a skipped decode call
+            self.stats.idle_slot_steps += 1
+
+    def _prime_first_token(
+        self, s: int, req: Request, token: int, now: float
+    ) -> None:
+        """Flip tail: PREFILL -> DECODE, the chunk's last-row sample becomes
+        the request's first emitted token (its TTFT anchor)."""
+        self._prefilling[s] = False
+        self._mirror.touch("active")  # the decoding mask just changed
+        req.tokens.append(token)
+        if req.t_first is None:
+            req.t_first = now
+        self.stats.tokens += 1
+        self._tok[s, 0] = token
+        self._mirror.touch("tok")
+
+
+class ContinuousBatcher(_ChunkedPrefillMixin):
     """Slot-based continuous batching over one fixed-bucket executable.
 
     ``step(cache, tok, pos, active, temps, greedy, keys)`` is the compiled
@@ -319,6 +476,14 @@ class ContinuousBatcher:
     position to 0 (per-row attention masking makes the previous occupant's
     cache rows invisible — see ``attention.decode_attention``), a leave just
     clears the active mask. GREEDY vs SAMPLE is per-slot *data*.
+
+    Prompts (``Request.prompt``) are teacher-forced before generation. With
+    ``prefill_dispatch``/``prefill_chunk`` set (DESIGN.md §10) a seated
+    prompt is ingested C tokens per step through the chunked-prefill
+    executable (slots sit in a PREFILL state until their cursor reaches the
+    prompt end, then flip to DECODE); otherwise prompts fall back to
+    token-by-token forcing through the decode step — one full decode step
+    per prompt token, the baseline the chunked path is benchmarked against.
     """
 
     def __init__(
@@ -329,6 +494,9 @@ class ContinuousBatcher:
         max_len: int,
         cache: Any,
         seed: int = 0,
+        prefill_dispatch: Callable[[int], Callable] | None = None,
+        prefill_chunk: int = 0,
+        token_budget: int = 0,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -346,7 +514,15 @@ class ContinuousBatcher:
         self._keys = self._rng.integers(
             0, 2**32, size=(num_slots, 2), dtype=np.uint32
         )
+        # chunked prefill (DESIGN.md §10): PREFILL/DECODE state per slot
+        self._prefill_dispatch = prefill_dispatch
+        self.prefill_chunk = prefill_chunk if prefill_dispatch else 0
+        self.token_budget = token_budget or (num_slots + self.prefill_chunk)
+        self._chunk_bucket = 0
+        self._cursor = np.zeros(num_slots, np.int64)  # next prompt index fed
+        self._prefilling = np.zeros(num_slots, bool)
         self.stats = BatcherStats()
+        self._mirror = _DeviceMirror(self.stats)
 
     # ------------------------------------------------------------ properties
     @property
@@ -372,16 +548,22 @@ class ContinuousBatcher:
                     "ContinuousBatcher.admit called with no free slot; "
                     "gate admissions on .free_slots."
                 )
-            if req.new_tokens > self.max_len:
+            prompt = req.effective_prompt
+            if len(prompt) + req.new_tokens - 1 > self.max_len:
                 raise ValueError(
-                    f"request {req.rid} wants {req.new_tokens} tokens but the "
-                    f"bucket's cache holds max_len={self.max_len}."
+                    f"request {req.rid} wants {len(prompt)} prompt + "
+                    f"{req.new_tokens} new tokens but the bucket's cache "
+                    f"holds max_len={self.max_len}."
                 )
             s = free.pop(0)  # seat in ascending slot order (deterministic)
             self._slots[s] = req
-            self._tok[s, 0] = req.first_token
+            self._tok[s, 0] = prompt[0]
             self._pos[s] = 0
+            self._cursor[s] = 0
             self._active[s] = True
+            # PREFILL when there is a prompt to ingest and a chunked lane to
+            # ingest it with; single-seed requests decode straight away.
+            self._prefilling[s] = self.prefill_chunk > 0 and len(prompt) > 1
             self._temps[s] = req.temperature
             self._greedy[s] = req.greedy
             self._keys[s] = self._rng.integers(
@@ -389,47 +571,127 @@ class ContinuousBatcher:
             )
             req.t_admit = now
             admitted += 1
+        if admitted:
+            self._mirror.touch(
+                "tok", "pos", "active", "temps", "greedy", "keys"
+            )
         self.stats.admitted += admitted
         return admitted
+
+    # ------------------------------------------------------- prefill lane
+    def _prefill_step(self, now: float) -> list[Request]:
+        """Ingest the next chunk of one prefilling request (DESIGN.md §10):
+        budget split and flip semantics live in ``_ChunkedPrefillMixin``;
+        this body is the dense storage half — the chunk writes straight
+        into the slot's private cache rows (length 0 = idle row)."""
+        s = self._pick_prefill_slot()
+        if s is None:
+            return []
+        req, prompt, cursor, chunk, bucket = self._plan_chunk(s)
+        self._note_chunk_bucket(bucket)
+        step = self._prefill_dispatch(bucket)  # cold: slot-hit usually
+        tok = np.zeros((self.num_slots, bucket), np.int32)
+        tok[s, :chunk] = prompt[cursor : cursor + chunk]
+        length = np.zeros(self.num_slots, np.int32)
+        length[s] = chunk
+        # chunk-lane inputs are genuinely per-chunk data (tokens, cursor,
+        # length, split keys) — uploaded raw, but counted honestly
+        self.stats.h2d_uploads += 4
+        nxt, self._cache, new_keys = step(
+            self._cache,
+            jnp.asarray(tok),
+            jnp.asarray(self._pos),
+            jnp.asarray(length),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            jnp.asarray(self._keys),
+        )
+        self._keys[s] = np.asarray(new_keys)[s]
+        self._mirror.touch("keys")
+        self._chunk_slot = s
+        cursor += chunk
+        self._cursor[s] = cursor
+        self._pos[s] = cursor
+        self._mirror.touch("pos")
+        self.stats.prompt_tokens += chunk
+        self.stats.prefill_chunks += 1
+        finished: list[Request] = []
+        if cursor >= len(prompt):  # flip: prompt ingested, prime generation
+            self._prime_first_token(s, req, int(np.asarray(nxt)[s]), now)
+            if req.done:
+                req.t_done = now
+                finished.append(req)
+                self._slots[s] = None
+                self._active[s] = False
+                self.stats.finished += 1
+        return finished
 
     # -------------------------------------------------------------- hot path
     def step(self, now: float = 0.0) -> list[Request]:
         """One hot-loop step for all slots; returns requests that finished.
 
-        A single direct call of the pre-compiled executable — no tracing, no
-        cache hashing, no mode conditionals, regardless of the request mix.
+        The prefill lane (one chunk for one prefilling request) runs first,
+        then a single direct call of the pre-compiled decode executable for
+        the decoding slots — no tracing, no cache hashing, no mode
+        conditionals, regardless of the request mix.
         """
         if not self._active.any():
             return []
+        finished: list[Request] = []
+        self._chunk_slot = None
+        if self.prefill_chunk > 0 and (self._prefilling & self._active).any():
+            finished.extend(self._prefill_step(now))
+        decoding = self._active & ~self._prefilling
+        if not decoding.any():
+            self.stats.steps += 1  # prefill-only step
+            self._count_slot_steps(decoding)
+            return finished
         nxt, self._cache, pos, keys = self._step(
             self._cache,
-            jnp.asarray(self._tok),
-            jnp.asarray(self._pos),
-            jnp.asarray(self._active),
-            jnp.asarray(self._temps),
-            jnp.asarray(self._greedy),
-            jnp.asarray(self._keys),
+            self._mirror.get("tok", self._tok),
+            self._mirror.get("pos", self._pos),
+            self._mirror.get("active", decoding),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            self._mirror.get("keys", self._keys),
         )
-        nxt = np.asarray(nxt)  # blocks until the device step is done
+        self._mirror.put("pos", pos)
+        self._mirror.put("keys", keys)
+        nxt_host = np.asarray(nxt)  # blocks until the device step is done
         # copies: the host mutates these on join (device views are read-only)
         self._pos = np.array(pos, np.int32)
         self._keys = np.array(keys, np.uint32)
         self.stats.steps += 1
-        finished: list[Request] = []
+        self._tok = nxt_host[:, None].astype(np.int32)
+        self._mirror.put("tok", nxt[:, None])  # device reshape, no upload
+        self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
                 self.stats.idle_slot_steps += 1
                 continue
+            if self._prefilling[s]:
+                continue  # chunked lane owns this slot (ticked above)
             self.stats.active_slot_steps += 1
-            req.tokens.append(int(nxt[s]))
+            prompt = req.effective_prompt
+            if self._cursor[s] + 1 < len(prompt):
+                # token-by-token fallback (prefill_chunk == 0): feed the
+                # next prompt token, drop the sample
+                self._cursor[s] += 1
+                self._tok[s, 0] = prompt[self._cursor[s]]
+                self._mirror.touch("tok")
+                self.stats.prompt_tokens += 1
+                continue
+            req.tokens.append(int(nxt_host[s]))
+            if req.t_first is None:
+                req.t_first = now
             self.stats.tokens += 1
             if req.done:
                 req.t_done = now
                 finished.append(req)
                 self._slots[s] = None
                 self._active[s] = False
-        self._tok = nxt[:, None].astype(np.int32)
-        self.stats.finished += len(finished)
+                self._mirror.touch("active")
+                self.stats.finished += 1
         return finished
 
 
@@ -440,11 +702,10 @@ class PagedBatcherStats(BatcherStats):
     bucket_crossings: int = 0
     starved_admissions: int = 0  # distinct requests deferred for pages
     rejected_oversize: int = 0  # requests that can never fit the page cap
-    prompt_tokens: int = 0  # teacher-forced (not emitted) steps
     shared_tokens: int = 0  # prompt tokens skipped via the prefix cache
 
 
-class PagedContinuousBatcher:
+class PagedContinuousBatcher(_ChunkedPrefillMixin):
     """Continuous batching against a paged KV pool (DESIGN.md §9).
 
     The slot-state machinery mirrors ``ContinuousBatcher``; what changes is
@@ -477,6 +738,9 @@ class PagedContinuousBatcher:
         max_pages_per_req: int,
         cache_copy: Callable | None = None,
         seed: int = 0,
+        prefill_dispatch: Callable[[int], Callable] | None = None,
+        prefill_chunk: int = 0,
+        token_budget: int = 0,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -503,10 +767,18 @@ class PagedContinuousBatcher:
         )
         self._prompt_cached = np.zeros(num_slots, bool)
         self._pages_bucket = 1
+        # chunked prefill (DESIGN.md §10): PREFILL/DECODE state per slot
+        self._prefill_dispatch = prefill_dispatch
+        self.prefill_chunk = prefill_chunk if prefill_dispatch else 0
+        self.token_budget = token_budget or (num_slots + self.prefill_chunk)
+        self._chunk_bucket = 0
+        self._prefilling = np.zeros(num_slots, bool)
         self.preempted: list[Request] = []
         self.rejected: list[Request] = []  # oversized: can never be seated
         self._starved_rids: set[int] = set()
         self.stats = PagedBatcherStats()
+        self._mirror = _DeviceMirror(self.stats)
+        self._bt_dirty = True  # host block-table array needs a rebuild
 
     # ------------------------------------------------------------ properties
     @property
@@ -564,8 +836,12 @@ class PagedContinuousBatcher:
         self._tables[s] = None
         self._slots[s] = None
         self._active[s] = False
+        self._prefilling[s] = False
+        self._mirror.touch("active")
+        self._bt_dirty = True
         req.tokens = []
         req.t_admit = None
+        req.t_first = None  # restart: earlier progress is discarded
         req.preemptions += 1
         self.stats.preemptions += 1
         self.preempted.append(req)
@@ -584,7 +860,12 @@ class PagedContinuousBatcher:
                     "gate admissions on .free_slots."
                 )
             prompt = req.effective_prompt
-            need_pages = -(-req.total_tokens // self.pool.page_size)
+            # the last generated token is emitted but never written to KV,
+            # so capacity is total_tokens - 1 positions (mirrors the dense
+            # admission check)
+            need_pages = -(
+                -max(req.total_tokens - 1, 1) // self.pool.page_size
+            )
             if need_pages > self.max_pages_per_req:
                 # can never fit, at any load: reject this one request rather
                 # than crash the stream (deferring would loop forever)
@@ -621,6 +902,12 @@ class PagedContinuousBatcher:
             self._tok[s, 0] = prompt[matched]
             self._pos[s] = matched
             self._active[s] = True
+            # PREFILL when more than the re-fed last token remains to ingest
+            # and a chunked lane exists; otherwise straight to DECODE
+            # (token-by-token forcing handles any prompt remainder there).
+            self._prefilling[s] = (
+                self.prefill_chunk > 0 and len(prompt) - matched > 1
+            )
             self._temps[s] = req.temperature
             self._greedy[s] = req.greedy
             self._keys[s] = self._rng.integers(
@@ -628,80 +915,189 @@ class PagedContinuousBatcher:
             )
             self._prompt_cached[s] = False
             req.t_admit = now
+            self._mirror.touch(
+                "tok", "pos", "active", "temps", "greedy", "keys"
+            )
+            self._bt_dirty = True
             self.stats.admitted += 1
             self.stats.shared_tokens += matched
         return deferred
 
     def _page_upkeep(self) -> None:
-        """Pre-step cold path: every active slot must own a writable page
-        for its current position; growth/COW happens here, never in-loop."""
+        """Pre-step cold path: every decoding slot must own a writable page
+        for its current position; growth/COW happens here, never in-loop.
+        Prefilling slots are skipped — the prefill lane reserves its own
+        chunk's pages before each chunk step."""
         for s, req in enumerate(self._slots):
-            if req is None or not self._active[s]:
+            if req is None or not self._active[s] or self._prefilling[s]:
                 continue
             table = self._tables[s]
             pos = int(self._pos[s])
             need = table.page_index(pos) + 1 - table.num_pages
-            if need > 0 and not self._reclaim_pages(need, req.priority):
-                # can't grow: preempt the requester itself (lowest standing)
-                self._preempt_slot(s)
-                continue
+            if need > 0:
+                self._bt_dirty = True
+                if not self._reclaim_pages(need, req.priority):
+                    # can't grow: preempt the requester itself
+                    self._preempt_slot(s)
+                    continue
             if not table.ensure_writable(pos, self._device_copy_page):
                 self._preempt_slot(s)
 
     def _device_copy_page(self, src: int, dst: int) -> None:
+        self._bt_dirty = True  # COW swapped a page id in some table
         if self._cache_copy is not None:
             self._cache = self._cache_copy(self._cache, src, dst)
 
+    # ------------------------------------------------------- prefill lane
+    def _prefill_step(self, now: float) -> list[Request]:
+        """Ingest the next chunk of one prefilling request (DESIGN.md §10):
+        budget split and flip semantics live in ``_ChunkedPrefillMixin``;
+        this body is the paged storage half — the chunk's pages are
+        reserved up front (reclaim -> preempt-self on OOM, exactly like
+        decode growth), it is fed to the ``("pf", chunk_bucket)``
+        executable with the real length as data (padded columns write only
+        the null page), and the flip publishes the prompt's full pages to
+        the prefix cache."""
+        s = self._pick_prefill_slot()
+        if s is None:
+            return []
+        req, prompt, cursor, chunk, bucket = self._plan_chunk(s)
+        table = self._tables[s]
+        need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
+        if need > 0:
+            self._bt_dirty = True
+            if not self._reclaim_pages(need, req.priority) or (
+                not table.ensure_capacity(cursor + chunk - 1)
+            ):
+                self._preempt_slot(s)  # can't grow: preempt the requester
+                return []
+        self._note_chunk_bucket(bucket)
+        step = self._prefill_dispatch(bucket)  # cold: slot-hit usually
+        tok = np.zeros((1, bucket), np.int32)
+        tok[0, :chunk] = prompt[cursor : cursor + chunk]
+        bt = np.zeros((1, self.max_pages_per_req), np.int32)
+        bt[0, : table.num_pages] = table.pages
+        # chunk-lane inputs are per-chunk data (tokens, cursor, table row,
+        # length, the slot's sampling params/keys) — uploaded raw, counted
+        self.stats.h2d_uploads += 7
+        nxt, self._cache, new_keys = step(
+            self._cache,
+            jnp.asarray(tok),
+            jnp.asarray([cursor], jnp.int32),
+            jnp.asarray(bt),
+            jnp.asarray([chunk], jnp.int32),
+            jnp.asarray(self._temps[s : s + 1]),
+            jnp.asarray(self._greedy[s : s + 1]),
+            jnp.asarray(self._keys[s : s + 1]),
+        )
+        self._keys[s] = np.asarray(new_keys)[0]
+        self._mirror.touch("keys")
+        self._chunk_slot = s
+        cursor += chunk
+        self._cursor[s] = cursor
+        self._pos[s] = cursor
+        self._mirror.touch("pos")
+        table.num_tokens = cursor
+        self.stats.prompt_tokens += chunk
+        self.stats.prefill_chunks += 1
+        finished: list[Request] = []
+        if cursor >= len(prompt):  # flip: prompt ingested, prime generation
+            # the packed decode table zeroed this slot's row while it was
+            # prefilling; it must carry the real pages from the next step on
+            self._bt_dirty = True
+            # publish the prompt's full pages for sharing at the flip
+            full = len(prompt) // self.pool.page_size
+            if full > 0:
+                self.prefix.insert(prompt, table.pages[:full])
+            self._prompt_cached[s] = True
+            self._prime_first_token(s, req, int(np.asarray(nxt)[0]), now)
+            if req.done:  # new_tokens == 1: the primed token was the last
+                req.t_done = now
+                table.release()
+                self._tables[s] = None
+                self._slots[s] = None
+                self._active[s] = False
+                self._bt_dirty = True
+                self.stats.finished += 1
+                finished.append(req)
+        return finished
+
     # -------------------------------------------------------------- hot path
     def step(self, now: float = 0.0) -> list[Request]:
-        """One decode step for all slots; returns finished requests.
+        """One step for all slots; returns finished requests.
 
-        Cold path first (page upkeep, bucket dispatch — both no-ops on the
-        vast majority of steps), then a single direct executable call.
+        Cold path first (one prefill chunk, page upkeep, bucket dispatch —
+        the latter two no-ops on the vast majority of steps), then a single
+        direct decode-executable call for the decoding slots.
         """
-        self._page_upkeep()
         if not self._active.any():
             return []
+        finished: list[Request] = []
+        self._chunk_slot = None
+        if self.prefill_chunk > 0 and (self._prefilling & self._active).any():
+            finished.extend(self._prefill_step(now))
+        self._page_upkeep()
+        decoding = self._active & ~self._prefilling
+        if not decoding.any():
+            self.stats.steps += 1  # prefill-only step
+            self._count_slot_steps(decoding)
+            return finished
         bucket = bucket_pow2(
-            max(t.num_pages for t in self.live_tables() if t) or 1,
+            max(
+                [t.num_pages for s, t in enumerate(self._tables)
+                 if t is not None and decoding[s]] or [1]
+            ) or 1,
             1,
             self.max_pages_per_req,
         )
         if bucket != self._pages_bucket:
             self.stats.bucket_crossings += 1
             self._pages_bucket = bucket
+            self._bt_dirty = True  # table width changed
         step = self._dispatch(bucket)  # cold: slot-hit unless bucket moved
-        bt = np.zeros((self.num_slots, bucket), np.int32)  # NULL_PAGE fill
-        for s, table in enumerate(self._tables):
-            if table is not None and self._active[s]:
-                bt[s, : table.num_pages] = table.pages
+        if self._bt_dirty:
+            bt = np.zeros((self.num_slots, bucket), np.int32)  # NULL_PAGE
+            for s, table in enumerate(self._tables):
+                if table is not None and decoding[s]:
+                    bt[s, : table.num_pages] = table.pages
+            self._bt_host = bt
+            self._bt_dirty = False
+            self._mirror.touch("bt")
         nxt, self._cache, pos, keys = step(
             self._cache,
-            jnp.asarray(self._tok),
-            jnp.asarray(self._pos),
-            jnp.asarray(bt),
-            jnp.asarray(self._active),
-            jnp.asarray(self._temps),
-            jnp.asarray(self._greedy),
-            jnp.asarray(self._keys),
+            self._mirror.get("tok", self._tok),
+            self._mirror.get("pos", self._pos),
+            self._mirror.get("bt", self._bt_host),
+            self._mirror.get("active", decoding),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            self._mirror.get("keys", self._keys),
         )
-        nxt = np.asarray(nxt)  # blocks until the device step is done
+        self._mirror.put("pos", pos)
+        self._mirror.put("keys", keys)
+        nxt_host = np.asarray(nxt)  # blocks until the device step is done
         self._pos = np.array(pos, np.int32)
         self._keys = np.array(keys, np.uint32)
         self.stats.steps += 1
-        finished: list[Request] = []
+        self._tok = nxt_host[:, None].astype(np.int32)
+        self._mirror.put("tok", nxt[:, None])  # device reshape, no upload
+        self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
                 self.stats.idle_slot_steps += 1
                 continue
+            if self._prefilling[s]:
+                continue  # chunked lane owns this slot (ticked above)
             self.stats.active_slot_steps += 1
             table = self._tables[s]
             table.num_tokens = int(self._pos[s])
             prompt = req.effective_prompt
             if self._cursor[s] + 1 < len(prompt):
-                # teacher forcing: feed the next prompt token, drop the sample
+                # token-by-token fallback (prefill_chunk == 0): feed the
+                # next prompt token, drop the sample
                 self._cursor[s] += 1
                 self._tok[s, 0] = prompt[self._cursor[s]]
+                self._mirror.touch("tok")
                 self.stats.prompt_tokens += 1
                 continue
             if not self._prompt_cached[s]:
@@ -710,8 +1106,9 @@ class PagedContinuousBatcher:
                 if full > 0:
                     self.prefix.insert(prompt, table.pages[:full])
                 self._prompt_cached[s] = True
-            req.tokens.append(int(nxt[s]))
-            self._tok[s, 0] = nxt[s]
+            req.tokens.append(int(nxt_host[s]))
+            if req.t_first is None:
+                req.t_first = now
             self.stats.tokens += 1
             if req.done:
                 req.t_done = now
@@ -720,20 +1117,22 @@ class PagedContinuousBatcher:
                 self._tables[s] = None
                 self._slots[s] = None
                 self._active[s] = False
-        self.stats.finished += len(finished)
+                self._mirror.touch("active")
+                self._bt_dirty = True
+                self.stats.finished += 1
         return finished
 
 
 # ------------------------------------------------------------------ reports
 def latency_report(requests: Sequence[Request]) -> dict:
-    """p50/p95/p99 latency + throughput over finished requests."""
+    """p50/p95/p99 latency + TTFT + throughput over finished requests."""
     done = [r for r in requests if r.t_done is not None]
     if not done:
         return {"finished": 0}
     lat = np.array([r.latency_s for r in done])
     toks = sum(len(r.tokens) for r in done)
     span = max(r.t_done for r in done) - min(r.arrival_s for r in done)
-    return {
+    report = {
         "finished": len(done),
         "tokens": toks,
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
@@ -743,3 +1142,12 @@ def latency_report(requests: Sequence[Request]) -> dict:
         "tok_per_s": toks / span if span > 0 else float("inf"),
         "span_s": float(span),
     }
+    ttft = np.array(
+        [r.t_first - r.arrival_s for r in done if r.t_first is not None]
+    )
+    if len(ttft):  # time-to-first-token: the prompt-ingestion SLO metric
+        report["ttft_p50_ms"] = float(np.percentile(ttft, 50) * 1e3)
+        report["ttft_p95_ms"] = float(np.percentile(ttft, 95) * 1e3)
+        report["ttft_p99_ms"] = float(np.percentile(ttft, 99) * 1e3)
+        report["ttft_mean_ms"] = float(ttft.mean() * 1e3)
+    return report

@@ -41,6 +41,7 @@ from repro.configs import ArchConfig
 from repro.core import DispatchPolicy, Dispatcher, bucket_multiple
 from repro.runtime import steps as steps_mod
 from repro.runtime.scheduler import (
+    CHUNK_BUCKET_MIN,
     Clock,
     ContinuousBatcher,
     PagedContinuousBatcher,
@@ -69,6 +70,15 @@ class EngineConfig:
     # "dense-equivalent": slots × max_len tokens worth of pages.
     page_size: int = 16
     num_pages: int = 0
+    # Chunked prefill (DESIGN.md §10): the largest prompt chunk ingested per
+    # step. 0 disables the chunked lane (prompts teacher-force token by
+    # token at decode speed — the baseline). Chunk sizes are drawn from the
+    # log-sized bucket set {8, 16, ..., prefill_chunk}, each an AOT-warmed
+    # ("pf", chunk_bucket) dispatch key.
+    prefill_chunk: int = 0
+    # Per-step token budget split between one prefilling request's chunk and
+    # the decoding slots; 0 = slots + prefill_chunk.
+    token_budget: int = 0
 
 
 class Engine:
@@ -116,13 +126,20 @@ class Engine:
     def _build(self, key: tuple) -> Callable:
         """Dispatcher builder: compile the executable for a dispatch key.
 
-        Keys: ``(bucket, mode)`` for per-burst steps (mode baked in), or
-        ``("cb", slots)`` for the continuous-batching step (mode as data).
+        Keys: ``(bucket, mode)`` for per-burst steps (mode baked in),
+        ``("cb", slots)`` / ``("cb", slots, pages_bucket)`` for the
+        continuous-batching decode steps (mode as data), and the chunked
+        prefill lane (DESIGN.md §10): ``("pf", chunk_bucket)`` for the paged
+        prompt path, ``("pfd", slots, chunk_bucket)`` for the dense one.
         """
         if key[0] == "cb":
             if len(key) == 3:  # ("cb", slots, pages_bucket): paged decode
                 return self._build_paged_slot_decode(key[1], key[2])
             return self._build_slot_decode(key[1])
+        if key[0] == "pf":  # ("pf", chunk_bucket): paged chunked prefill
+            return self._build_paged_prefill(key[1])
+        if key[0] == "pfd":  # ("pfd", slots, chunk_bucket): dense prefill
+            return self._build_slot_prefill(key[1], key[2])
         bucket, mode = key
         return self._build_burst_decode(bucket, mode)
 
@@ -194,12 +211,93 @@ class Engine:
         )
         return lowered.compile()
 
+    def _build_paged_prefill(self, chunk_bucket: int) -> Callable:
+        """Executable for the ``("pf", chunk_bucket)`` dispatch key.
+
+        Chunk size is the semi-static condition here (DESIGN.md §10): the
+        chunk width is baked into the shapes, one executable per bucket in
+        the log-sized set, all AOT-warmed — prompt-length variation picks an
+        executable on the cold path and never branches in the hot loop. The
+        block-table width is pinned at the per-request page cap (masked
+        positions contribute exactly nothing), so chunk size is the *only*
+        prefill coordinate.
+        """
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_paged_prefill_fn(cfg, moe_policy=ecfg.moe_policy)
+        c_shape = jax.eval_shape(
+            lambda: models.init_paged_cache(
+                cfg, self.pool_pages + 1, ecfg.page_size
+            )
+        )
+        pb = self.max_pages_per_req
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((1, chunk_bucket), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1, pb), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.bool_),
+            jax.ShapeDtypeStruct((1, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def _build_slot_prefill(self, slots: int, chunk_bucket: int) -> Callable:
+        """Executable for the ``("pfd", slots, chunk_bucket)`` dispatch key:
+        the dense engine's chunked prompt path (DESIGN.md §10) — a slot's
+        private cache rows are a trivial identity block table, so the same
+        chunk-bucket machinery serves both engines."""
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_slot_prefill_fn(cfg, moe_policy=ecfg.moe_policy)
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(cfg, slots, ecfg.max_len)
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
     @property
     def pool_pages(self) -> int:
         """Allocatable page count (excluding the null page)."""
         if self.ecfg.num_pages > 0:
             return self.ecfg.num_pages
         return (self.ecfg.max_batch * self.ecfg.max_len) // self.ecfg.page_size
+
+    @property
+    def max_pages_per_req(self) -> int:
+        """Per-request page cap: a full max_len sequence, pool permitting."""
+        return min(
+            self.pool_pages, -(-self.ecfg.max_len // self.ecfg.page_size)
+        )
+
+    def _chunk_buckets(self) -> list[int]:
+        """The log-sized chunk-bucket fan-out {8, 16, ..., prefill_chunk}."""
+        if self.ecfg.prefill_chunk <= 0:
+            return []
+        out, b = [], CHUNK_BUCKET_MIN
+        while True:
+            b = min(b, self.ecfg.prefill_chunk)
+            out.append(b)
+            if b >= self.ecfg.prefill_chunk:
+                return out
+            b *= 2
+
+    def _supports_chunked_prefill(self) -> bool:
+        """Chunked prefill is attention-only: SSM slots carry recurrent
+        state and would need a per-chunk scan (ROADMAP open item)."""
+        return self.ecfg.prefill_chunk > 0 and all(
+            self.cfg.mixer_at(slot).startswith("attn")
+            for slot in range(self.cfg.period)
+        )
 
     def set_mode(
         self, *, batch: int, sampling: int = GREEDY, warm: bool = True
@@ -292,25 +390,64 @@ class Engine:
         s = slots or self.ecfg.max_batch
         exe = self._decode.dispatch(("cb", s))
         cache = models.init_cache(self.cfg, s, self.ecfg.max_len)
-        # Dummy-order warming (paper §4.3): pay device program load now. All
-        # slots are inactive, so positions stay 0 and the garbage K/V the
-        # warm call writes is masked out for any future occupant.
+        # Dummy-order warming (paper §4.3): pay device program load now —
+        # through the exact runtime path (upload converts, device reshape,
+        # D2H pulls), so the first real step op-compiles nothing. All slots
+        # are inactive, so positions stay 0 and the garbage K/V the warm
+        # call writes is masked out for any future occupant.
         warm_out = exe(
             self.params,
             cache,
-            jnp.zeros((s, 1), jnp.int32),
-            jnp.zeros((s,), jnp.int32),
-            jnp.zeros((s,), jnp.bool_),
-            jnp.ones((s,), jnp.float32),
-            jnp.ones((s,), jnp.bool_),
-            jnp.zeros((s, 2), jnp.uint32),
+            jnp.asarray(np.zeros((s, 1), np.int32)),
+            jnp.asarray(np.zeros(s, np.int32)),
+            jnp.asarray(np.zeros(s, bool)),
+            jnp.asarray(np.ones(s, np.float32)),
+            jnp.asarray(np.ones(s, bool)),
+            jnp.asarray(np.zeros((s, 2), np.uint32)),
         )
         jax.block_until_ready(warm_out)
-        _, cache, _, _ = warm_out
+        nxt, cache, pos, keys = warm_out
+        _ = nxt[:, None]  # the hot loop's device-side tok reshape
+        np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
 
         def bound_step(cache, tok, pos, active, temps, greedy, keys):
             self.stats["hot_calls"] += 1
             return exe(self.params, cache, tok, pos, active, temps, greedy, keys)
+
+        # Chunked-prefill lane (DESIGN.md §10): AOT-compile *and* dummy-run
+        # every chunk bucket (paper §4.3) so prompt-length variation never
+        # compiles or pays first-run program load post-warmup. Warm inputs
+        # use length 0 everywhere: no cache row is written.
+        prefill_dispatch = None
+        if self._supports_chunked_prefill():
+            for cb in self._chunk_buckets():
+                pf_exe = self._decode.build(("pfd", s, cb))
+                # warm the exact runtime path (converts included)
+                warm = pf_exe(
+                    self.params,
+                    cache,
+                    jnp.asarray(np.zeros((s, cb), np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.ones(s, np.float32)),
+                    jnp.asarray(np.ones(s, bool)),
+                    jnp.asarray(np.zeros((s, 2), np.uint32)),
+                )
+                jax.block_until_ready(warm)
+                np.asarray(warm[0]), np.asarray(warm[2])
+                cache = warm[1]
+
+            def prefill_dispatch(chunk_bucket: int) -> Callable:
+                pf = self._decode.dispatch(("pfd", s, chunk_bucket))
+
+                def bound_prefill(cache, tok, start, length, temps, greedy, keys):
+                    self.stats["hot_calls"] += 1
+                    return pf(
+                        self.params, cache, tok, start, length, temps,
+                        greedy, keys,
+                    )
+
+                return bound_prefill
 
         return ContinuousBatcher(
             step=bound_step,
@@ -318,6 +455,9 @@ class Engine:
             max_len=self.ecfg.max_len,
             cache=cache,
             seed=seed,
+            prefill_dispatch=prefill_dispatch,
+            prefill_chunk=self.ecfg.prefill_chunk,
+            token_budget=self.ecfg.token_budget,
         )
 
 
@@ -357,9 +497,7 @@ class Engine:
         cache = models.init_paged_cache(
             self.cfg, self.pool_pages + 1, ecfg.page_size
         )
-        max_pages_per_req = min(
-            self.pool_pages, -(-ecfg.max_len // ecfg.page_size)
-        )
+        max_pages_per_req = self.max_pages_per_req
 
         def dispatch(pages_bucket: int) -> Callable:
             exe = self._decode.dispatch(("cb", s, pages_bucket))
@@ -376,27 +514,93 @@ class Engine:
         if warm_all_buckets:  # AOT warm-everything: log-sized bucket fan-out
             pb = 1
             while True:
-                self._decode.build(("cb", s, pb))
+                cb_exe = self._decode.build(("cb", s, pb))
+                # dummy-run too (paper §4.3): a built-but-never-run
+                # executable still pays program load at its first crossing,
+                # and the hot loop's host<->device glue (upload converts,
+                # the [:,None] reshape, D2H pulls) op-compiles per shape on
+                # first sight — warm the *exact* runtime path, so the first
+                # real request pays none of it. All slots inactive + null
+                # tables: writes hit the null page.
+                warm = cb_exe(
+                    self.params,
+                    cache,
+                    jnp.asarray(np.zeros((s, 1), np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.zeros((s, pb), np.int32)),
+                    jnp.asarray(np.zeros(s, bool)),
+                    jnp.asarray(np.ones(s, np.float32)),
+                    jnp.asarray(np.ones(s, bool)),
+                    jnp.asarray(np.zeros((s, 2), np.uint32)),
+                )
+                jax.block_until_ready(warm)
+                nxt, cache, pos, keys = warm
+                _ = nxt[:, None]  # the hot loop's device-side tok reshape
+                np.asarray(nxt), np.array(pos, np.int32)
+                np.array(keys, np.uint32)
                 if pb >= max_pages_per_req:
                     break
                 pb = min(pb * 2, max_pages_per_req)
 
-        # Dummy-order warming (paper §4.3) of the smallest bucket: all slots
-        # inactive, null block tables — writes land in the null page.
+        # Chunked-prefill lane (DESIGN.md §10): one ("pf", chunk_bucket)
+        # executable per log-sized bucket, all AOT-compiled *and* dummy-run
+        # (paper §4.3: a built-but-never-run executable still pays program
+        # load on first sight) — no chunk-bucket crossing ever compiles or
+        # stalls post-warmup. Warm inputs use length 0 and null tables, so
+        # the garbage K/V lands in the reserved null page.
+        prefill_dispatch = None
+        if self._supports_chunked_prefill():
+            for cb in self._chunk_buckets():
+                pf_exe = self._decode.build(("pf", cb))
+                # warm the exact runtime path (converts included), not just
+                # the executable — see the decode-bucket warm loop above
+                warm = pf_exe(
+                    self.params,
+                    cache,
+                    jnp.asarray(np.zeros((1, cb), np.int32)),
+                    jnp.asarray(np.zeros(1, np.int32)),
+                    jnp.asarray(np.zeros((1, max_pages_per_req), np.int32)),
+                    jnp.asarray(np.zeros(1, np.int32)),
+                    jnp.asarray(np.ones(1, np.float32)),
+                    jnp.asarray(np.ones(1, bool)),
+                    jnp.asarray(np.zeros((1, 2), np.uint32)),
+                )
+                jax.block_until_ready(warm)
+                np.asarray(warm[0]), np.asarray(warm[2])
+                cache = warm[1]
+
+            def prefill_dispatch(chunk_bucket: int) -> Callable:
+                pf = self._decode.dispatch(("pf", chunk_bucket))
+
+                def bound_prefill(
+                    cache, tok, start, bt, length, temps, greedy, keys
+                ):
+                    self.stats["hot_calls"] += 1
+                    return pf(
+                        self.params, cache, tok, start, bt, length, temps,
+                        greedy, keys,
+                    )
+
+                return bound_prefill
+
+        # Pre-bind the hot slot to the smallest bucket (cheap dispatch); the
+        # warm-all loop above already dummy-ran every bucket, so only the
+        # opt-out path still needs its own warm call (paper §4.3).
         exe = self._decode.dispatch(("cb", s, 1))
-        warm_out = exe(
-            self.params,
-            cache,
-            jnp.zeros((s, 1), jnp.int32),
-            jnp.zeros((s,), jnp.int32),
-            jnp.zeros((s, 1), jnp.int32),
-            jnp.zeros((s,), jnp.bool_),
-            jnp.ones((s,), jnp.float32),
-            jnp.ones((s,), jnp.bool_),
-            jnp.zeros((s, 2), jnp.uint32),
-        )
-        jax.block_until_ready(warm_out)
-        cache = warm_out[1]
+        if not warm_all_buckets:
+            warm_out = exe(
+                self.params,
+                cache,
+                jnp.zeros((s, 1), jnp.int32),
+                jnp.zeros((s,), jnp.int32),
+                jnp.zeros((s, 1), jnp.int32),
+                jnp.zeros((s,), jnp.bool_),
+                jnp.ones((s,), jnp.float32),
+                jnp.ones((s,), jnp.bool_),
+                jnp.zeros((s, 2), jnp.uint32),
+            )
+            jax.block_until_ready(warm_out)
+            cache = warm_out[1]
 
         # COW device half (cold path): one jitted in-place page copy; the
         # batcher threads it through the same cache its steps donate.
@@ -413,6 +617,9 @@ class Engine:
                 c, jnp.int32(src), jnp.int32(dst)
             ),
             seed=seed,
+            prefill_dispatch=prefill_dispatch,
+            prefill_chunk=self.ecfg.prefill_chunk,
+            token_budget=self.ecfg.token_budget,
         )
 
 
@@ -455,6 +662,11 @@ def run_continuous_stream(
         slots=cb.num_slots,
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),
+        prefill_chunk=cb.prefill_chunk,
+        prompt_tokens=cb.stats.prompt_tokens,
+        prefill_chunks=cb.stats.prefill_chunks,
+        chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
+        h2d_uploads=cb.stats.h2d_uploads,
         compiles_total=eng._decode.stats.misses,
         compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
         rebinds=eng._decode.stats.rebinds - warm_rebinds,
@@ -512,6 +724,8 @@ def run_burst_stream(
             done_t = clock.now()
             for i, r in enumerate(chunk):
                 r.tokens = [int(t) for t in toks[i, : r.new_tokens]]
+                # the burst hands all tokens back at once: TTFT == latency
+                r.t_first = done_t
                 r.t_done = done_t
                 finished.append(r)
     report = latency_report(finished)
@@ -614,6 +828,10 @@ def run_paged_stream(
         starved_admissions=cb.stats.starved_admissions,
         rejected_oversize=cb.stats.rejected_oversize,
         bucket_crossings=cb.stats.bucket_crossings,
+        prefill_chunk=cb.prefill_chunk,
+        prefill_chunks=cb.stats.prefill_chunks,
+        chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
+        h2d_uploads=cb.stats.h2d_uploads,
         cow_copies=cb.pool.stats.cow_copies,
         prefix_evictions=cb.pool.stats.prefix_evictions,
         unserved=len(requests) - len(finished),

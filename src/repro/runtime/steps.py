@@ -171,17 +171,9 @@ def make_slot_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callabl
         logits, cache = models.decode_step(
             cfg, params, cache, tok, pos, moe_policy=moe_policy
         )
-        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        t = jnp.maximum(temps, 1e-4)[:, None].astype(logits.dtype)
-        sample_keys, new_keys = jnp.split(
-            jax.vmap(lambda k: jax.random.split(k, 2))(keys), 2, axis=1
-        )
-        s = jax.vmap(jax.random.categorical)(
-            sample_keys[:, 0], logits / t
-        ).astype(jnp.int32)
-        nxt = jnp.where(greedy, g, s)
+        nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
         new_pos = pos + active.astype(jnp.int32)
-        return nxt, cache, new_pos, new_keys[:, 0]
+        return nxt, cache, new_pos, new_keys
 
     return slot_step
 
@@ -213,19 +205,89 @@ def make_paged_slot_decode_fn(
         logits, cache = models.paged_decode_step(
             cfg, params, cache, tok, pos, block_tables, moe_policy=moe_policy
         )
-        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        t = jnp.maximum(temps, 1e-4)[:, None].astype(logits.dtype)
-        sample_keys, new_keys = jnp.split(
-            jax.vmap(lambda k: jax.random.split(k, 2))(keys), 2, axis=1
-        )
-        s = jax.vmap(jax.random.categorical)(
-            sample_keys[:, 0], logits / t
-        ).astype(jnp.int32)
-        nxt = jnp.where(greedy, g, s)
+        nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
         new_pos = pos + active.astype(jnp.int32)
-        return nxt, cache, new_pos, new_keys[:, 0]
+        return nxt, cache, new_pos, new_keys
 
     return paged_slot_step
+
+
+def _sample_rows(logits, temps, greedy, keys):
+    """Shared sampling-as-data tail: greedy/temperature are per-row *data*
+    (DESIGN.md §4), so mode flips never touch the cold path. Returns
+    (next_tok [B], new_keys [B,2])."""
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.maximum(temps, 1e-4)[:, None].astype(logits.dtype)
+    sample_keys, new_keys = jnp.split(
+        jax.vmap(lambda k: jax.random.split(k, 2))(keys), 2, axis=1
+    )
+    s = jax.vmap(jax.random.categorical)(
+        sample_keys[:, 0], logits / t
+    ).astype(jnp.int32)
+    return jnp.where(greedy, g, s), new_keys[:, 0]
+
+
+def make_paged_prefill_fn(
+    cfg: ArchConfig, *, moe_policy: str = "drop"
+) -> Callable:
+    """Chunked-prefill step through the paged KV cache (DESIGN.md §10).
+
+        step(params, cache, tok[B,CB], start[B], block_tables[B,PB],
+             length[B], temps[B], greedy[B], keys[B,2])
+          -> (next_tok[B], cache, new_keys[B,2])
+
+    ``CB`` (the chunk bucket, from the log-sized set {8, 16, 32, ...}) is
+    baked into the executable's shapes — the semi-static chunk key
+    ``("pf", chunk_bucket)``. Ingesting a prompt is then a handful of direct
+    executable calls instead of one decode step per token; the returned
+    ``next_tok`` (sampled from the last real chunk row) primes generation
+    when the chunk reaches the prompt end. Cache contents and priming
+    *logits* are bit-for-bit what token-by-token forcing through
+    ``make_paged_slot_decode_fn`` would have produced — so greedy streams
+    are identical across ingestion modes; sampling streams draw from the
+    same distribution but a different PRNG path (keys split once per chunk,
+    not once per prompt token). Columns >= ``length`` are bucket padding:
+    their K/V writes land in the reserved null page and their logits are
+    never read.
+    """
+
+    def paged_prefill_step(
+        params, cache, tok, start, block_tables, length, temps, greedy, keys
+    ):
+        logits, cache = models.paged_prefill_step(
+            cfg, params, cache, tok, start, block_tables, length,
+            moe_policy=moe_policy,
+        )
+        nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
+        return nxt, cache, new_keys
+
+    return paged_prefill_step
+
+
+def make_slot_prefill_fn(
+    cfg: ArchConfig, *, moe_policy: str = "drop"
+) -> Callable:
+    """Chunked-prefill step into the dense per-slot cache (DESIGN.md §10).
+
+        step(params, cache, tok[S,CB], start[S], length[S], temps[S],
+             greedy[S], keys[S,2])
+          -> (next_tok[S], cache, new_keys[S,2])
+
+    The dense engine's prompt path: every slot carries its own chunk window
+    (``length`` 0 = idle row, writes nothing), so the one executable per
+    ``("pfd", slots, chunk_bucket)`` serves any mix of prefilling and idle
+    slots. Behaviourally aligned with ``make_paged_prefill_fn`` — a dense
+    slot's cache rows are a trivial identity block table.
+    """
+
+    def slot_prefill_step(params, cache, tok, start, length, temps, greedy, keys):
+        logits, cache = models.chunked_decode_step(
+            cfg, params, cache, tok, start, length, moe_policy=moe_policy
+        )
+        nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
+        return nxt, cache, new_keys
+
+    return slot_prefill_step
 
 
 def lower_decode(

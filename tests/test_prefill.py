@@ -1,0 +1,429 @@
+"""Chunked-prefill tests (DESIGN.md §10): Pallas kernel vs oracle, bitwise
+equivalence of chunked vs token-by-token prompt ingestion (cache contents
+and first sampled token), the PREFILL -> DECODE scheduler state machine
+(budget split, flip-time prefix insertion, preemption mid-prefill), the
+host->device upload dedup, and the end-to-end zero-recompile contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.runtime.kvcache import PagePool, PrefixCache
+from repro.runtime.scheduler import (
+    ContinuousBatcher,
+    PagedContinuousBatcher,
+    Request,
+)
+
+
+# -------------------------------------------------------- kernel vs oracle
+def test_prefill_kernel_matches_oracle():
+    from repro.kernels import (
+        paged_prefill_attention,
+        paged_prefill_attention_reference,
+    )
+
+    rng = np.random.default_rng(1)
+    for (B, H, KH, dh, ps, PB, C) in [
+        (2, 8, 4, 64, 8, 4, 8),
+        (1, 4, 4, 32, 16, 2, 16),
+        (2, 4, 2, 32, 8, 8, 32),
+    ]:
+        P = 1 + B * PB
+        q = jnp.asarray(rng.normal(size=(B, C, H, dh)), jnp.float32)
+        kp = jnp.asarray(rng.normal(size=(P, ps, KH, dh)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(P, ps, KH, dh)), jnp.float32)
+        # shuffled (non-contiguous) pages: order comes from the table
+        perm = rng.permutation(np.arange(1, P))
+        bt = jnp.asarray(perm.reshape(B, PB), jnp.int32)
+        start = jnp.asarray(
+            rng.integers(0, ps * PB - C + 1, B), jnp.int32
+        )
+        for kw in ({}, {"window": 9}, {"softcap": 10.0}):
+            ref = paged_prefill_attention_reference(q, kp, vp, bt, start, **kw)
+            out = paged_prefill_attention(
+                q, kp, vp, bt, start, interpret=True, **kw
+            )
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref), atol=2e-6
+            )
+
+
+# --------------------------------------------- chunked vs sequential (bits)
+def test_paged_chunked_prefill_matches_sequential_bitwise():
+    """Chunked ingestion == C iterations of paged_decode_step: identical
+    cache bits (every allocatable page) and identical priming logits. The
+    null page is excluded — bucket-padding rows scribble it by design."""
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    ps, PB = 4, 8
+    seq_cache = models.init_paged_cache(cfg, 1 + PB, ps)
+    chk_cache = models.init_paged_cache(cfg, 1 + PB, ps)
+    bt = jnp.asarray(1 + np.arange(PB).reshape(1, PB), jnp.int32)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 20)
+
+    dstep = jax.jit(
+        lambda p, c, t, po, b: models.paged_decode_step(cfg, p, c, t, po, b)
+    )
+    for i, t in enumerate(prompt):
+        ld, seq_cache = dstep(
+            params, seq_cache, jnp.asarray([[t]], jnp.int32),
+            jnp.asarray([i], jnp.int32), bt,
+        )
+
+    pf = jax.jit(
+        lambda p, c, t, s, b, l: models.paged_prefill_step(
+            cfg, p, c, t, s, b, l
+        )
+    )
+    cur = 0
+    for chunk in (8, 8, 4):  # last chunk padded into its bucket
+        CB = 8
+        tok = np.zeros((1, CB), np.int32)
+        tok[0, :chunk] = prompt[cur : cur + chunk]
+        lc, chk_cache = pf(
+            params, chk_cache, jnp.asarray(tok),
+            jnp.asarray([cur], jnp.int32), bt,
+            jnp.asarray([chunk], jnp.int32),
+        )
+        cur += chunk
+
+    for a, b in zip(jax.tree.leaves(seq_cache), jax.tree.leaves(chk_cache)):
+        np.testing.assert_array_equal(
+            np.asarray(a)[:, 1:], np.asarray(b)[:, 1:]
+        )
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(lc))
+    assert int(np.argmax(np.asarray(ld))) == int(np.argmax(np.asarray(lc)))
+
+
+def test_dense_chunked_prefill_matches_sequential_bitwise():
+    """Dense chunked ingestion == C iterations of per-row decode_step."""
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    S, max_len = 2, 32
+    seq_cache = models.init_cache(cfg, S, max_len)
+    chk_cache = models.init_cache(cfg, S, max_len)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 20)
+
+    dstep = jax.jit(lambda p, c, t, po: models.decode_step(cfg, p, c, t, po))
+    for i, t in enumerate(prompt):
+        ld, seq_cache = dstep(
+            params, seq_cache, jnp.asarray([[t]] * S, jnp.int32),
+            jnp.asarray([i] * S, jnp.int32),
+        )
+
+    cstep = jax.jit(
+        lambda p, c, t, s, l: models.chunked_decode_step(cfg, p, c, t, s, l)
+    )
+    cur = 0
+    for chunk in (8, 8, 4):
+        CB = 8
+        tok = np.zeros((S, CB), np.int32)
+        tok[:, :chunk] = prompt[cur : cur + chunk]
+        lc, chk_cache = cstep(
+            params, chk_cache, jnp.asarray(tok),
+            jnp.asarray([cur] * S, jnp.int32),
+            jnp.asarray([chunk] * S, jnp.int32),
+        )
+        cur += chunk
+
+    for a, b in zip(jax.tree.leaves(seq_cache), jax.tree.leaves(chk_cache)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ld), np.asarray(lc))
+
+
+# --------------------------------------- state machine (no model, no jit)
+def _fake_decode_dispatch(bucket):
+    def step(cache, tok, pos, bt, active, temps, greedy, keys):
+        nxt = np.asarray(tok)[:, 0] + 1
+        new_pos = np.asarray(pos) + np.asarray(active).astype(np.int32)
+        return nxt, cache, new_pos, keys
+    return step
+
+
+class _FakePrefill:
+    """Records every chunk call: (bucket, start, length, tokens fed)."""
+
+    def __init__(self):
+        self.calls = []
+
+    def __call__(self, bucket):
+        def step(cache, tok, start, bt, length, temps, greedy, keys):
+            t = np.asarray(tok)
+            self.calls.append(
+                (bucket, int(np.asarray(start)[0]),
+                 int(np.asarray(length)[0]),
+                 tuple(int(x) for x in t[0, : int(np.asarray(length)[0])]))
+            )
+            nxt = np.asarray([t[0, max(int(np.asarray(length)[0]) - 1, 0)] + 1])
+            return nxt, cache, keys
+        return step
+
+
+def _paged_batcher(pool, *, slots=2, prefill_chunk=16, token_budget=0,
+                   max_pages=8):
+    fake_pf = _FakePrefill()
+    cb = PagedContinuousBatcher(
+        dispatch_fn=_fake_decode_dispatch,
+        pool=pool,
+        prefix_cache=PrefixCache(pool),
+        cache=None,
+        num_slots=slots,
+        max_pages_per_req=max_pages,
+        prefill_dispatch=fake_pf,
+        prefill_chunk=prefill_chunk,
+        token_budget=token_budget,
+    )
+    return cb, fake_pf
+
+
+def test_prefill_flip_inserts_prefix_and_primes_token():
+    pool = PagePool(16, 4)
+    cb, pf = _paged_batcher(pool)
+    prompt = tuple(range(100, 112))  # 12 tokens = 3 full pages of 4
+    req = Request(rid=0, new_tokens=3, greedy=True, prompt=prompt)
+    assert cb.admit([req], now=0.0) == []
+    assert cb._prefilling[0]
+    cb.step(now=1.0)  # one chunk of 12 (budget 2 + 16, nothing decoding)
+    # flip happened: cursor at the prompt end, first token primed by the
+    # chunk's last row, and the decode lane advanced the slot once more in
+    # the same step (the planner budgeted for that token)
+    assert not cb._prefilling[0]
+    assert pf.calls == [(16, 0, 12, prompt)]
+    assert req.tokens[0] == prompt[-1] + 1  # fake pf: last fed token + 1
+    assert req.t_first == 1.0
+    # the prompt's full pages were published at the flip
+    assert len(cb.prefix) == 3
+    # a second identical prompt adopts the shared pages (minus the last
+    # prompt token's page, which stays private)
+    req2 = Request(rid=1, new_tokens=1, greedy=True, prompt=prompt)
+    assert cb.admit([req2], now=2.0) == []
+    assert cb.stats.shared_tokens == 8  # 2 of 3 pages adopted
+    while cb.has_work:
+        cb.step(now=3.0)
+    assert req.done and req2.done
+    pool.check()
+
+
+def test_prefill_budget_splits_with_decoding_slots():
+    pool = PagePool(32, 4)
+    cb, pf = _paged_batcher(pool, slots=3, prefill_chunk=32, token_budget=12,
+                            max_pages=16)
+    # two decoding requests occupy the decode lane
+    d1 = Request(rid=1, new_tokens=50, greedy=True, first_token=5)
+    d2 = Request(rid=2, new_tokens=50, greedy=True, first_token=6)
+    p1 = Request(rid=3, new_tokens=2, greedy=True,
+                 prompt=tuple(range(200, 240)))  # 40 tokens
+    assert cb.admit([d1, d2, p1], now=0.0) == []
+    cb.step(now=1.0)
+    # budget 12 - 2 decoding = 10 prompt tokens, bucketed to 16
+    assert pf.calls[0][0] == 16 and pf.calls[0][2] == 10
+    cb.step(now=2.0)
+    assert pf.calls[1] == (16, 10, 10, tuple(range(210, 220)))
+    # decode lane advanced alongside each chunk
+    assert len(d1.tokens) == 2 and len(d2.tokens) == 2
+    for _ in range(3):
+        cb.step(now=3.0)
+    # final-chunk shrink: a chunk that would flip exactly at the budget
+    # edge gives up one token so the flip's same-step decode sample stays
+    # inside the per-step bound (10 -> 9, then a 1-token flip chunk)
+    assert pf.calls[3][2] == 9
+    assert pf.calls[4][2] == 1 and not cb._prefilling[2]
+    pool.check()
+
+
+def test_flip_refreshes_decode_block_table():
+    """Regression: when the *final* chunk lands in an already-allocated page
+    (no growth, no COW), the flip must still rebuild the packed decode
+    table — otherwise the flipped slot decodes through its stale all-null
+    row (reads garbage, writes the null page)."""
+    pool = PagePool(16, 16)  # page_size 16 > prompt: one page, no growth
+    seen_bt = []
+
+    def decode_dispatch(bucket):
+        def step(cache, tok, pos, bt, active, temps, greedy, keys):
+            seen_bt.append(np.array(bt))
+            nxt = np.asarray(tok)[:, 0] + 1
+            return (nxt, cache,
+                    np.asarray(pos) + np.asarray(active).astype(np.int32),
+                    keys)
+        return step
+
+    fake_pf = _FakePrefill()
+    cb = PagedContinuousBatcher(
+        dispatch_fn=decode_dispatch,
+        pool=pool,
+        prefix_cache=PrefixCache(pool),
+        cache=None,
+        num_slots=2,
+        max_pages_per_req=4,
+        prefill_dispatch=fake_pf,
+        prefill_chunk=8,
+        token_budget=64,
+    )
+    d = Request(rid=0, new_tokens=20, greedy=True, first_token=5)
+    p = Request(rid=1, new_tokens=4, greedy=True, prompt=tuple(range(12)))
+    assert cb.admit([d, p], now=0.0) == []
+    cb.step(now=1.0)  # chunk 1 (8 tokens) + decode; bt row 1 is null
+    assert not seen_bt[-1][1].any()
+    cb.step(now=2.0)  # chunk 2 (4 tokens, same page) -> flip; decode runs
+    assert not cb._prefilling[1]
+    # the flipped slot's row now carries its real page, not the null page
+    assert seen_bt[-1][1, 0] == cb._tables[1].pages[0] != 0
+    pool.check()
+
+
+def test_preemption_mid_prefill_releases_pages():
+    pool = PagePool(4, 4)  # 16 pooled tokens
+    cb, pf = _paged_batcher(pool, slots=1, prefill_chunk=8, max_pages=16)
+    req = Request(rid=0, new_tokens=2, greedy=True,
+                  prompt=tuple(range(300, 330)))  # 30 tokens > pool
+    assert cb.admit([req], now=0.0) == []
+    for _ in range(8):
+        if not cb.has_work:
+            break
+        cb.step(now=1.0)
+    # the growing prefill could not be served: preempted, pages recycled
+    assert req in cb.preempted
+    assert req.preemptions == 1 and req.tokens == [] and req.t_first is None
+    assert pool.pages_in_use == 0
+    pool.check()
+
+
+def test_paged_admission_matches_dense_capacity_rule():
+    """Regression: the last generated token is emitted but never written,
+    so a request needing exactly max_pages_per_req * page_size KV positions
+    must seat — not land in rejected_oversize (the dense admit accepts the
+    identical request)."""
+    pool = PagePool(8, 16)
+    cb, _ = _paged_batcher(pool, slots=1, prefill_chunk=16, max_pages=6)
+    # 48 prompt + 49 new = 96 written positions = exactly 6 pages of 16
+    req = Request(rid=0, new_tokens=49, greedy=True,
+                  prompt=tuple(range(48)))
+    assert cb.admit([req], now=0.0) == []
+    assert cb.stats.rejected_oversize == 0 and cb.active_count == 1
+    # one more token and it can never fit: rejected, not deferred
+    req2 = Request(rid=1, new_tokens=50, greedy=True,
+                   prompt=tuple(range(48)))
+    cb2, _ = _paged_batcher(pool=PagePool(8, 16), slots=1,
+                            prefill_chunk=16, max_pages=6)
+    cb2.admit([req2], now=0.0)
+    assert cb2.stats.rejected_oversize == 1
+
+
+def test_upload_dedup_steady_state():
+    """Satellite: steady-state decode re-uploads nothing — only admits,
+    flips, finishes, and table growth touch the host->device path."""
+    cb = ContinuousBatcher(
+        step=lambda cache, tok, pos, active, temps, greedy, keys: (
+            np.asarray(tok)[:, 0] + 1,
+            cache,
+            np.asarray(pos) + np.asarray(active).astype(np.int32),
+            keys,
+        ),
+        num_slots=2,
+        max_len=64,
+        cache=None,
+    )
+    cb.admit([
+        Request(rid=0, new_tokens=40, greedy=True, first_token=1),
+        Request(rid=1, new_tokens=40, greedy=True, first_token=2),
+    ])
+    cb.step()
+    after_first = cb.stats.h2d_uploads
+    for _ in range(10):
+        cb.step()
+    assert cb.stats.h2d_uploads == after_first  # zero per-step churn
+
+
+# ----------------------------------------------------- end-to-end (smoke)
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt_reqs(cfg, n=3, prompt_len=24, new_tokens=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i, new_tokens=new_tokens, greedy=True, arrival_s=0.0,
+            prompt=tuple(
+                int(x) for x in rng.integers(0, cfg.vocab_size, prompt_len)
+            ),
+        )
+        for i in range(n)
+    ]
+
+
+def _engine(cfg, params, *, prefill_chunk, paged=True):
+    from repro.runtime.serve import Engine, EngineConfig
+
+    reset_entry_points()
+    return Engine(
+        cfg,
+        params,
+        EngineConfig(
+            max_len=64,
+            batch_quantum=2,
+            max_batch=4,
+            page_size=8,
+            num_pages=40,
+            prefill_chunk=prefill_chunk,
+        ),
+    )
+
+
+def test_chunked_stream_matches_sequential_stream(smoke_setup):
+    """The acceptance contract: chunked prefill emits exactly the tokens
+    token-by-token forcing emits, with zero compiles after warmup."""
+    from repro.runtime.serve import run_paged_stream
+
+    cfg, params = smoke_setup
+    chunked_reqs = _prompt_reqs(cfg)
+    legacy_reqs = _prompt_reqs(cfg)
+
+    eng = _engine(cfg, params, prefill_chunk=16)
+    rep_c = run_paged_stream(eng, chunked_reqs, slots=4)
+    eng.close()
+    eng = _engine(cfg, params, prefill_chunk=0)
+    rep_s = run_paged_stream(eng, legacy_reqs, slots=4)
+    eng.close()
+
+    assert rep_c["finished"] == len(chunked_reqs)
+    assert rep_c["compiles_after_warmup"] == 0
+    assert rep_c["prefill_chunks"] > 0
+    assert rep_c["steps"] < rep_s["steps"]  # chunks collapse the ingest loop
+    for a, b in zip(chunked_reqs, legacy_reqs):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
+    # TTFT is tracked for both engines
+    assert "ttft_p95_ms" in rep_c and "ttft_p95_ms" in rep_s
+
+
+def test_dense_chunked_stream_aligns_with_paged(smoke_setup):
+    """Satellite: the dense engine's prompt path goes through the same
+    chunked prefill and emits the same tokens as the paged engine."""
+    from repro.runtime.serve import run_continuous_stream, run_paged_stream
+
+    cfg, params = smoke_setup
+    dense_reqs = _prompt_reqs(cfg)
+    paged_reqs = _prompt_reqs(cfg)
+
+    eng = _engine(cfg, params, prefill_chunk=16)
+    run_paged_stream(eng, paged_reqs, slots=4)
+    eng.close()
+    eng = _engine(cfg, params, prefill_chunk=16)
+    rep_d = run_continuous_stream(eng, dense_reqs, slots=4)
+    eng.close()
+
+    assert rep_d["compiles_after_warmup"] == 0
+    assert rep_d["prefill_chunks"] > 0
+    for a, b in zip(dense_reqs, paged_reqs):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
