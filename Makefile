@@ -1,11 +1,12 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill bench-serving \
-	bench-kvcache bench-prefill bench-check bench examples
+.PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
+	bench-serving bench-kvcache bench-prefill bench-specdec bench-check \
+	bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
-verify: tier1 smoke-serve smoke-paged smoke-prefill
+verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -36,6 +37,14 @@ smoke-prefill:
 		--tokens-mean 4 --max-len 96 --engine paged \
 		--page-size 16 --num-pages 28 --prompt-len 48 --prefill-chunk 16
 
+# CPU smoke: speculative decoding through the draft/verify lanes
+# (DESIGN.md §11) on the paged engine.
+smoke-specdec:
+	$(PY) -m repro.launch.serve --smoke --requests 8 --rate 200 \
+		--tokens-mean 6 --max-len 64 --engine paged \
+		--page-size 8 --num-pages 36 --prompt-len 16 --prefill-chunk 16 \
+		--spec-k 2 --sample-frac 0
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters).
 bench-serving:
@@ -51,10 +60,16 @@ bench-kvcache:
 bench-prefill:
 	$(PY) -m benchmarks.run --only prefill --fast
 
+# Speculative-decoding scenario: writes BENCH_specdec.json (accepted
+# tokens/step, acceptance percentiles, spec vs plain latency, zero
+# post-warmup compiles across k-bucket crossings).
+bench-specdec:
+	$(PY) -m benchmarks.run --only specdec --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
 	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
-		BENCH_prefill.json
+		BENCH_prefill.json BENCH_specdec.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

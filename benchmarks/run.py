@@ -74,6 +74,35 @@ def _prefill_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _specdec_suite(fast: bool, json_path: str) -> list[str]:
+    from . import specdec_bench
+
+    res = specdec_bench.specdec_comparison(n_requests=6 if fast else 10)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("spec", "baseline", "dense_spec", "dense_baseline"):
+        r = res[kind]
+        sp = r.get("spec", {})
+        rows.append(
+            f"specdec/{kind}/tok_per_target_step,"
+            f"{r.get('tokens_per_target_step', 0.0):.3f},"
+            f"p50_ms={r.get('p50_ms', 0.0):.1f};"
+            f"p95_ms={r.get('p95_ms', 0.0):.1f};"
+            f"p99_ms={r.get('p99_ms', 0.0):.1f};"
+            f"lane_steps={r.get('lane_steps')};"
+            f"acceptance_rate={sp.get('acceptance_rate', 0.0)};"
+            f"k_bucket_crossings={r.get('k_bucket_crossings')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    rows.append(
+        f"specdec/acceptance,0.0,"
+        f"{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"specdec/json,0.0,written={json_path}")
+    return rows
+
+
 def _serving_suite(fast: bool, json_path: str) -> list[str]:
     from . import hotpath_serving
 
@@ -103,6 +132,7 @@ def main() -> None:
     ap.add_argument("--serving-json", default="BENCH_serving.json")
     ap.add_argument("--kvcache-json", default="BENCH_kvcache.json")
     ap.add_argument("--prefill-json", default="BENCH_prefill.json")
+    ap.add_argument("--specdec-json", default="BENCH_specdec.json")
     args = ap.parse_args()
 
     from . import (
@@ -131,6 +161,7 @@ def main() -> None:
         "serving": lambda: _serving_suite(args.fast, args.serving_json),
         "kvcache": lambda: _kvcache_suite(args.fast, args.kvcache_json),
         "prefill": lambda: _prefill_suite(args.fast, args.prefill_json),
+        "specdec": lambda: _specdec_suite(args.fast, args.specdec_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

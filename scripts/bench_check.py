@@ -14,6 +14,11 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
 * BENCH_prefill.json — chunked prefill (DESIGN.md §10) must beat
   token-by-token prompt ingestion on TTFT p95, with zero post-warmup
   compiles across every chunk-bucket crossing and every request served.
+* BENCH_specdec.json — speculative decoding (DESIGN.md §11) must emit
+  >= 1.5 accepted tokens per target step on the draft-predictable
+  workload, stream bit-for-bit the plain greedy tokens, and keep
+  post-warmup compiles at zero across k-bucket crossings (crossings
+  rebind the draft/verify executables, never compile).
 
 Usage: python scripts/bench_check.py [BENCH_*.json ...]
 Missing files are skipped with a warning (suites can be run selectively);
@@ -95,10 +100,44 @@ def check_prefill(data: dict) -> list[str]:
     return errors
 
 
+def check_specdec(data: dict) -> list[str]:
+    errors = []
+    sp = data.get("spec", {})
+    caw = sp.get("compiles_after_warmup")
+    if caw is None:
+        errors.append("specdec: spec report lacks compiles_after_warmup")
+    elif caw > 0:
+        errors.append(
+            f"specdec: speculative engine recompiled after warmup "
+            f"(compiles_after_warmup={caw}, must be 0 with AOT k-buckets)"
+        )
+    acc = data.get("acceptance", {})
+    # accepted *draft* tokens per target executable call: a plain decode
+    # lane scores 0 here, so this gate cannot be satisfied vacuously by
+    # batched one-token-per-slot emission
+    per_step = acc.get("accepted_per_target_step", 0.0)
+    if not per_step >= 1.5:
+        errors.append(
+            f"specdec: accepted draft tokens per target step "
+            f"({per_step}) must be >= 1.5 on the draft-predictable workload"
+        )
+    for key in (
+        "accepted_per_step_ok",
+        "greedy_stream_matches_baseline",
+        "k_crossings_without_compiles",
+        "no_compiles_after_warmup",
+        "all_served",
+    ):
+        if not acc.get(key, False):
+            errors.append(f"specdec: acceptance flag {key!r} is not True")
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
     "BENCH_prefill.json": check_prefill,
+    "BENCH_specdec.json": check_specdec,
 }
 
 

@@ -28,3 +28,9 @@ echo "== chunked prefill smoke (CPU) =="
 python -m repro.launch.serve --smoke --requests 8 --rate 200 \
   --tokens-mean 4 --max-len 96 --engine paged \
   --page-size 16 --num-pages 28 --prompt-len 48 --prefill-chunk 16
+
+echo "== speculative decoding smoke (CPU) =="
+python -m repro.launch.serve --smoke --requests 8 --rate 200 \
+  --tokens-mean 6 --max-len 64 --engine paged \
+  --page-size 8 --num-pages 36 --prompt-len 16 --prefill-chunk 16 \
+  --spec-k 2 --sample-frac 0

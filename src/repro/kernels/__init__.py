@@ -13,6 +13,7 @@ from .decode_attention import (
 from .prefill_attention import (
     paged_prefill_attention,
     paged_prefill_attention_reference,
+    paged_verify_attention,
 )
 from .ops import (
     KernelBranch,
@@ -31,5 +32,6 @@ __all__ = [
     "paged_decode_attention_reference",
     "paged_prefill_attention",
     "paged_prefill_attention_reference",
+    "paged_verify_attention",
     "ssd_chunk",
 ]

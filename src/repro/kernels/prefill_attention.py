@@ -22,6 +22,14 @@ Semi-static structure, twice over:
 Blocks whose pages lie entirely beyond the chunk's last position (or, in
 window mode, entirely before its window) are skipped structurally via the
 prefetched ``start`` scalar.
+
+The **verify lane** of speculative decoding (DESIGN.md §11) reuses this
+kernel verbatim: a verify window of K+1 tokens (the committed token plus K
+draft candidates) is exactly a C = K+1 chunk whose per-row causal frontiers
+score every candidate in one target pass — the ``("vf", slots, k_bucket)``
+executables lower onto the same kernel with the k-bucket as the chunk axis.
+``paged_verify_attention`` is the exported alias that documents (and pins,
+via tests) this reuse.
 """
 
 from __future__ import annotations
@@ -194,6 +202,13 @@ def paged_prefill_attention(
     # [B, KH, C*G, dh] -> [B, C, H, dh]
     out = out.reshape(b, kh, c, group, dh).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, c, h, dh)
+
+
+# Speculative decoding's verify pass is the same computation with C = K+1:
+# per-row causal frontiers score the committed token + K draft candidates in
+# one pass (DESIGN.md §11). Alias it so the lane's kernel dependency is an
+# explicit, importable contract rather than an implementation coincidence.
+paged_verify_attention = paged_prefill_attention
 
 
 def paged_prefill_attention_reference(

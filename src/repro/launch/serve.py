@@ -65,6 +65,22 @@ def _print_report(rep: dict) -> None:
         if k in rep
     }
     print(f"[serve/{rep['engine']}] cold path: {cold}", flush=True)
+    if "lane_steps" in rep:  # multi-lane pipeline telemetry (DESIGN.md §11)
+        lanes = {"lane_steps": rep["lane_steps"]}
+        if "tokens_per_target_step" in rep:
+            lanes["tok_per_target_step"] = rep["tokens_per_target_step"]
+        print(f"[serve/{rep['engine']}] lanes: {lanes}", flush=True)
+    if rep.get("spec"):
+        sp = rep["spec"]
+        print(
+            f"[serve/{rep['engine']}] specdec: k={sp['k']} "
+            f"accept={sp['acceptance_rate']:.3f} "
+            f"(p50 {sp.get('acceptance_p50', 0.0):.2f} "
+            f"p95 {sp.get('acceptance_p95', 0.0):.2f}) "
+            f"accepted={sp['accepted_tokens']}/{sp['drafted_tokens']} "
+            f"k_crossings={sp['k_bucket_crossings']}",
+            flush=True,
+        )
     if rep.get("engine") == "paged":
         paged = {
             k: rep[k]
@@ -114,6 +130,13 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=0,
                     help="attach a distinct random prompt of this length to "
                          "every request (continuous/paged engines)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: max draft depth per target "
+                         "step (0 = off; k-buckets {1,2,...,K} are "
+                         "AOT-warmed draft/verify dispatch keys)")
+    ap.add_argument("--draft-layers", type=int, default=1,
+                    help="speculative decoding: layer-periods of the target "
+                         "retained in the truncated-layer draft view")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -128,6 +151,11 @@ def main(argv: list[str] | None = None) -> dict:
         ap.error(
             "--prompt-len requires --engine continuous or paged "
             "(the burst driver does not ingest prompts)"
+        )
+    if args.spec_k > 0 and args.engine in ("burst", "both", "all"):
+        ap.error(
+            "--spec-k requires --engine continuous or paged "
+            "(the burst driver has no draft/verify lanes)"
         )
 
     cfg = get_config(args.arch)
@@ -147,6 +175,8 @@ def main(argv: list[str] | None = None) -> dict:
         page_size=args.page_size,
         num_pages=args.num_pages,
         prefill_chunk=args.prefill_chunk,
+        spec_k=args.spec_k,
+        draft_layers=args.draft_layers,
     )
 
     def traffic(seed: int):

@@ -2,8 +2,10 @@
 
 from .model import (
     chunked_decode_step,
+    chunked_verify_step,
     copy_cache_pages,
     decode_step,
+    draft_view,
     forward,
     init_cache,
     init_paged_cache,
@@ -12,13 +14,16 @@ from .model import (
     loss_fn,
     paged_decode_step,
     paged_prefill_step,
+    paged_verify_step,
     prefill,
 )
 
 __all__ = [
     "chunked_decode_step",
+    "chunked_verify_step",
     "copy_cache_pages",
     "decode_step",
+    "draft_view",
     "forward",
     "init_cache",
     "init_paged_cache",
@@ -27,5 +32,6 @@ __all__ = [
     "loss_fn",
     "paged_decode_step",
     "paged_prefill_step",
+    "paged_verify_step",
     "prefill",
 ]

@@ -279,6 +279,40 @@ def _last_real_row(x: jax.Array, length: jax.Array) -> jax.Array:
     return jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
 
 
+def _paged_chunk_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    block_tables: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str,
+) -> tuple[jax.Array, list]:
+    """Shared chunk tower for the paged prompt/verify paths: embed, run the
+    stack through ``block_paged_prefill``, final-norm. Returns the normed
+    hidden states of every chunk row ([B,C,D]) plus the new cache; the
+    callers differ only in which rows they project to logits."""
+    x = embed_apply(cfg, params["embed"], inputs)
+
+    def body(x, slots):
+        slot_params, slot_caches = slots
+        new_caches = []
+        for slot in range(cfg.period):
+            x, c = block_paged_prefill(
+                cfg, slot, slot_params[slot], x, slot_caches[slot], start,
+                block_tables, length, moe_policy=moe_policy,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
+    from .layers import norm_apply
+
+    return norm_apply(cfg, params["final_norm"], x), list(new_cache)
+
+
 def paged_prefill_step(
     cfg: ArchConfig,
     params: dict,
@@ -300,15 +334,67 @@ def paged_prefill_step(
     Bit-for-bit equal on CPU to feeding the same C tokens through C
     iterations of ``paged_decode_step``.
     """
+    x, new_cache = _paged_chunk_hidden(
+        cfg, params, cache, inputs, start, block_tables, length,
+        moe_policy=moe_policy,
+    )
+    logits = head_apply(
+        cfg, params["head"], params["embed"], _last_real_row(x, length)
+    )
+    return logits, new_cache
+
+
+def paged_verify_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    block_tables: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """Verify lane (DESIGN.md §11): score all K+1 positions of a draft
+    window in one pass through the paged chunk tower.
+
+    Same contract as ``paged_prefill_step`` — inputs are the current token
+    followed by K draft candidates, columns >= ``length`` are bucket
+    padding writing only the null page — but the head projects *every*
+    chunk row: returns (logits [B,C,V], new cache). Row i's logits are
+    bit-for-bit what ``paged_decode_step`` would produce after feeding
+    rows 0..i sequentially, which is what makes greedy speculative decode
+    exactly equal to plain greedy decode.
+    """
+    x, new_cache = _paged_chunk_hidden(
+        cfg, params, cache, inputs, start, block_tables, length,
+        moe_policy=moe_policy,
+    )
+    logits = head_apply(cfg, params["head"], params["embed"], x)
+    return logits, new_cache
+
+
+def _dense_chunk_hidden(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str,
+) -> tuple[jax.Array, list]:
+    """Shared chunk tower for the dense prompt/verify paths (the dense
+    counterpart of ``_paged_chunk_hidden``)."""
     x = embed_apply(cfg, params["embed"], inputs)
 
     def body(x, slots):
         slot_params, slot_caches = slots
         new_caches = []
         for slot in range(cfg.period):
-            x, c = block_paged_prefill(
+            x, c = block_chunk_decode(
                 cfg, slot, slot_params[slot], x, slot_caches[slot], start,
-                block_tables, length, moe_policy=moe_policy,
+                length, moe_policy=moe_policy,
             )
             new_caches.append(c)
         return x, tuple(new_caches)
@@ -316,11 +402,7 @@ def paged_prefill_step(
     x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
     from .layers import norm_apply
 
-    x = norm_apply(cfg, params["final_norm"], x)
-    logits = head_apply(
-        cfg, params["head"], params["embed"], _last_real_row(x, length)
-    )
-    return logits, list(new_cache)
+    return norm_apply(cfg, params["final_norm"], x), list(new_cache)
 
 
 def chunked_decode_step(
@@ -341,27 +423,61 @@ def chunked_decode_step(
     chunk row [B,V], new cache). Bit-for-bit equal on CPU to C iterations
     of ``decode_step`` with per-row positions.
     """
-    x = embed_apply(cfg, params["embed"], inputs)
-
-    def body(x, slots):
-        slot_params, slot_caches = slots
-        new_caches = []
-        for slot in range(cfg.period):
-            x, c = block_chunk_decode(
-                cfg, slot, slot_params[slot], x, slot_caches[slot], start,
-                length, moe_policy=moe_policy,
-            )
-            new_caches.append(c)
-        return x, tuple(new_caches)
-
-    x, new_cache = jax.lax.scan(body, x, (tuple(params["blocks"]), tuple(cache)))
-    from .layers import norm_apply
-
-    x = norm_apply(cfg, params["final_norm"], x)
+    x, new_cache = _dense_chunk_hidden(
+        cfg, params, cache, inputs, start, length, moe_policy=moe_policy
+    )
     logits = head_apply(
         cfg, params["head"], params["embed"], _last_real_row(x, length)
     )
-    return logits, list(new_cache)
+    return logits, new_cache
+
+
+def chunked_verify_step(
+    cfg: ArchConfig,
+    params: dict,
+    cache: list,
+    inputs: jax.Array,
+    start: jax.Array,
+    length: jax.Array,
+    *,
+    moe_policy: str = "drop",
+) -> tuple[jax.Array, list]:
+    """Verify lane over the dense per-slot cache (DESIGN.md §11): score all
+    K+1 positions of a draft window in one pass — ``chunked_decode_step``
+    with the head applied to every chunk row. Returns (logits [B,C,V], new
+    cache); rows with length 0 are idle and write nothing."""
+    x, new_cache = _dense_chunk_hidden(
+        cfg, params, cache, inputs, start, length, moe_policy=moe_policy
+    )
+    logits = head_apply(cfg, params["head"], params["embed"], x)
+    return logits, new_cache
+
+
+def draft_view(
+    cfg: ArchConfig, params: dict, draft_layers: int = 1
+) -> tuple[ArchConfig, dict]:
+    """Truncated-layer draft model: the speculative-decode predictor as a
+    *view* of the target (DESIGN.md §11) — no extra weights to train, load,
+    or checkpoint.
+
+    Keeps the first ``draft_layers`` repetitions of each period slot's
+    stacked block params (leaves are stacked ``[m, ...]``; the view slices
+    the leading axis) and shares embed/head/final_norm with the target, so
+    a draft forward is exactly a shallower run of the same network. Returns
+    ``(draft_cfg, draft_params)`` ready for ``decode_step``/``init_cache``.
+    """
+    from dataclasses import replace
+
+    m = cfg.num_layers // cfg.period
+    d = max(1, min(int(draft_layers), m))
+    dcfg = replace(
+        cfg, name=f"{cfg.name}-draft{d}", num_layers=d * cfg.period
+    ).validate()
+    dparams = dict(params)
+    dparams["blocks"] = [
+        jax.tree.map(lambda t: t[:d], b) for b in params["blocks"]
+    ]
+    return dcfg, dparams
 
 
 def copy_cache_pages(cache: list, src: jax.Array, dst: jax.Array) -> list:

@@ -218,6 +218,21 @@ class BlockTable:
         self.pool.stats.cow_copies += 1
         return True
 
+    def trim(self, keep_pages: int) -> int:
+        """Release every page beyond the first ``keep_pages`` — the paged
+        half of speculative-decode rollback (DESIGN.md §11): KV written past
+        the accepted prefix is *released or overwritten, never branched on*.
+        Pages still inside ``keep_pages`` keep their rejected-tail garbage;
+        the next committed write at those positions overwrites it. Returns
+        the number of references dropped."""
+        if keep_pages < 0:
+            raise KVCacheError(f"keep_pages must be >= 0, got {keep_pages}")
+        freed = 0
+        while len(self.pages) > keep_pages:
+            self.pool.decref(self.pages.pop())
+            freed += 1
+        return freed
+
     def fork(self) -> "BlockTable":
         """Clone sharing every physical page (ref++); writes then COW."""
         for pid in self.pages:

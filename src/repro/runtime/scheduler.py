@@ -22,17 +22,32 @@ module owns everything that happens *around* it:
   per-slot caches, prefix sharing, preemption on pool exhaustion, and the
   capacity bucket as a semi-static dispatch key.
 
-Both batchers ingest prompts through a **chunked prefill lane** when the
-engine provides one (DESIGN.md §10): seated requests sit in a PREFILL state
-and a per-step token budget funds one C-token chunk (C from the log-sized
-bucket set {8, 16, 32, ...} — a semi-static dispatch key, never a per-step
-conditional) alongside the decoding slots, flipping to DECODE when the
-cursor reaches the prompt end. Without the lane, prompts fall back to
-token-by-token teacher forcing at decode speed — the baseline
-``benchmarks/prefill_bench.py`` measures against.
+Both batchers drive a **multi-lane step pipeline** (DESIGN.md §10/§11):
+every per-step activity is a named *lane* — ``prefill`` (chunked prompt
+ingestion), ``decode`` (one token per slot), and the speculative pair
+``draft``/``verify`` — and each lane is a semi-static dispatch key with its
+own bucket axis (chunk buckets for prefill, capacity buckets for paged
+decode, k-buckets for draft/verify), AOT-compiled and dummy-run at warmup.
+The per-step token budget is split across lanes by a ``LanePolicy`` instead
+of a hard-coded rule; which lanes run in a step is decided on the cold path
+from slot state, never by a hot-loop conditional.
 
-The batcher is model-agnostic: it drives an abstract ``step`` callable and
-leaves compilation to the engine's ``Dispatcher`` (core/dispatch.py).
+* Prefill lane: seated requests sit in a PREFILL state and the plan's chunk
+  budget funds C-token chunks (C from the log-sized bucket set
+  {8, 16, 32, ...}); the dense engine batches chunks for several prefilling
+  requests into one ``("pfd", slots, chunk_bucket)`` call. Without the
+  lane, prompts fall back to token-by-token teacher forcing at decode
+  speed — the baseline ``benchmarks/prefill_bench.py`` measures against.
+* Draft/verify lanes (speculative decoding, DESIGN.md §11): a truncated-
+  layer draft view emits K candidates per slot through ``("dr", slots,
+  k_bucket)``, the target scores all K+1 positions in one chunk-path pass
+  through ``("vf"/"vfd", slots, k_bucket)``, and acceptance/rollback is
+  pure *data* — a per-slot accepted-length that rewinds positions (dense)
+  or ``BlockTable``s (paged). Greedy speculative streams are bit-for-bit
+  the plain greedy streams.
+
+The batcher is model-agnostic: it drives abstract lane callables and leaves
+compilation to the engine's ``Dispatcher`` (core/dispatch.py).
 """
 
 from __future__ import annotations
@@ -41,6 +56,7 @@ import heapq
 import itertools
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
@@ -54,6 +70,60 @@ GREEDY, SAMPLE = 0, 1
 # Smallest chunked-prefill bucket: chunk sizes are drawn from the log-sized
 # set {8, 16, 32, ..., prefill_chunk} (DESIGN.md §10).
 CHUNK_BUCKET_MIN = 8
+
+# The lane names of the step pipeline (DESIGN.md §11). Order documents the
+# in-step execution order; membership is fixed — a lane that has no work
+# this step simply isn't dispatched (a cold-path decision, not a hot-loop
+# branch).
+LANES = ("prefill", "draft", "verify", "decode")
+
+
+@dataclass(frozen=True)
+class StepPlan:
+    """One step's lane allocation, produced by ``LanePolicy.plan``.
+
+    ``chunk_budget`` — prompt tokens the prefill lane may ingest this step.
+    ``k``            — draft depth (the k-bucket) for the draft/verify
+                       lanes; 0 routes decoding slots through the plain
+                       decode lane instead.
+    """
+
+    chunk_budget: int
+    k: int
+
+
+class LanePolicy:
+    """Per-step token-budget split across lanes (DESIGN.md §11).
+
+    Generalises the old one-chunk-plus-decode rule: each decoding slot
+    consumes ``1 + k`` budget tokens (its verify window), and whatever
+    remains funds the prefill lane's chunks. The draft depth ``k`` is drawn
+    from the log-sized k-bucket set {1, 2, 4, ..., spec_k} and clamped by
+    the longest useful window (``max_remaining - 1`` — drafting past a
+    request's last token is pure waste), so k shrinks near stream tails and
+    the crossing is a cold-path rebind, never a compile (the buckets are
+    AOT-warmed) and never a hot-loop branch.
+    """
+
+    def __init__(
+        self, *, token_budget: int, prefill_chunk: int, spec_k: int = 0
+    ):
+        self.token_budget = token_budget
+        self.prefill_chunk = prefill_chunk
+        self.spec_k = spec_k
+
+    def plan(self, *, n_decode: int, max_remaining: int = 0) -> StepPlan:
+        """``n_decode`` decoding slots this step; ``max_remaining`` is the
+        largest remaining emission count over draft-eligible slots (0 when
+        speculation is off or nothing is eligible)."""
+        k = 0
+        if self.spec_k > 0 and n_decode > 0 and max_remaining > 1:
+            k = bucket_pow2(
+                min(self.spec_k, max_remaining - 1), 1, self.spec_k
+            )
+        return StepPlan(
+            chunk_budget=self.token_budget - n_decode * (1 + k), k=k
+        )
 
 
 # ------------------------------------------------------------------ requests
@@ -336,14 +406,43 @@ class BatcherStats:
     active_slot_steps: int = 0
     idle_slot_steps: int = 0
     prompt_tokens: int = 0  # teacher-forced (not emitted) tokens
-    prefill_chunks: int = 0  # chunked-prefill executable calls
+    prefill_chunks: int = 0  # chunks ingested (rows; batched calls carry >1)
+    prefill_calls: int = 0  # prefill-lane executable calls
     chunk_bucket_crossings: int = 0
     h2d_uploads: int = 0  # host->device coordinate uploads (see _DeviceMirror)
+    # Per-lane step counts (DESIGN.md §11): executable calls per lane.
+    decode_steps: int = 0
+    draft_steps: int = 0
+    verify_steps: int = 0
+    # Speculative decoding accounting: candidates offered vs accepted, and
+    # tokens emitted through the verify lane (incl. the correction token).
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    spec_tokens: int = 0
+    k_bucket_crossings: int = 0
 
     @property
     def occupancy(self) -> float:
         total = self.active_slot_steps + self.idle_slot_steps
         return self.active_slot_steps / total if total else 0.0
+
+    @property
+    def target_steps(self) -> int:
+        """Target-model decode-lane calls: the denominator of the
+        accepted-tokens-per-step speculation metric."""
+        return self.decode_steps + self.verify_steps
+
+    @property
+    def lane_steps(self) -> dict:
+        """Executable calls per lane — one unit across all four lanes
+        (``prefill_chunks`` separately counts ingested chunk *rows*, which
+        batched dense prefill packs several of into one call)."""
+        return {
+            "prefill": self.prefill_calls,
+            "draft": self.draft_steps,
+            "verify": self.verify_steps,
+            "decode": self.decode_steps,
+        }
 
 
 class _DeviceMirror:
@@ -380,43 +479,103 @@ class _DeviceMirror:
         self._dev[name] = dev
 
 
-class _ChunkedPrefillMixin:
-    """Prefill-lane scheduling shared by both batchers (DESIGN.md §10):
-    FIFO slot pick, the budget split, chunk-bucket accounting, and the
-    flip-time first-token priming. The lanes themselves differ only in
-    storage bookkeeping (dense rows vs pages) and the executable signature.
+class _MultiLaneMixin:
+    """The multi-lane step core shared by both batchers (DESIGN.md §10/§11):
+    the per-step ``LanePolicy`` plan, FIFO chunk allocation, chunk/k bucket
+    accounting, flip-time first-token priming, the draft lane, and the
+    accept/rollback arithmetic of the verify lane. The engines differ only
+    in storage bookkeeping (dense rows vs pages) and executable signatures.
     """
 
-    def _pick_prefill_slot(self) -> int | None:
-        """FIFO: the earliest-admitted slot still in PREFILL state."""
-        cands = [
-            s for s in range(self.num_slots)
-            if self._prefilling[s] and self._active[s]
-        ]
-        if not cands:
-            return None
-        return min(cands, key=lambda s: (self._slots[s].t_admit or 0.0, s))
+    def _init_lanes(
+        self,
+        *,
+        draft_dispatch: Callable[[int], Callable] | None,
+        verify_dispatch: Callable[[int], Callable] | None,
+        draft_prefill_dispatch: Callable[[int], Callable] | None,
+        draft_cache: Any,
+        spec_k: int,
+    ) -> None:
+        """Lane wiring shared by both constructors. Speculation is active
+        only when the engine supplied both spec lanes."""
+        self._draft_dispatch = draft_dispatch
+        self._verify_dispatch = verify_dispatch
+        self._draft_prefill_dispatch = draft_prefill_dispatch
+        self._draft_cache = draft_cache
+        self.spec_k = (
+            spec_k if (draft_dispatch and verify_dispatch) else 0
+        )
+        self._lane_policy = LanePolicy(
+            token_budget=self.token_budget,
+            prefill_chunk=self.prefill_chunk,
+            spec_k=self.spec_k,
+        )
+        self._k_bucket: int | None = None  # unset until the first spec step
+        self._chunk_slots: set[int] = set()
+        self._flip_slots: set[int] = set()
+        # per-slot, per-verify a/k acceptance samples; bounded so a long
+        # serving loop doesn't grow host memory (recent window is what the
+        # report's percentiles should reflect anyway)
+        self.accept_samples: deque[float] = deque(maxlen=4096)
 
-    def _plan_chunk(self, s: int) -> tuple[Request, tuple, int, int, int]:
-        """Budget split for slot ``s``'s next chunk: the decoding slots
-        consume one token each this step, the remainder funds the chunk —
-        clamped to [1, prefill_chunk] so prefill always progresses — and
-        the length rounds up to a compile bucket. Pure planning, no side
-        effects: a chunk aborted by preemption records nothing. Returns
-        (req, prompt, cursor, chunk, bucket)."""
-        req = self._slots[s]
-        prompt = req.effective_prompt
-        cursor = int(self._cursor[s])
-        remaining = len(prompt) - cursor
-        n_decode = int((self._active & ~self._prefilling).sum())
-        budget_left = self.token_budget - n_decode
-        chunk = max(1, min(remaining, budget_left, self.prefill_chunk))
-        if chunk == remaining and chunk + 1 > budget_left and remaining > 1:
-            # a flipping slot also decodes its first token this step; shrink
-            # the final chunk so that token stays inside the step budget
-            chunk -= 1
-        bucket = bucket_pow2(chunk, CHUNK_BUCKET_MIN, self.prefill_chunk)
-        return req, prompt, cursor, chunk, bucket
+    @property
+    def _spec_on(self) -> bool:
+        return self.spec_k > 0
+
+    # ------------------------------------------------------------- planning
+    def _plan_step(self) -> StepPlan:
+        """Ask the lane policy for this step's budget split. Draft
+        eligibility (greedy, past teacher forcing, >= 2 tokens still to
+        emit) is computed here on the cold path; per-slot verify windows
+        are clamped later as data."""
+        decoding = self._active & ~self._prefilling
+        max_rem = 0
+        if self._spec_on:
+            for s, req in enumerate(self._slots):
+                if req is None or not decoding[s] or not req.greedy:
+                    continue
+                if self._cursor[s] + 1 < len(req.effective_prompt):
+                    continue  # still teacher-forcing prompt tokens
+                max_rem = max(max_rem, req.new_tokens - len(req.tokens))
+        return self._lane_policy.plan(
+            n_decode=int(decoding.sum()), max_remaining=max_rem
+        )
+
+    def _plan_chunks(
+        self, budget_left: int, *, limit: int | None = None
+    ) -> list[tuple[int, int, int]]:
+        """FIFO chunk allocation for the prefill lane: earliest-admitted
+        prefilling slots first, each chunk clamped to [1, prefill_chunk] —
+        the head slot always progresses even on a dry budget; later slots
+        (dense batched prefill) only while budget remains. A slot whose
+        chunk reaches its prompt end also decodes its first token this
+        step, so the final chunk shrinks to keep that token inside the
+        budget. Pure planning, no side effects: a chunk aborted by
+        preemption records nothing. Returns [(slot, cursor, chunk), ...].
+        """
+        order = sorted(
+            (
+                s for s in range(self.num_slots)
+                if self._prefilling[s] and self._active[s]
+            ),
+            key=lambda s: (self._slots[s].t_admit or 0.0, s),
+        )
+        out: list[tuple[int, int, int]] = []
+        for s in order:
+            if out and (budget_left < 1 or (limit and len(out) >= limit)):
+                break
+            req = self._slots[s]
+            prompt = req.effective_prompt
+            cursor = int(self._cursor[s])
+            remaining = len(prompt) - cursor
+            chunk = max(1, min(remaining, budget_left, self.prefill_chunk))
+            if chunk == remaining and chunk + 1 > budget_left and remaining > 1:
+                # a flipping slot also decodes its first token this step;
+                # shrink the final chunk so that token stays in budget
+                chunk -= 1
+            out.append((s, cursor, chunk))
+            budget_left -= chunk + (1 if chunk == remaining else 0)
+        return out
 
     def _note_chunk_bucket(self, bucket: int) -> None:
         """Crossing accounting, called only for chunks that actually run."""
@@ -424,13 +583,185 @@ class _ChunkedPrefillMixin:
             self.stats.chunk_bucket_crossings += 1
             self._chunk_bucket = bucket
 
+    def _note_k_bucket(self, k: int) -> None:
+        """k-axis crossing accounting (DESIGN.md §11): a different draft
+        depth re-dispatches the draft/verify executables — a cold-path
+        rebind over AOT-warmed buckets, never a compile. The first spec
+        step *binds* rather than crosses (counting it would let a run
+        whose k never moves satisfy the crossings gate vacuously)."""
+        if self._k_bucket is not None and k != self._k_bucket:
+            self.stats.k_bucket_crossings += 1
+        self._k_bucket = k
+
+    # ----------------------------------------------------------- spec lanes
+    def _verify_len(self, s: int, k: int) -> int:
+        """Slot ``s``'s verify-window length (0 = not in the lane). Window
+        arithmetic keeps every write inside the capacity admission
+        reserved: 1 + min(k, remaining - 1) for draft-eligible slots;
+        sampling slots, teacher-forcing slots, and slots that flipped this
+        step (their first token is already budgeted) ride with length 1 —
+        a verify of length 1 *is* a decode step."""
+        req = self._slots[s]
+        if req is None or not self._active[s] or self._prefilling[s]:
+            return 0
+        if (
+            not req.greedy
+            or s in self._flip_slots
+            or self._cursor[s] + 1 < len(req.effective_prompt)
+        ):
+            return 1
+        return 1 + min(k, max(req.new_tokens - len(req.tokens) - 1, 0))
+
+    def _run_draft(self, k: int, decoding) -> Any:
+        """Draft lane: K greedy candidates per slot in one executable call.
+        The draft stack writes its own KV for the fed token at ``pos`` —
+        which is exactly how its cache tracks the committed stream, even
+        for slots the verify lane later rejects everything for (rejected
+        tails are overwritten once ``pos`` is rewound). Returns the host
+        [S, K] candidate array.
+
+        Every input rides the ``_DeviceMirror``: tok/pos re-upload only
+        when the host actually moved them (they do, each spec step — the
+        mirror counts those honestly), the all-ones greedy vector uploads
+        exactly once (forced greedy keeps candidate streams deterministic),
+        and the split keys the draft returns are discarded so sampling
+        streams are untouched."""
+        step = self._draft_dispatch(k)  # cold: slot-hit unless k moved
+        drafts, self._draft_cache, _, _ = step(
+            self._draft_cache,
+            self._mirror.get("tok", self._tok),
+            self._mirror.get("pos", self._pos),
+            self._mirror.get("active", decoding),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("spec_greedy", np.ones(self.num_slots, bool)),
+            self._mirror.get("keys", self._keys),
+        )
+        self.stats.draft_steps += 1
+        return np.asarray(drafts)
+
+    @staticmethod
+    def _accepted_prefix(drafts_row, rows_row, k_s: int) -> int:
+        """Greedy acceptance: longest prefix where the draft's candidate
+        equals the target's own greedy continuation. Host-side data — the
+        executables never branch on it."""
+        a = 0
+        while a < k_s and int(drafts_row[a]) == int(rows_row[a]):
+            a += 1
+        return a
+
+    def _pack_verify_tok(self, drafts, lengths: np.ndarray, k: int):
+        """[S, K+1] verify window: the committed token then the accepted
+        candidates; columns >= length are bucket padding."""
+        tok = np.zeros((self.num_slots, k + 1), np.int32)
+        tok[:, 0] = self._tok[:, 0]
+        for s in range(self.num_slots):
+            if lengths[s] > 1:
+                tok[s, 1 : lengths[s]] = drafts[s, : lengths[s] - 1]
+        return tok
+
+    def _spec_step(self, now: float, k: int, decoding) -> list[Request]:
+        """Speculative decode for the decoding slots (DESIGN.md §11): the
+        draft lane proposes K candidates per slot, the verify lane scores
+        all K+1 positions in one target pass through the chunked path, and
+        acceptance rewinds per-slot positions (and, paged, block tables) as
+        data. Greedy slots emit ``accepted + 1`` tokens; sampling and
+        draft-ineligible slots ride the same executables with a length-1
+        window whose row 0 *is* a decode step (same logits, same per-step
+        key split). Storage-specific pieces — the verify executable's
+        signature and the table bookkeeping — live in the engines'
+        ``_verify_call`` / ``_before_emit`` / ``_after_commit`` /
+        ``_release_spec_slot`` hooks."""
+        self._note_k_bucket(k)
+        drafts = self._run_draft(k, decoding)
+        lengths = np.array(
+            [self._verify_len(s, k) for s in range(self.num_slots)], np.int32
+        )
+        tok = self._pack_verify_tok(drafts, lengths, k)
+        rows, nxt0, keys = self._verify_call(k, tok, lengths)
+        self.stats.verify_steps += 1
+        self._mirror.put("keys", keys)
+        self._keys = np.array(keys, np.uint32)
+        return self._apply_verify(
+            now, np.asarray(rows), np.asarray(nxt0), drafts, lengths
+        )
+
+    def _apply_verify(
+        self, now, rows, nxt0, drafts, lengths
+    ) -> list[Request]:
+        """Accept/rollback as data: commit the accepted prefix plus the
+        target's correction token, rewind ``pos`` past it, and feed the
+        correction token next. Rejected-tail KV sits beyond the rewound
+        position — masked out by per-row attention and overwritten by the
+        next committed write (paged storage additionally trims pages the
+        shrinking tail can no longer reach), never branched on."""
+        finished: list[Request] = []
+        for s, req in enumerate(self._slots):
+            if req is None or not self._active[s]:
+                self.stats.idle_slot_steps += 1
+                continue
+            if self._prefilling[s]:
+                continue  # chunk lane owns this slot (ticked elsewhere)
+            self.stats.active_slot_steps += 1
+            ln = int(lengths[s])
+            if ln == 0:
+                continue
+            prompt = req.effective_prompt
+            if self._cursor[s] + 1 < len(prompt):
+                # token-by-token fallback: row 0 wrote this prompt token's
+                # KV; feed the next prompt token, drop the sample
+                self._pos[s] += 1
+                self._cursor[s] += 1
+                self._tok[s, 0] = prompt[self._cursor[s]]
+                self._after_commit(s, req)
+                self.stats.prompt_tokens += 1
+                continue
+            self._before_emit(s, req)
+            if ln == 1:
+                emitted = [int(nxt0[s])]
+            else:
+                k_s = ln - 1
+                a = self._accepted_prefix(drafts[s], rows[s], k_s)
+                emitted = [int(t) for t in rows[s, : a + 1]]
+                self.stats.drafted_tokens += k_s
+                self.stats.accepted_tokens += a
+                self.accept_samples.append(a / k_s)
+            self._pos[s] += len(emitted)
+            self._tok[s, 0] = emitted[-1]
+            req.tokens.extend(emitted)
+            self._after_commit(s, req)
+            if req.t_first is None:
+                req.t_first = now
+            self.stats.tokens += len(emitted)
+            self.stats.spec_tokens += len(emitted)
+            if req.done:
+                req.t_done = now
+                finished.append(req)
+                self._release_spec_slot(s)
+                self._mirror.touch("active")
+                self.stats.finished += 1
+        self._mirror.touch("tok", "pos")
+        return finished
+
+    # Storage hooks with dense defaults; the paged engine overrides them.
+    def _before_emit(self, s: int, req: Request) -> None:
+        """Pre-emission bookkeeping for a slot past teacher forcing."""
+
+    def _after_commit(self, s: int, req: Request) -> None:
+        """The slot's ``pos`` just advanced; sync storage to it."""
+
+    def _release_spec_slot(self, s: int) -> None:
+        """The slot's request finished inside the verify lane."""
+        self._slots[s] = None
+        self._active[s] = False
+
+    # ------------------------------------------------------------ occupancy
     def _count_prefilling_slot_steps(self) -> None:
-        """One occupancy tick per prefilling slot: active only for the slot
-        that received this step's chunk (the lane serves one per step)."""
+        """One occupancy tick per prefilling slot: active only for slots
+        that received one of this step's chunks."""
         for s in range(self.num_slots):
             if self._slots[s] is None or not self._prefilling[s]:
                 continue
-            if s == self._chunk_slot:
+            if s in self._chunk_slots:
                 self.stats.active_slot_steps += 1
             else:
                 self.stats.idle_slot_steps += 1
@@ -453,6 +784,7 @@ class _ChunkedPrefillMixin:
         """Flip tail: PREFILL -> DECODE, the chunk's last-row sample becomes
         the request's first emitted token (its TTFT anchor)."""
         self._prefilling[s] = False
+        self._flip_slots.add(s)  # spec lanes treat it as plain decode today
         self._mirror.touch("active")  # the decoding mask just changed
         req.tokens.append(token)
         if req.t_first is None:
@@ -462,7 +794,7 @@ class _ChunkedPrefillMixin:
         self._mirror.touch("tok")
 
 
-class ContinuousBatcher(_ChunkedPrefillMixin):
+class ContinuousBatcher(_MultiLaneMixin):
     """Slot-based continuous batching over one fixed-bucket executable.
 
     ``step(cache, tok, pos, active, temps, greedy, keys)`` is the compiled
@@ -497,6 +829,11 @@ class ContinuousBatcher(_ChunkedPrefillMixin):
         prefill_dispatch: Callable[[int], Callable] | None = None,
         prefill_chunk: int = 0,
         token_budget: int = 0,
+        draft_dispatch: Callable[[int], Callable] | None = None,
+        verify_dispatch: Callable[[int], Callable] | None = None,
+        draft_prefill_dispatch: Callable[[int], Callable] | None = None,
+        draft_cache: Any = None,
+        spec_k: int = 0,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -523,6 +860,13 @@ class ContinuousBatcher(_ChunkedPrefillMixin):
         self._prefilling = np.zeros(num_slots, bool)
         self.stats = BatcherStats()
         self._mirror = _DeviceMirror(self.stats)
+        self._init_lanes(
+            draft_dispatch=draft_dispatch,
+            verify_dispatch=verify_dispatch,
+            draft_prefill_dispatch=draft_prefill_dispatch,
+            draft_cache=draft_cache,
+            spec_k=spec_k,
+        )
 
     # ------------------------------------------------------------ properties
     @property
@@ -579,72 +923,114 @@ class ContinuousBatcher(_ChunkedPrefillMixin):
         return admitted
 
     # ------------------------------------------------------- prefill lane
-    def _prefill_step(self, now: float) -> list[Request]:
-        """Ingest the next chunk of one prefilling request (DESIGN.md §10):
-        budget split and flip semantics live in ``_ChunkedPrefillMixin``;
-        this body is the dense storage half — the chunk writes straight
-        into the slot's private cache rows (length 0 = idle row)."""
-        s = self._pick_prefill_slot()
-        if s is None:
+    def _prefill_step(self, now: float, budget: int) -> list[Request]:
+        """Ingest chunks for prefilling requests (DESIGN.md §10): plan and
+        flip semantics live in ``_MultiLaneMixin``; this body is the dense
+        storage half — each chunk writes straight into its slot's private
+        cache rows (length 0 = idle row). *Batched* dense prefill: the
+        ``("pfd", slots, chunk_bucket)`` executable already takes per-row
+        chunk windows, so every prefilling slot the budget covers gets a
+        chunk in the same call — bitwise-equal to running the chunks one
+        slot at a time (rows are independent)."""
+        plan = self._plan_chunks(budget)
+        if not plan:
             return []
-        req, prompt, cursor, chunk, bucket = self._plan_chunk(s)
+        bucket = bucket_pow2(
+            max(c for _, _, c in plan), CHUNK_BUCKET_MIN, self.prefill_chunk
+        )
         self._note_chunk_bucket(bucket)
         step = self._prefill_dispatch(bucket)  # cold: slot-hit usually
         tok = np.zeros((self.num_slots, bucket), np.int32)
-        tok[s, :chunk] = prompt[cursor : cursor + chunk]
         length = np.zeros(self.num_slots, np.int32)
-        length[s] = chunk
+        for s, cursor, chunk in plan:
+            prompt = self._slots[s].effective_prompt
+            tok[s, :chunk] = prompt[cursor : cursor + chunk]
+            length[s] = chunk
         # chunk-lane inputs are genuinely per-chunk data (tokens, cursor,
-        # length, split keys) — uploaded raw, but counted honestly
+        # length, split keys) — uploaded raw once, counted honestly, and
+        # the device arrays are shared with the draft mirror below
         self.stats.h2d_uploads += 4
+        self.stats.prefill_calls += 1
+        tok_dev = jnp.asarray(tok)
+        start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
+        length_dev = jnp.asarray(length)
+        keys_dev = jnp.asarray(self._keys)
         nxt, self._cache, new_keys = step(
             self._cache,
-            jnp.asarray(tok),
-            jnp.asarray(self._pos),
-            jnp.asarray(length),
+            tok_dev,
+            start_dev,
+            length_dev,
             self._mirror.get("temps", self._temps),
             self._mirror.get("greedy", self._greedy),
-            jnp.asarray(self._keys),
+            keys_dev,
         )
-        self._keys[s] = np.asarray(new_keys)[s]
-        self._mirror.touch("keys")
-        self._chunk_slot = s
-        cursor += chunk
-        self._cursor[s] = cursor
-        self._pos[s] = cursor
-        self._mirror.touch("pos")
-        self.stats.prompt_tokens += chunk
-        self.stats.prefill_chunks += 1
+        # draft mirror (DESIGN.md §11): the draft stack must ingest the
+        # same prompt windows so its KV tracks the committed stream before
+        # the draft lane runs; the inputs are the target call's device
+        # arrays (no second upload), and the sampling params are inert
+        # (the sampled head output and split keys are discarded).
+        if self._spec_on and self._draft_prefill_dispatch is not None:
+            dstep = self._draft_prefill_dispatch(bucket)
+            _, self._draft_cache, _ = dstep(
+                self._draft_cache,
+                tok_dev,
+                start_dev,
+                length_dev,
+                self._mirror.get("temps", self._temps),
+                self._mirror.get("greedy", self._greedy),
+                keys_dev,
+            )
+        nk = np.asarray(new_keys)
+        nxt_host = np.asarray(nxt)
         finished: list[Request] = []
-        if cursor >= len(prompt):  # flip: prompt ingested, prime generation
-            self._prime_first_token(s, req, int(np.asarray(nxt)[s]), now)
-            if req.done:
-                req.t_done = now
-                finished.append(req)
-                self._slots[s] = None
-                self._active[s] = False
-                self.stats.finished += 1
+        for s, cursor, chunk in plan:
+            req = self._slots[s]
+            prompt = req.effective_prompt
+            self._keys[s] = nk[s]
+            self._chunk_slots.add(s)
+            cursor += chunk
+            self._cursor[s] = cursor
+            self._pos[s] = cursor
+            self.stats.prompt_tokens += chunk
+            self.stats.prefill_chunks += 1
+            if cursor >= len(prompt):  # flip: prompt done, prime generation
+                self._prime_first_token(s, req, int(nxt_host[s]), now)
+                if req.done:
+                    req.t_done = now
+                    finished.append(req)
+                    self._slots[s] = None
+                    self._active[s] = False
+                    self.stats.finished += 1
+        self._mirror.touch("pos", "keys")
         return finished
 
     # -------------------------------------------------------------- hot path
     def step(self, now: float = 0.0) -> list[Request]:
-        """One hot-loop step for all slots; returns requests that finished.
+        """One multi-lane step for all slots; returns finished requests.
 
-        The prefill lane (one chunk for one prefilling request) runs first,
-        then a single direct call of the pre-compiled decode executable for
-        the decoding slots — no tracing, no cache hashing, no mode
-        conditionals, regardless of the request mix.
+        Lane order (DESIGN.md §11): prefill chunks first, then either the
+        draft/verify pair (speculation planned this step) or the plain
+        decode executable for the decoding slots — every lane a single
+        direct call of a pre-compiled executable, no tracing, no cache
+        hashing, no mode conditionals, regardless of the request mix.
         """
         if not self._active.any():
             return []
         finished: list[Request] = []
-        self._chunk_slot = None
+        self._chunk_slots = set()
+        self._flip_slots = set()
+        plan = self._plan_step()
         if self.prefill_chunk > 0 and (self._prefilling & self._active).any():
-            finished.extend(self._prefill_step(now))
+            finished.extend(self._prefill_step(now, plan.chunk_budget))
         decoding = self._active & ~self._prefilling
         if not decoding.any():
             self.stats.steps += 1  # prefill-only step
             self._count_slot_steps(decoding)
+            return finished
+        if plan.k > 0:  # draft/verify lanes replace the decode lane
+            finished.extend(self._spec_step(now, plan.k, decoding))
+            self.stats.steps += 1
+            self._count_prefilling_slot_steps()
             return finished
         nxt, self._cache, pos, keys = self._step(
             self._cache,
@@ -655,6 +1041,7 @@ class ContinuousBatcher(_ChunkedPrefillMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        self.stats.decode_steps += 1
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
         nxt_host = np.asarray(nxt)  # blocks until the device step is done
@@ -694,6 +1081,24 @@ class ContinuousBatcher(_ChunkedPrefillMixin):
                 self.stats.finished += 1
         return finished
 
+    # ---------------------------------------------------- draft/verify lanes
+    def _verify_call(self, k: int, tok, lengths):
+        """Dense verify executable ``("vfd", slots, k)``: the shared
+        ``_spec_step``/``_apply_verify`` core lives in ``_MultiLaneMixin``;
+        only the signature (no block tables) is engine-specific."""
+        step = self._verify_dispatch(k)  # cold: slot-hit unless k moved
+        self.stats.h2d_uploads += 2  # per-step window data (tok pack, len)
+        rows, nxt0, self._cache, keys = step(
+            self._cache,
+            jnp.asarray(tok),
+            self._mirror.get("pos", self._pos),
+            jnp.asarray(lengths),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            self._mirror.get("keys", self._keys),
+        )
+        return rows, nxt0, keys
+
 
 # ------------------------------------------------- paged continuous batching
 @dataclass
@@ -705,7 +1110,7 @@ class PagedBatcherStats(BatcherStats):
     shared_tokens: int = 0  # prompt tokens skipped via the prefix cache
 
 
-class PagedContinuousBatcher(_ChunkedPrefillMixin):
+class PagedContinuousBatcher(_MultiLaneMixin):
     """Continuous batching against a paged KV pool (DESIGN.md §9).
 
     The slot-state machinery mirrors ``ContinuousBatcher``; what changes is
@@ -741,6 +1146,11 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         prefill_dispatch: Callable[[int], Callable] | None = None,
         prefill_chunk: int = 0,
         token_budget: int = 0,
+        draft_dispatch: Callable[[int], Callable] | None = None,
+        verify_dispatch: Callable[[int], Callable] | None = None,
+        draft_prefill_dispatch: Callable[[int], Callable] | None = None,
+        draft_cache: Any = None,
+        spec_k: int = 0,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -779,6 +1189,24 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         self.stats = PagedBatcherStats()
         self._mirror = _DeviceMirror(self.stats)
         self._bt_dirty = True  # host block-table array needs a rebuild
+        # full-width packed table for the verify lane (pinned at the
+        # per-request page cap, like the prefill lane's — k is the only
+        # verify bucket axis)
+        self._bt_full_dirty = True
+        self._bt_full: np.ndarray | None = None
+        self._init_lanes(
+            draft_dispatch=draft_dispatch,
+            verify_dispatch=verify_dispatch,
+            draft_prefill_dispatch=draft_prefill_dispatch,
+            draft_cache=draft_cache,
+            spec_k=spec_k,
+        )
+
+    def _tables_changed(self) -> None:
+        """Some block table changed shape or contents (growth, COW, trim,
+        admit, release): both packed host arrays need a rebuild."""
+        self._bt_dirty = True
+        self._bt_full_dirty = True
 
     # ------------------------------------------------------------ properties
     @property
@@ -838,7 +1266,7 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         self._active[s] = False
         self._prefilling[s] = False
         self._mirror.touch("active")
-        self._bt_dirty = True
+        self._tables_changed()
         req.tokens = []
         req.t_admit = None
         req.t_first = None  # restart: earlier progress is discarded
@@ -918,54 +1346,71 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
             self._mirror.touch(
                 "tok", "pos", "active", "temps", "greedy", "keys"
             )
-            self._bt_dirty = True
+            self._tables_changed()
             self.stats.admitted += 1
             self.stats.shared_tokens += matched
         return deferred
 
-    def _page_upkeep(self) -> None:
-        """Pre-step cold path: every decoding slot must own a writable page
-        for its current position; growth/COW happens here, never in-loop.
-        Prefilling slots are skipped — the prefill lane reserves its own
-        chunk's pages before each chunk step."""
+    def _page_upkeep(self, k: int = 0) -> None:
+        """Pre-step cold path: every decoding slot must own writable pages
+        for its whole write window this step — just the current position
+        for the decode lane, positions ``[pos, pos + len - 1]`` for a
+        verify window of ``len`` (DESIGN.md §11). Growth/COW happens here,
+        never in-loop. Prefilling slots are skipped — the prefill lane
+        reserves its own chunk's pages before each chunk step."""
+        ps = self.pool.page_size
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s] or self._prefilling[s]:
                 continue
             table = self._tables[s]
             pos = int(self._pos[s])
-            need = table.page_index(pos) + 1 - table.num_pages
+            top = pos + max(self._verify_len(s, k) - 1, 0) if k > 0 else pos
+            need = table.page_index(top) + 1 - table.num_pages
             if need > 0:
-                self._bt_dirty = True
-                if not self._reclaim_pages(need, req.priority):
+                self._tables_changed()
+                if not self._reclaim_pages(need, req.priority) or (
+                    not table.ensure_capacity(top)
+                ):
                     # can't grow: preempt the requester itself
                     self._preempt_slot(s)
                     continue
-            if not table.ensure_writable(pos, self._device_copy_page):
+            ok = True
+            for pi in range(table.page_index(pos), table.page_index(top) + 1):
+                if not table.ensure_writable(
+                    max(pos, pi * ps), self._device_copy_page
+                ):
+                    ok = False
+                    break
+            if not ok:
                 self._preempt_slot(s)
 
     def _device_copy_page(self, src: int, dst: int) -> None:
-        self._bt_dirty = True  # COW swapped a page id in some table
+        self._tables_changed()  # COW swapped a page id in some table
         if self._cache_copy is not None:
             self._cache = self._cache_copy(self._cache, src, dst)
 
     # ------------------------------------------------------- prefill lane
-    def _prefill_step(self, now: float) -> list[Request]:
+    def _prefill_step(self, now: float, budget: int) -> list[Request]:
         """Ingest the next chunk of one prefilling request (DESIGN.md §10):
-        budget split and flip semantics live in ``_ChunkedPrefillMixin``;
-        this body is the paged storage half — the chunk's pages are
-        reserved up front (reclaim -> preempt-self on OOM, exactly like
-        decode growth), it is fed to the ``("pf", chunk_bucket)``
-        executable with the real length as data (padded columns write only
-        the null page), and the flip publishes the prompt's full pages to
-        the prefix cache."""
-        s = self._pick_prefill_slot()
-        if s is None:
+        plan and flip semantics live in ``_MultiLaneMixin``; this body is
+        the paged storage half — the chunk's pages are reserved up front
+        (reclaim -> preempt-self on OOM, exactly like decode growth), it is
+        fed to the ``("pf", chunk_bucket)`` executable with the real length
+        as data (padded columns write only the null page), and the flip
+        publishes the prompt's full pages to the prefix cache. One chunk
+        per step: the B=1 paged prefill executable keys on the chunk bucket
+        alone (the dense engine is the batched one)."""
+        plan = self._plan_chunks(budget, limit=1)
+        if not plan:
             return []
-        req, prompt, cursor, chunk, bucket = self._plan_chunk(s)
+        s, cursor, chunk = plan[0]
+        req = self._slots[s]
+        prompt = req.effective_prompt
+        bucket = bucket_pow2(chunk, CHUNK_BUCKET_MIN, self.prefill_chunk)
         table = self._tables[s]
         need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
         if need > 0:
-            self._bt_dirty = True
+            self._tables_changed()
             if not self._reclaim_pages(need, req.priority) or (
                 not table.ensure_capacity(cursor + chunk - 1)
             ):
@@ -980,6 +1425,7 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         # chunk-lane inputs are per-chunk data (tokens, cursor, table row,
         # length, the slot's sampling params/keys) — uploaded raw, counted
         self.stats.h2d_uploads += 7
+        self.stats.prefill_calls += 1
         nxt, self._cache, new_keys = step(
             self._cache,
             jnp.asarray(tok),
@@ -990,9 +1436,33 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
             jnp.asarray(self._greedy[s : s + 1]),
             jnp.asarray(self._keys[s : s + 1]),
         )
+        # draft mirror (DESIGN.md §11): the draft stack ingests the same
+        # chunk window into its dense per-slot cache so its KV tracks the
+        # committed stream before the draft lane runs. Prefix-cache-adopted
+        # prompt pages never pass through here, so the draft's view of a
+        # shared prefix stays cold — acceptance degrades on those requests,
+        # correctness never does (the verify lane guards every token).
+        if self._spec_on and self._draft_prefill_dispatch is not None:
+            dtok = np.zeros((self.num_slots, bucket), np.int32)
+            dtok[s] = tok[0]
+            dlen = np.zeros(self.num_slots, np.int32)
+            dlen[s] = chunk
+            dstep = self._draft_prefill_dispatch(bucket)
+            # the [S,...] chunk window is per-chunk data (2 raw uploads);
+            # pos/keys/sampling params ride the mirror
+            self.stats.h2d_uploads += 2
+            _, self._draft_cache, _ = dstep(
+                self._draft_cache,
+                jnp.asarray(dtok),
+                self._mirror.get("pos", self._pos),
+                jnp.asarray(dlen),
+                self._mirror.get("temps", self._temps),
+                self._mirror.get("greedy", self._greedy),
+                self._mirror.get("keys", self._keys),
+            )
         self._keys[s] = np.asarray(new_keys)[0]
         self._mirror.touch("keys")
-        self._chunk_slot = s
+        self._chunk_slots.add(s)
         cursor += chunk
         self._cursor[s] = cursor
         self._pos[s] = cursor
@@ -1004,7 +1474,7 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         if cursor >= len(prompt):  # flip: prompt ingested, prime generation
             # the packed decode table zeroed this slot's row while it was
             # prefilling; it must carry the real pages from the next step on
-            self._bt_dirty = True
+            self._tables_changed()
             # publish the prompt's full pages for sharing at the flip
             full = len(prompt) // self.pool.page_size
             if full > 0:
@@ -1017,30 +1487,38 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
                 self._tables[s] = None
                 self._slots[s] = None
                 self._active[s] = False
-                self._bt_dirty = True
+                self._tables_changed()
                 self.stats.finished += 1
                 finished.append(req)
         return finished
 
     # -------------------------------------------------------------- hot path
     def step(self, now: float = 0.0) -> list[Request]:
-        """One step for all slots; returns finished requests.
+        """One multi-lane step for all slots; returns finished requests.
 
-        Cold path first (one prefill chunk, page upkeep, bucket dispatch —
-        the latter two no-ops on the vast majority of steps), then a single
-        direct decode-executable call for the decoding slots.
+        Cold path first (the lane plan, one prefill chunk, page upkeep,
+        bucket dispatch — mostly no-ops on the vast majority of steps),
+        then the step's decode-side lane: either the draft/verify pair
+        (speculation planned) or a single direct decode-executable call.
         """
         if not self._active.any():
             return []
         finished: list[Request] = []
-        self._chunk_slot = None
+        self._chunk_slots = set()
+        self._flip_slots = set()
+        plan = self._plan_step()
         if self.prefill_chunk > 0 and (self._prefilling & self._active).any():
-            finished.extend(self._prefill_step(now))
-        self._page_upkeep()
+            finished.extend(self._prefill_step(now, plan.chunk_budget))
+        self._page_upkeep(plan.k)
         decoding = self._active & ~self._prefilling
         if not decoding.any():
             self.stats.steps += 1  # prefill-only step
             self._count_slot_steps(decoding)
+            return finished
+        if plan.k > 0:  # draft/verify lanes replace the decode lane
+            finished.extend(self._spec_step(now, plan.k, decoding))
+            self.stats.steps += 1
+            self._count_prefilling_slot_steps()
             return finished
         bucket = bucket_pow2(
             max(
@@ -1053,7 +1531,7 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
         if bucket != self._pages_bucket:
             self.stats.bucket_crossings += 1
             self._pages_bucket = bucket
-            self._bt_dirty = True  # table width changed
+            self._tables_changed()  # table width changed
         step = self._dispatch(bucket)  # cold: slot-hit unless bucket moved
         if self._bt_dirty:
             bt = np.zeros((self.num_slots, bucket), np.int32)  # NULL_PAGE
@@ -1073,6 +1551,7 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        self.stats.decode_steps += 1
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
         nxt_host = np.asarray(nxt)  # blocks until the device step is done
@@ -1118,17 +1597,119 @@ class PagedContinuousBatcher(_ChunkedPrefillMixin):
                 self._slots[s] = None
                 self._active[s] = False
                 self._mirror.touch("active")
-                self._bt_dirty = True
+                self._tables_changed()
                 self.stats.finished += 1
         return finished
 
+    # ---------------------------------------------------- draft/verify lanes
+    def _verify_call(self, k: int, tok, lengths):
+        """Paged verify executable ``("vf", slots, k)``: the shared
+        ``_spec_step``/``_apply_verify`` core lives in ``_MultiLaneMixin``;
+        this hook adds the full-width packed block tables (rebuilt only
+        when some table changed — ``_bt_full_dirty``). ``_page_upkeep(k)``
+        already reserved and COW'd every page in the verify windows; the
+        draft keeps a dense cache (the truncated stack is cheap enough not
+        to page)."""
+        if self._bt_full_dirty:  # full-width packed tables (all live slots)
+            bt = np.zeros(
+                (self.num_slots, self.max_pages_per_req), np.int32
+            )  # NULL_PAGE
+            for s, table in enumerate(self._tables):
+                if table is not None:
+                    bt[s, : table.num_pages] = table.pages
+            self._bt_full = bt
+            self._bt_full_dirty = False
+            self._mirror.touch("bt_full")
+        step = self._verify_dispatch(k)  # cold: slot-hit unless k moved
+        self.stats.h2d_uploads += 2  # per-step window data (tok pack, len)
+        rows, nxt0, self._cache, keys = step(
+            self._cache,
+            jnp.asarray(tok),
+            self._mirror.get("pos", self._pos),
+            self._mirror.get("bt_full", self._bt_full),
+            jnp.asarray(lengths),
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            self._mirror.get("keys", self._keys),
+        )
+        return rows, nxt0, keys
+
+    def _before_emit(self, s: int, req: Request) -> None:
+        """Prompt fully written: publish its full pages for sharing (the
+        verify-lane twin of the decode lane's flip-less publication)."""
+        if not self._prompt_cached[s]:
+            prompt = req.effective_prompt
+            full = len(prompt) // self.pool.page_size
+            if full > 0:
+                self.prefix.insert(prompt, self._tables[s].pages[:full])
+            self._prompt_cached[s] = True
+
+    def _after_commit(self, s: int, req: Request) -> None:
+        """Rollback as data, without churn: sync the table to the new
+        frontier and release only pages the *next* verify window can no
+        longer reach (``pos .. pos + min(spec_k, remaining - 1)``) — in
+        steady state that window covers everything this step wrote, so
+        trim fires as the tail drains rather than thrashing alloc/free and
+        packed-table rebuilds every boundary-crossing step. Rejected-tail
+        KV inside the kept pages is overwritten by the next committed
+        write; no code ever branches on it."""
+        table = self._tables[s]
+        pos = int(self._pos[s])
+        table.num_tokens = pos
+        horizon = pos + min(
+            self.spec_k, max(req.new_tokens - len(req.tokens) - 1, 0)
+        )
+        if table.trim(table.page_index(horizon) + 1):
+            self._tables_changed()
+
+    def _release_spec_slot(self, s: int) -> None:
+        self._tables[s].release()
+        self._tables[s] = None
+        self._slots[s] = None
+        self._active[s] = False
+        self._tables_changed()
+
 
 # ------------------------------------------------------------------ reports
-def latency_report(requests: Sequence[Request]) -> dict:
-    """p50/p95/p99 latency + TTFT + throughput over finished requests."""
+def latency_report(requests: Sequence[Request], batcher=None) -> dict:
+    """p50/p95/p99 latency + TTFT + throughput over finished requests.
+
+    With a ``batcher``, the report also carries the multi-lane telemetry
+    (DESIGN.md §11): per-lane step counts, accepted-tokens-per-target-step,
+    and acceptance-rate percentiles over the per-slot verify samples — the
+    numbers ``launch/serve.py`` prints for any engine."""
     done = [r for r in requests if r.t_done is not None]
+    lanes: dict = {}
+    if batcher is not None:
+        st = batcher.stats
+        lanes["lane_steps"] = st.lane_steps
+        if st.target_steps:
+            lanes["tokens_per_target_step"] = round(
+                st.tokens / st.target_steps, 3
+            )
+        if st.drafted_tokens:
+            lanes["spec"] = {
+                "k": batcher.spec_k,
+                "drafted_tokens": st.drafted_tokens,
+                "accepted_tokens": st.accepted_tokens,
+                "acceptance_rate": round(
+                    st.accepted_tokens / st.drafted_tokens, 4
+                ),
+                "k_bucket_crossings": st.k_bucket_crossings,
+            }
+            acc = np.array(batcher.accept_samples)
+            if len(acc):
+                lanes["spec"]["acceptance_p50"] = float(
+                    np.percentile(acc, 50)
+                )
+                lanes["spec"]["acceptance_p95"] = float(
+                    np.percentile(acc, 95)
+                )
+                lanes["spec"]["acceptance_p99"] = float(
+                    np.percentile(acc, 99)
+                )
     if not done:
-        return {"finished": 0}
+        return {"finished": 0, **lanes}
     lat = np.array([r.latency_s for r in done])
     toks = sum(len(r.tokens) for r in done)
     span = max(r.t_done for r in done) - min(r.arrival_s for r in done)
@@ -1141,6 +1722,7 @@ def latency_report(requests: Sequence[Request]) -> dict:
         "mean_ms": float(lat.mean() * 1e3),
         "tok_per_s": toks / span if span > 0 else float("inf"),
         "span_s": float(span),
+        **lanes,
     }
     ttft = np.array(
         [r.t_first - r.arrival_s for r in done if r.t_first is not None]

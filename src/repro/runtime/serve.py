@@ -24,6 +24,17 @@ requests map positions through block tables, and the dispatch key grows a
 third coordinate — ``("cb", slots, pages_bucket)`` — the semi-static
 capacity bucket. All buckets are AOT-warmed (log-sized fan-out), so bucket
 crossings rebind but never compile.
+
+Both continuous engines run a **multi-lane step pipeline** (DESIGN.md
+§10/§11): prefill chunks through ``("pf"/"pfd", ..., chunk_bucket)``, and —
+with ``spec_k > 0`` — speculative decoding through the draft/verify lanes:
+``("dr", slots, k_bucket)`` runs a truncated-layer *view* of the target
+(``models.draft_view``, no extra weights) K steps in one executable, and
+``("vf"/"vfd", slots, k_bucket)`` scores all K+1 positions in one target
+pass over the chunked scatter path. Every lane/bucket crossing is AOT-warmed
+at ``continuous()``/``paged_continuous()`` time, so the whole fan-out —
+decode × capacity, prefill × chunk, draft/verify × k — compiles exactly once
+per engine and never again.
 """
 
 from __future__ import annotations
@@ -76,9 +87,16 @@ class EngineConfig:
     # log-sized bucket set {8, 16, ..., prefill_chunk}, each an AOT-warmed
     # ("pf", chunk_bucket) dispatch key.
     prefill_chunk: int = 0
-    # Per-step token budget split between one prefilling request's chunk and
-    # the decoding slots; 0 = slots + prefill_chunk.
+    # Per-step token budget split across the lanes by the LanePolicy;
+    # 0 = slots + prefill_chunk.
     token_budget: int = 0
+    # Speculative decoding (DESIGN.md §11): max draft depth per target step
+    # (0 disables the draft/verify lanes; per-step k is drawn from the
+    # log-sized k-bucket set {1, 2, ..., spec_k}, each an AOT-warmed
+    # dispatch key) and the truncated-layer draft view's depth in
+    # layer-periods (models.draft_view).
+    spec_k: int = 0
+    draft_layers: int = 1
 
 
 class Engine:
@@ -97,6 +115,16 @@ class Engine:
         )
         self._current: Callable | None = None  # mirror of the hot slot
         self._current_key: tuple | None = None
+        # Speculative decoding (DESIGN.md §11): the draft model is a
+        # truncated-layer *view* of the target — shared embed/head, the
+        # first draft_layers periods of blocks — so it costs no extra
+        # weights and its abstract shapes derive from the same params.
+        self.draft_cfg = None
+        self.draft_params = None
+        if ecfg.spec_k > 0:
+            self.draft_cfg, self.draft_params = models.draft_view(
+                cfg, params, ecfg.draft_layers
+            )
         self.stats = {"tokens": 0, "hot_calls": 0, "mode_switches": 0}
 
     def close(self) -> None:
@@ -128,9 +156,13 @@ class Engine:
 
         Keys: ``(bucket, mode)`` for per-burst steps (mode baked in),
         ``("cb", slots)`` / ``("cb", slots, pages_bucket)`` for the
-        continuous-batching decode steps (mode as data), and the chunked
+        continuous-batching decode steps (mode as data), the chunked
         prefill lane (DESIGN.md §10): ``("pf", chunk_bucket)`` for the paged
-        prompt path, ``("pfd", slots, chunk_bucket)`` for the dense one.
+        prompt path, ``("pfd", slots, chunk_bucket)`` for the dense one,
+        and the speculative lanes (DESIGN.md §11): ``("dr", slots, k)`` for
+        the draft scan, ``("vf"/"vfd", slots, k)`` for the paged/dense
+        verify pass, ``("drp", slots, chunk_bucket)`` for the draft's
+        prompt mirror.
         """
         if key[0] == "cb":
             if len(key) == 3:  # ("cb", slots, pages_bucket): paged decode
@@ -140,6 +172,14 @@ class Engine:
             return self._build_paged_prefill(key[1])
         if key[0] == "pfd":  # ("pfd", slots, chunk_bucket): dense prefill
             return self._build_slot_prefill(key[1], key[2])
+        if key[0] == "dr":  # ("dr", slots, k): draft lane
+            return self._build_draft(key[1], key[2])
+        if key[0] == "vf":  # ("vf", slots, k): paged verify lane
+            return self._build_paged_verify(key[1], key[2])
+        if key[0] == "vfd":  # ("vfd", slots, k): dense verify lane
+            return self._build_slot_verify(key[1], key[2])
+        if key[0] == "drp":  # ("drp", slots, chunk_bucket): draft prefill
+            return self._build_draft_prefill(key[1], key[2])
         bucket, mode = key
         return self._build_burst_decode(bucket, mode)
 
@@ -265,6 +305,111 @@ class Engine:
         )
         return lowered.compile()
 
+    def _abstract_draft_params(self):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            self.draft_params,
+        )
+
+    def _build_draft(self, slots: int, k: int) -> Callable:
+        """Executable for the ``("dr", slots, k)`` dispatch key: K draft
+        decode steps scanned inside one executable (DESIGN.md §11). Draft
+        depth is the semi-static condition — k is baked into the scan
+        length, so depth variation re-dispatches on the cold path and the
+        hot loop never counts iterations."""
+        ecfg = self.ecfg
+        step = steps_mod.make_draft_fn(
+            self.draft_cfg, k=k, moe_policy=ecfg.moe_policy
+        )
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(self.draft_cfg, slots, ecfg.max_len)
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_draft_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def _build_paged_verify(self, slots: int, k: int) -> Callable:
+        """Executable for the ``("vf", slots, k)`` dispatch key: the target
+        scores all K+1 window positions in one pass through the paged
+        chunk path (DESIGN.md §11). The window width k+1 is baked into the
+        shapes; the block-table width is pinned at the per-request page cap
+        (masked positions contribute exactly nothing), so k is the *only*
+        verify coordinate."""
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_paged_verify_fn(cfg, moe_policy=ecfg.moe_policy)
+        c_shape = jax.eval_shape(
+            lambda: models.init_paged_cache(
+                cfg, self.pool_pages + 1, ecfg.page_size
+            )
+        )
+        pb = self.max_pages_per_req
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, k + 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots, pb), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def _build_slot_verify(self, slots: int, k: int) -> Callable:
+        """Executable for the ``("vfd", slots, k)`` dispatch key: the dense
+        engine's verify pass (DESIGN.md §11) — a slot's private cache rows
+        are a trivial identity block table, so the same k-bucket machinery
+        serves both engines."""
+        cfg, ecfg = self.cfg, self.ecfg
+        step = steps_mod.make_slot_verify_fn(cfg, moe_policy=ecfg.moe_policy)
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(cfg, slots, ecfg.max_len)
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, k + 1), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
+    def _build_draft_prefill(self, slots: int, chunk_bucket: int) -> Callable:
+        """Executable for the ``("drp", slots, chunk_bucket)`` dispatch key:
+        the draft stack's prompt mirror (DESIGN.md §11) — the same chunked
+        dense ingestion as ``("pfd", ...)`` but over the truncated-layer
+        draft view, so the draft's KV tracks the committed stream."""
+        ecfg = self.ecfg
+        step = steps_mod.make_slot_prefill_fn(
+            self.draft_cfg, moe_policy=ecfg.moe_policy
+        )
+        c_shape = jax.eval_shape(
+            lambda: models.init_cache(self.draft_cfg, slots, ecfg.max_len)
+        )
+        lowered = jax.jit(step, donate_argnums=(1,)).lower(
+            self._abstract_draft_params(),
+            c_shape,
+            jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
+        )
+        return lowered.compile()
+
     @property
     def pool_pages(self) -> int:
         """Allocatable page count (excluding the null page)."""
@@ -297,6 +442,130 @@ class Engine:
         return self.ecfg.prefill_chunk > 0 and all(
             self.cfg.mixer_at(slot).startswith("attn")
             for slot in range(self.cfg.period)
+        )
+
+    def _k_buckets(self) -> list[int]:
+        """The log-sized k-bucket fan-out {1, 2, 4, ..., spec_k}."""
+        if self.ecfg.spec_k <= 0:
+            return []
+        out, b = [], 1
+        while True:
+            b = min(b, self.ecfg.spec_k)
+            out.append(b)
+            if b >= self.ecfg.spec_k:
+                return out
+            b *= 2
+
+    def _supports_spec_decode(self) -> bool:
+        """The verify lane rides the chunked scatter paths, so speculation
+        shares chunked prefill's attention-only constraint."""
+        return self.ecfg.spec_k > 0 and all(
+            self.cfg.mixer_at(slot).startswith("attn")
+            for slot in range(self.cfg.period)
+        )
+
+    def _spec_lanes(
+        self, slots: int, cache_is_paged: bool
+    ) -> tuple[Callable | None, Callable | None, Callable | None, Any]:
+        """Build + AOT-warm the speculative lanes for one batcher
+        (DESIGN.md §11): every ``("dr", slots, k)`` and
+        ``("vf"/"vfd", slots, k)`` bucket plus the ``("drp", slots, cb)``
+        prompt mirror is compiled *and* dummy-run through the exact runtime
+        path, so k-axis crossings rebind without compiling and the first
+        real verify pays no program load. Returns the three dispatch
+        closures and the warmed draft cache."""
+        if not self._supports_spec_decode():
+            return None, None, None, None
+        s, ecfg = slots, self.ecfg
+        vkey = "vf" if cache_is_paged else "vfd"
+        draft_cache = models.init_cache(self.draft_cfg, s, ecfg.max_len)
+        zeros = lambda *shape: jnp.asarray(np.zeros(shape, np.int32))
+        sampling = (
+            jnp.asarray(np.ones(s, np.float32)),
+            jnp.asarray(np.ones(s, bool)),
+            jnp.asarray(np.zeros((s, 2), np.uint32)),
+        )
+        for k in self._k_buckets():
+            dr = self._decode.build(("dr", s, k))
+            warm = dr(
+                self.draft_params,
+                draft_cache,
+                zeros(s, 1),
+                zeros(s),
+                jnp.asarray(np.zeros(s, bool)),
+                *sampling,
+            )
+            jax.block_until_ready(warm)
+            np.asarray(warm[0])
+            draft_cache = warm[1]
+        for cb in self._chunk_buckets():
+            drp = self._decode.build(("drp", s, cb))
+            warm = drp(
+                self.draft_params, draft_cache, zeros(s, cb), zeros(s),
+                zeros(s), *sampling,
+            )
+            jax.block_until_ready(warm)
+            draft_cache = warm[1]
+
+        def draft_dispatch(k: int) -> Callable:
+            exe = self._decode.dispatch(("dr", s, k))
+
+            def bound_draft(dcache, tok, pos, active, temps, greedy, keys):
+                self.stats["hot_calls"] += 1
+                return exe(
+                    self.draft_params, dcache, tok, pos, active, temps,
+                    greedy, keys,
+                )
+
+            return bound_draft
+
+        def draft_prefill_dispatch(chunk_bucket: int) -> Callable:
+            exe = self._decode.dispatch(("drp", s, chunk_bucket))
+
+            def bound_drp(dcache, tok, start, length, temps, greedy, keys):
+                self.stats["hot_calls"] += 1
+                return exe(
+                    self.draft_params, dcache, tok, start, length, temps,
+                    greedy, keys,
+                )
+
+            return bound_drp
+
+        if cache_is_paged:
+
+            def verify_dispatch(k: int) -> Callable:
+                exe = self._decode.dispatch((vkey, s, k))
+
+                def bound_verify(
+                    cache, tok, start, bt, length, temps, greedy, keys
+                ):
+                    self.stats["hot_calls"] += 1
+                    return exe(
+                        self.params, cache, tok, start, bt, length, temps,
+                        greedy, keys,
+                    )
+
+                return bound_verify
+
+        else:
+
+            def verify_dispatch(k: int) -> Callable:
+                exe = self._decode.dispatch((vkey, s, k))
+
+                def bound_verify(
+                    cache, tok, start, length, temps, greedy, keys
+                ):
+                    self.stats["hot_calls"] += 1
+                    return exe(
+                        self.params, cache, tok, start, length, temps,
+                        greedy, keys,
+                    )
+
+                return bound_verify
+
+        return (
+            draft_dispatch, verify_dispatch, draft_prefill_dispatch,
+            draft_cache,
         )
 
     def set_mode(
@@ -375,12 +644,21 @@ class Engine:
         return np.stack([np.asarray(t) for t in out], axis=1), cache
 
     # -------------------------------------------------- continuous batching
-    def continuous(self, *, slots: int | None = None, seed: int = 0) -> ContinuousBatcher:
-        """Cold path: build+warm the slot executable, return a batcher.
+    def continuous(
+        self,
+        *,
+        slots: int | None = None,
+        seed: int = 0,
+        spec_decode: bool | None = None,
+    ) -> ContinuousBatcher:
+        """Cold path: build+warm every lane/bucket executable, return a
+        batcher.
 
         This is the only compile the continuous path ever pays for a given
-        bucket size; afterwards joins, leaves, and greedy/sample flips are
-        pure hot-loop data.
+        bucket size; afterwards joins, leaves, greedy/sample flips, chunk
+        sizes, and draft depths are pure hot-loop data or warmed rebinds.
+        ``spec_decode`` overrides the engine config (None = on iff
+        ``spec_k > 0``).
         """
         if self.cfg.input_kind != "tokens":
             raise ValueError(
@@ -449,6 +727,36 @@ class Engine:
 
                 return bound_prefill
 
+        # Speculative lanes (DESIGN.md §11): AOT-compile *and* dummy-run
+        # every ("vfd", slots, k) verify bucket against the real cache
+        # (length 0 everywhere: no cache row is written), then the draft
+        # side via _spec_lanes.
+        draft_dispatch = verify_dispatch = draft_prefill_dispatch = None
+        draft_cache = None
+        use_spec = (
+            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
+        )
+        if use_spec and self._supports_spec_decode():
+            for k in self._k_buckets():
+                vf_exe = self._decode.build(("vfd", s, k))
+                warm = vf_exe(
+                    self.params,
+                    cache,
+                    jnp.asarray(np.zeros((s, k + 1), np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.ones(s, np.float32)),
+                    jnp.asarray(np.ones(s, bool)),
+                    jnp.asarray(np.zeros((s, 2), np.uint32)),
+                )
+                jax.block_until_ready(warm)
+                np.asarray(warm[0]), np.asarray(warm[1])
+                cache = warm[2]
+            (
+                draft_dispatch, verify_dispatch, draft_prefill_dispatch,
+                draft_cache,
+            ) = self._spec_lanes(s, cache_is_paged=False)
+
         return ContinuousBatcher(
             step=bound_step,
             num_slots=s,
@@ -458,6 +766,11 @@ class Engine:
             prefill_dispatch=prefill_dispatch,
             prefill_chunk=self.ecfg.prefill_chunk,
             token_budget=self.ecfg.token_budget,
+            draft_dispatch=draft_dispatch,
+            verify_dispatch=verify_dispatch,
+            draft_prefill_dispatch=draft_prefill_dispatch,
+            draft_cache=draft_cache,
+            spec_k=self.ecfg.spec_k,
         )
 
 
@@ -468,6 +781,7 @@ class Engine:
         slots: int | None = None,
         seed: int = 0,
         warm_all_buckets: bool = True,
+        spec_decode: bool | None = None,
     ) -> PagedContinuousBatcher:
         """Cold path: build the page pool + prefix cache and warm the
         capacity buckets; returns a paged batcher (DESIGN.md §9).
@@ -583,6 +897,39 @@ class Engine:
 
                 return bound_prefill
 
+        # Speculative lanes (DESIGN.md §11): AOT-compile *and* dummy-run
+        # every ("vf", slots, k) verify bucket against the real pooled
+        # cache (length 0 + null tables: writes land in the null page),
+        # then the draft side via _spec_lanes.
+        draft_dispatch = verify_dispatch = draft_prefill_dispatch = None
+        draft_cache = None
+        use_spec = (
+            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
+        )
+        if use_spec and self._supports_spec_decode():
+            for k in self._k_buckets():
+                vf_exe = self._decode.build(("vf", s, k))
+                warm = vf_exe(
+                    self.params,
+                    cache,
+                    jnp.asarray(np.zeros((s, k + 1), np.int32)),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(
+                        np.zeros((s, max_pages_per_req), np.int32)
+                    ),
+                    jnp.asarray(np.zeros(s, np.int32)),
+                    jnp.asarray(np.ones(s, np.float32)),
+                    jnp.asarray(np.ones(s, bool)),
+                    jnp.asarray(np.zeros((s, 2), np.uint32)),
+                )
+                jax.block_until_ready(warm)
+                np.asarray(warm[0]), np.asarray(warm[1])
+                cache = warm[2]
+            (
+                draft_dispatch, verify_dispatch, draft_prefill_dispatch,
+                draft_cache,
+            ) = self._spec_lanes(s, cache_is_paged=True)
+
         # Pre-bind the hot slot to the smallest bucket (cheap dispatch); the
         # warm-all loop above already dummy-ran every bucket, so only the
         # opt-out path still needs its own warm call (paper §4.3).
@@ -620,6 +967,11 @@ class Engine:
             prefill_dispatch=prefill_dispatch,
             prefill_chunk=self.ecfg.prefill_chunk,
             token_budget=self.ecfg.token_budget,
+            draft_dispatch=draft_dispatch,
+            verify_dispatch=verify_dispatch,
+            draft_prefill_dispatch=draft_prefill_dispatch,
+            draft_cache=draft_cache,
+            spec_k=self.ecfg.spec_k,
         )
 
 
@@ -656,7 +1008,7 @@ def run_continuous_stream(
             if nxt is None:
                 break
             clock.jump_to(nxt)  # idle: fast-forward to the next arrival
-    report = latency_report(finished)
+    report = latency_report(finished, batcher=cb)
     report.update(
         engine="continuous",
         slots=cb.num_slots,
@@ -667,6 +1019,8 @@ def run_continuous_stream(
         prefill_chunks=cb.stats.prefill_chunks,
         chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
         h2d_uploads=cb.stats.h2d_uploads,
+        spec_k=cb.spec_k,
+        k_bucket_crossings=cb.stats.k_bucket_crossings,
         compiles_total=eng._decode.stats.misses,
         compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
         rebinds=eng._decode.stats.rebinds - warm_rebinds,
@@ -797,7 +1151,7 @@ def run_paged_stream(
         if nxt is None:
             break
         clock.jump_to(nxt)  # idle: fast-forward to the next arrival
-    report = latency_report(finished)
+    report = latency_report(finished, batcher=cb)
     report.update(
         engine="paged",
         slots=cb.num_slots,
@@ -832,6 +1186,8 @@ def run_paged_stream(
         prefill_chunks=cb.stats.prefill_chunks,
         chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
         h2d_uploads=cb.stats.h2d_uploads,
+        spec_k=cb.spec_k,
+        k_bucket_crossings=cb.stats.k_bucket_crossings,
         cow_copies=cb.pool.stats.cow_copies,
         prefix_evictions=cb.pool.stats.prefix_evictions,
         unserved=len(requests) - len(finished),

@@ -227,6 +227,112 @@ def _sample_rows(logits, temps, greedy, keys):
     return jnp.where(greedy, g, s), new_keys[:, 0]
 
 
+def make_draft_fn(
+    draft_cfg: ArchConfig, *, k: int, moe_policy: str = "drop"
+) -> Callable:
+    """Draft lane (DESIGN.md §11): K candidate tokens per slot in *one*
+    executable — the ``("dr", slots, k_bucket)`` semi-static dispatch key.
+
+        step(draft_params, draft_cache, tok[S,1], pos[S], active[S],
+             temps[S], greedy[S], keys[S,2])
+          -> (drafts[S,K], draft_cache, new_pos[S], new_keys[S,2])
+
+    ``draft_cfg``/``draft_params`` are the truncated-layer view of the
+    target (``models.draft_view``); ``draft_cache`` is the draft's own
+    dense per-slot KV. The K decode steps run as a ``lax.scan`` *inside*
+    the executable, so draft depth is a compile-time constant — varying K
+    picks a different k-bucket executable on the cold path and never
+    branches per step. Each scan step feeds the previous candidate back,
+    writing the draft's KV at the advancing position; the scheduler later
+    rewinds ``pos`` to the verified frontier as pure data, and the next
+    round's writes overwrite whatever the rejected tail left behind.
+
+    Sampling params ride through ``_sample_rows`` exactly like every other
+    lane (the scheduler forces ``greedy`` on so candidate streams are
+    deterministic; the shared tail keeps the contract uniform and leaves
+    sampled drafts open for rejection-sampling later).
+    """
+
+    def draft_step(params, cache, tok, pos, active, temps, greedy, keys):
+        def body(carry, _):
+            tok, cache, pos, keys = carry
+            logits, cache = models.decode_step(
+                draft_cfg, params, cache, tok, pos, moe_policy=moe_policy
+            )
+            nxt, keys = _sample_rows(logits, temps, greedy, keys)
+            new_pos = pos + active.astype(jnp.int32)
+            return (nxt[:, None], cache, new_pos, keys), nxt
+
+        (_, cache, pos, new_keys), drafts = jax.lax.scan(
+            body, (tok, cache, pos, keys), None, length=k
+        )
+        return jnp.moveaxis(drafts, 0, 1), cache, pos, new_keys
+
+    return draft_step
+
+
+def make_paged_verify_fn(
+    cfg: ArchConfig, *, moe_policy: str = "drop"
+) -> Callable:
+    """Verify lane through the paged KV cache (DESIGN.md §11) — the
+    ``("vf", slots, k_bucket)`` semi-static dispatch key.
+
+        step(params, cache, tok[S,K+1], start[S], block_tables[S,PB],
+             length[S], temps[S], greedy[S], keys[S,2])
+          -> (rows[S,K+1], next0[S], cache, new_keys[S,2])
+
+    ``tok`` packs each slot's current token followed by its K draft
+    candidates; the chunked-prefill scatter path scores all K+1 positions
+    in one target pass (columns >= ``length`` are bucket padding into the
+    null page). ``rows[s, i]`` is the greedy continuation after feeding
+    rows 0..i — the acceptance test and the correction token are host-side
+    comparisons over this array (accept/rollback is *data*, never a code
+    branch). ``next0`` is the mode-respecting sample from row 0 via the
+    shared ``_sample_rows`` tail, so a verify with length 1 *is* a decode
+    step — sampling slots and draft-ineligible slots ride the same
+    executable with k as padding.
+    """
+
+    def verify_step(
+        params, cache, tok, start, block_tables, length, temps, greedy, keys
+    ):
+        logits, cache = models.paged_verify_step(
+            cfg, params, cache, tok, start, block_tables, length,
+            moe_policy=moe_policy,
+        )
+        rows = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt0, new_keys = _sample_rows(logits[:, 0], temps, greedy, keys)
+        return rows, nxt0, cache, new_keys
+
+    return verify_step
+
+
+def make_slot_verify_fn(
+    cfg: ArchConfig, *, moe_policy: str = "drop"
+) -> Callable:
+    """Verify lane over the dense per-slot cache (DESIGN.md §11) — the
+    ``("vfd", slots, k_bucket)`` dispatch key.
+
+        step(params, cache, tok[S,K+1], start[S], length[S], temps[S],
+             greedy[S], keys[S,2])
+          -> (rows[S,K+1], next0[S], cache, new_keys[S,2])
+
+    Behaviourally aligned with ``make_paged_verify_fn`` — a dense slot's
+    cache rows are a trivial identity block table, so both engines share
+    the accept/rollback contract (and ``_sample_rows``).
+    """
+
+    def verify_step(params, cache, tok, start, length, temps, greedy, keys):
+        logits, cache = models.chunked_verify_step(
+            cfg, params, cache, tok, start, length, moe_policy=moe_policy
+        )
+        rows = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt0, new_keys = _sample_rows(logits[:, 0], temps, greedy, keys)
+        return rows, nxt0, cache, new_keys
+
+    return verify_step
+
+
 def make_paged_prefill_fn(
     cfg: ArchConfig, *, moe_policy: str = "drop"
 ) -> Callable:
