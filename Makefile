@@ -2,11 +2,12 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	bench-serving bench-kvcache bench-prefill bench-specdec bench-check \
-	bench examples
+	smoke-quantkv bench-serving bench-kvcache bench-prefill bench-specdec \
+	bench-quantkv bench-check bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
-verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec
+verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
+	smoke-quantkv
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -45,6 +46,13 @@ smoke-specdec:
 		--page-size 8 --num-pages 36 --prompt-len 16 --prefill-chunk 16 \
 		--spec-k 2 --sample-frac 0
 
+# CPU smoke: quantised int8 KV pages (DESIGN.md §12) on the paged engine.
+smoke-quantkv:
+	$(PY) -m repro.launch.serve --smoke --requests 8 --rate 200 \
+		--tokens-mean 4 --max-len 64 --engine paged \
+		--page-size 8 --num-pages 28 --prompt-len 16 --prefill-chunk 16 \
+		--kv-dtype int8 --sample-frac 0
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters).
 bench-serving:
@@ -66,10 +74,15 @@ bench-prefill:
 bench-specdec:
 	$(PY) -m benchmarks.run --only specdec --fast
 
+# Quantised-KV scenario: writes BENCH_quantkv.json (int8 vs fp32 pools at
+# matched memory: seating ratio, logit drift, zero-compile dtype crossing).
+bench-quantkv:
+	$(PY) -m benchmarks.run --only quantkv --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
 	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
-		BENCH_prefill.json BENCH_specdec.json
+		BENCH_prefill.json BENCH_specdec.json BENCH_quantkv.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

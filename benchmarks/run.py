@@ -103,6 +103,42 @@ def _specdec_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _quantkv_suite(fast: bool, json_path: str) -> list[str]:
+    from . import quantkv_bench
+
+    res = quantkv_bench.quantkv_comparison(n_requests=16 if fast else 32)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("int8", "fp32"):
+        r = res[kind]
+        rows.append(
+            f"quantkv/{kind}/peak_concurrent,{r.get('peak_concurrent', 0)},"
+            f"tok_per_s={r.get('tok_per_s', 0.0):.1f};"
+            f"p95_ms={r.get('p95_ms', 0.0):.1f};"
+            f"pool_pages={r.get('pool_pages')};"
+            f"preemptions={r.get('preemptions')};"
+            f"starved={r.get('starved_admissions')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    d = res["logit_drift"]
+    rows.append(
+        f"quantkv/logit_drift,{d['max_abs_drift']},"
+        f"max_abs_logit={d['max_abs_logit']};bound={d['bound']};"
+        f"argmax_flips={d['argmax_flips']}"
+    )
+    rows.append(
+        f"quantkv/crossing,{res['crossing']['crossing_compiles']},"
+        f"int8_then_fp32_compiles"
+    )
+    rows.append(
+        f"quantkv/acceptance,0.0,"
+        f"{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"quantkv/json,0.0,written={json_path}")
+    return rows
+
+
 def _serving_suite(fast: bool, json_path: str) -> list[str]:
     from . import hotpath_serving
 
@@ -133,6 +169,7 @@ def main() -> None:
     ap.add_argument("--kvcache-json", default="BENCH_kvcache.json")
     ap.add_argument("--prefill-json", default="BENCH_prefill.json")
     ap.add_argument("--specdec-json", default="BENCH_specdec.json")
+    ap.add_argument("--quantkv-json", default="BENCH_quantkv.json")
     args = ap.parse_args()
 
     from . import (
@@ -162,6 +199,7 @@ def main() -> None:
         "kvcache": lambda: _kvcache_suite(args.fast, args.kvcache_json),
         "prefill": lambda: _prefill_suite(args.fast, args.prefill_json),
         "specdec": lambda: _specdec_suite(args.fast, args.specdec_json),
+        "quantkv": lambda: _quantkv_suite(args.fast, args.quantkv_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

@@ -19,6 +19,12 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
   workload, stream bit-for-bit the plain greedy tokens, and keep
   post-warmup compiles at zero across k-bucket crossings (crossings
   rebind the draft/verify executables, never compile).
+* BENCH_quantkv.json — quantised int8 KV pages (DESIGN.md §12) must seat
+  >= 1.5x the fp32 pool's concurrent requests at matched pool memory,
+  keep teacher-forced greedy logit drift under the stated bound, serve
+  every request, and keep post-warmup compiles at zero *including* the
+  pool-dtype flip (the kv_dtype axis is AOT-warmed by the registry
+  fan-out; a crossing rebinds, never compiles).
 
 Usage: python scripts/bench_check.py [BENCH_*.json ...]
 Missing files are skipped with a warning (suites can be run selectively);
@@ -133,11 +139,56 @@ def check_specdec(data: dict) -> list[str]:
     return errors
 
 
+def check_quantkv(data: dict) -> list[str]:
+    errors = []
+    for kind in ("int8", "fp32"):
+        caw = data.get(kind, {}).get("compiles_after_warmup")
+        if caw is None:
+            errors.append(f"quantkv: {kind} report lacks compiles_after_warmup")
+        elif caw > 0:
+            errors.append(
+                f"quantkv: {kind} pool recompiled after warmup "
+                f"(compiles_after_warmup={caw}, must be 0)"
+            )
+    acc = data.get("acceptance", {})
+    ratio = acc.get("seating_ratio", 0.0)
+    if not ratio >= 1.5:
+        errors.append(
+            f"quantkv: int8 pool must seat >= 1.5x the fp32 pool at matched "
+            f"memory (seating_ratio={ratio})"
+        )
+    drift = data.get("logit_drift", {})
+    bound = drift.get("bound")
+    if bound is None or not drift.get("max_abs_drift", 1e9) <= bound:
+        errors.append(
+            f"quantkv: greedy logit drift {drift.get('max_abs_drift')} "
+            f"exceeds the stated bound {bound}"
+        )
+    crossing = data.get("crossing", {}).get("crossing_compiles")
+    if crossing != 0:
+        errors.append(
+            f"quantkv: the pool-dtype flip compiled "
+            f"(crossing_compiles={crossing}; the kv_dtype axis must be "
+            f"AOT-warmed)"
+        )
+    for key in (
+        "int8_seats_1p5x_fp32",
+        "logit_drift_bounded",
+        "no_compiles_after_warmup",
+        "dtype_crossing_without_compiles",
+        "all_served",
+    ):
+        if not acc.get(key, False):
+            errors.append(f"quantkv: acceptance flag {key!r} is not True")
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
     "BENCH_prefill.json": check_prefill,
     "BENCH_specdec.json": check_specdec,
+    "BENCH_quantkv.json": check_quantkv,
 }
 
 

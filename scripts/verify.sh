@@ -34,3 +34,9 @@ python -m repro.launch.serve --smoke --requests 8 --rate 200 \
   --tokens-mean 6 --max-len 64 --engine paged \
   --page-size 8 --num-pages 36 --prompt-len 16 --prefill-chunk 16 \
   --spec-k 2 --sample-frac 0
+
+echo "== quantised int8 KV pages smoke (CPU) =="
+python -m repro.launch.serve --smoke --requests 8 --rate 200 \
+  --tokens-mean 4 --max-len 64 --engine paged \
+  --page-size 8 --num-pages 28 --prompt-len 16 --prefill-chunk 16 \
+  --kv-dtype int8 --sample-frac 0

@@ -17,6 +17,14 @@ from .dispatch import (
     live_dispatchers,
     reset_dispatchers,
 )
+from .lanes import (
+    LANES,
+    DispatchKey,
+    LaneAxis,
+    LaneRegistry,
+    LaneSpec,
+    UnknownLaneError,
+)
 from .semistatic import (
     BranchChanger,
     BranchChangerError,
@@ -39,9 +47,15 @@ __all__ = [
     "CacheStats",
     "CompileCache",
     "DispatchError",
+    "DispatchKey",
     "DispatchPolicy",
     "DispatchStats",
     "Dispatcher",
+    "LANES",
+    "LaneAxis",
+    "LaneRegistry",
+    "LaneSpec",
+    "UnknownLaneError",
     "SpecStats",
     "SpecTable",
     "bucket_multiple",

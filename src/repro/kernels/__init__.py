@@ -8,12 +8,17 @@ ref              — pure-jnp oracles
 
 from .decode_attention import (
     paged_decode_attention,
+    paged_decode_attention_int8,
+    paged_decode_attention_int8_reference,
     paged_decode_attention_reference,
 )
 from .prefill_attention import (
     paged_prefill_attention,
+    paged_prefill_attention_int8,
+    paged_prefill_attention_int8_reference,
     paged_prefill_attention_reference,
     paged_verify_attention,
+    paged_verify_attention_int8,
 )
 from .ops import (
     KernelBranch,
@@ -29,9 +34,14 @@ __all__ = [
     "flash_attention",
     "flash_attention_branchy",
     "paged_decode_attention",
+    "paged_decode_attention_int8",
+    "paged_decode_attention_int8_reference",
     "paged_decode_attention_reference",
     "paged_prefill_attention",
+    "paged_prefill_attention_int8",
+    "paged_prefill_attention_int8_reference",
     "paged_prefill_attention_reference",
     "paged_verify_attention",
+    "paged_verify_attention_int8",
     "ssd_chunk",
 ]

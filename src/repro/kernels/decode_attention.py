@@ -167,10 +167,23 @@ def _make_paged_kernel(
     group: int,
     sm_scale: float,
     num_pages_per_req: int,
+    quantised: bool = False,
 ):
-    def kernel(
-        bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr
-    ):
+    """One online-softmax body for both page dtypes (DESIGN.md §12).
+
+    ``quantised`` is a *trace-time* flag: True adds two per-token-row scale
+    operands (gathered through the same block-table index maps) and one
+    in-register dequant multiply after each K/V load. fp32 and int8 are
+    still two separately compiled branch targets — the flag specialises the
+    kernel, it never branches at runtime — but the masking/softmax body is
+    written exactly once.
+    """
+
+    def kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest):
+        if quantised:
+            ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+        else:
+            o_ref, m_scr, l_scr, acc_scr = rest
         b = pl.program_id(0)
         pb = pl.program_id(2)
         pos = pos_ref[b]
@@ -194,6 +207,9 @@ def _make_paged_kernel(
             q = q_ref[0, 0].astype(jnp.float32)  # [G, dh]
             k = k_ref[0, :, 0].astype(jnp.float32)  # [ps, dh]
             v = v_ref[0, :, 0].astype(jnp.float32)
+            if quantised:  # dequant: int8 rows x their per-row scales
+                k = k * ks_ref[0][:, None]
+                v = v * vs_ref[0][:, None]
             s = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ()))
             ) * sm_scale  # [G, ps]
@@ -223,24 +239,20 @@ def _make_paged_kernel(
     return kernel
 
 
-def paged_decode_attention(
-    q: jax.Array,  # [B, H, dh] one token per sequence
-    k_pages: jax.Array,  # [P, page_size, KH, dh] pooled pages
+def _paged_decode_call(
+    q: jax.Array,
+    k_pages: jax.Array,
     v_pages: jax.Array,
-    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
-    pos: jax.Array,  # i32[B] per-row positions (inclusive)
+    block_tables: jax.Array,
+    pos: jax.Array,
+    scales: tuple[jax.Array, jax.Array] | None,
     *,
-    window: Optional[int] = None,
-    softcap: Optional[float] = None,
-    interpret: bool = False,
+    window: Optional[int],
+    softcap: Optional[float],
+    interpret: bool,
 ) -> jax.Array:
-    """Block-table-gather decode attention over a page pool.
-
-    The logical cache row ``j`` of sequence ``b`` lives at
-    ``k_pages[block_tables[b, j // ps], j % ps]``. The gather happens in the
-    BlockSpec index map via the prefetched table; page count per request is a
-    compile-time constant (the semi-static ``pages_bucket``).
-    """
+    """Shared grid/spec plumbing for the fp32 and int8 public entry points;
+    ``scales`` (k_scale, v_scale) present selects the quantised kernel."""
     b, h, dh = q.shape
     _, page_size, kh, _ = k_pages.shape
     assert h % kh == 0
@@ -256,25 +268,32 @@ def paged_decode_attention(
         group=group,
         sm_scale=sm_scale,
         num_pages_per_req=npages,
+        quantised=scales is not None,
     )
+    # page indirection: every per-page operand's index map chases the
+    # prefetched block table (scale pages included)
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, dh),
+        lambda b_, h_, pb, bt, pos_: (bt[b_, pb], 0, h_, 0),
+    )
+    scale_spec = pl.BlockSpec(
+        (1, page_size), lambda b_, h_, pb, bt, pos_: (bt[b_, pb], 0)
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, group, dh), lambda b_, h_, pb, bt, pos_: (b_, h_, 0, 0)
+        ),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if scales is not None:
+        in_specs += [scale_spec, scale_spec]
+        operands += [jnp.asarray(s, jnp.float32) for s in scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # (block_tables, pos)
         grid=(b, kh, npages),
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, group, dh),
-                lambda b_, h_, pb, bt, pos_: (b_, h_, 0, 0),
-            ),
-            # page indirection: the index map chases the block table
-            pl.BlockSpec(
-                (1, page_size, 1, dh),
-                lambda b_, h_, pb, bt, pos_: (bt[b_, pb], 0, h_, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, dh),
-                lambda b_, h_, pb, bt, pos_: (bt[b_, pb], 0, h_, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, group, dh), lambda b_, h_, pb, bt, pos_: (b_, h_, 0, 0)
         ),
@@ -295,11 +314,82 @@ def paged_decode_attention(
     )(
         jnp.asarray(block_tables, jnp.int32),
         jnp.asarray(pos, jnp.int32),
-        qg,
-        k_pages,
-        v_pages,
+        *operands,
     )
     return out.reshape(b, h, dh)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # [B, H, dh] one token per sequence
+    k_pages: jax.Array,  # [P, page_size, KH, dh] pooled pages
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
+    pos: jax.Array,  # i32[B] per-row positions (inclusive)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-table-gather decode attention over a page pool.
+
+    The logical cache row ``j`` of sequence ``b`` lives at
+    ``k_pages[block_tables[b, j // ps], j % ps]``. The gather happens in the
+    BlockSpec index map via the prefetched table; page count per request is a
+    compile-time constant (the semi-static ``pages_bucket``).
+    """
+    return _paged_decode_call(
+        q, k_pages, v_pages, block_tables, pos, None,
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+def paged_decode_attention_int8(
+    q: jax.Array,  # [B, H, dh] one token per sequence
+    k_pages: jax.Array,  # int8 [P, page_size, KH, dh] quantised pages
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # f32 [P, page_size] per-token-row scales
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
+    pos: jax.Array,  # i32[B] per-row positions (inclusive)
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Block-table gather + dequant decode attention over int8 pages.
+
+    The quantised twin of ``paged_decode_attention`` (DESIGN.md §12): the
+    scale pages ride the same index-map indirection as the K/V pages, so
+    the gather stays an index-map trick and the kernel body only adds one
+    multiply per load. ``kv_dtype`` is a semi-static dispatch coordinate:
+    this specialisation and the fp32 one are two AOT branch targets.
+    """
+    return _paged_decode_call(
+        q, k_pages, v_pages, block_tables, pos, (k_scale, v_scale),
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+def paged_decode_attention_int8_reference(
+    q: jax.Array,  # [B, H, dh]
+    k_pages: jax.Array,  # int8 [P, page_size, KH, dh]
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # f32 [P, page_size]
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket]
+    pos: jax.Array,  # i32[B]
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Pure-jax oracle for ``paged_decode_attention_int8``: dequantise the
+    pools, then reuse the fp32 oracle."""
+    dk = k_pages.astype(jnp.float32) * k_scale[..., None, None]
+    dv = v_pages.astype(jnp.float32) * v_scale[..., None, None]
+    return paged_decode_attention_reference(
+        q, dk.astype(q.dtype), dv.astype(q.dtype), block_tables, pos,
+        window=window, softcap=softcap,
+    )
 
 
 def paged_decode_attention_reference(

@@ -13,8 +13,8 @@ scratch. Causality is per query row: chunk row i masks logical positions
 Semi-static structure, twice over:
 
 * ``C`` (the chunk bucket, from the log-sized set {8, 16, 32, ...}) is a
-  compile-time constant — one kernel per ``("pf", chunk_bucket)`` dispatch
-  key, never a per-step size branch;
+  compile-time constant — one kernel per ``("pf", ..., chunk_bucket, ...)``
+  dispatch key, never a per-step size branch;
 * the page gather is the same **index-map indirection** as paged decode: the
   prefetched block table drives the BlockSpec, the kernel body never sees a
   page id.
@@ -56,12 +56,21 @@ def _make_prefill_kernel(
     group: int,
     sm_scale: float,
     num_pages_per_req: int,
+    quantised: bool = False,
 ):
+    """One causal-chunk online-softmax body for both page dtypes
+    (DESIGN.md §12). ``quantised`` is a *trace-time* flag: True adds two
+    per-token-row scale operands (gathered through the same block-table
+    index maps) and one in-register dequant multiply after each K/V load —
+    fp32 and int8 stay two separately compiled branch targets, but the
+    masking/softmax body is written exactly once."""
     rows = chunk * group  # q rows per (batch, kv-head) block: [C, G] packed
 
-    def kernel(
-        bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr
-    ):
+    def kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, *rest):
+        if quantised:
+            ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+        else:
+            o_ref, m_scr, l_scr, acc_scr = rest
         b = pl.program_id(0)
         pb = pl.program_id(2)
         start = start_ref[b]
@@ -85,6 +94,9 @@ def _make_prefill_kernel(
             q = q_ref[0, 0].astype(jnp.float32)  # [rows, dh]
             k = k_ref[0, :, 0].astype(jnp.float32)  # [ps, dh]
             v = v_ref[0, :, 0].astype(jnp.float32)
+            if quantised:  # dequant: int8 rows x their per-row scales
+                k = k * ks_ref[0][:, None]
+                v = v * vs_ref[0][:, None]
             s = jax.lax.dot_general(
                 q, k, (((1,), (1,)), ((), ()))
             ) * sm_scale  # [rows, ps]
@@ -118,25 +130,20 @@ def _make_prefill_kernel(
     return kernel
 
 
-def paged_prefill_attention(
-    q: jax.Array,  # [B, C, H, dh] one chunk of C query tokens per sequence
-    k_pages: jax.Array,  # [P, page_size, KH, dh] pooled pages (chunk written)
+def _paged_prefill_call(
+    q: jax.Array,
+    k_pages: jax.Array,
     v_pages: jax.Array,
-    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
-    start: jax.Array,  # i32[B] logical position of each row's first chunk token
+    block_tables: jax.Array,
+    start: jax.Array,
+    scales: tuple[jax.Array, jax.Array] | None,
     *,
-    window: Optional[int] = None,
-    softcap: Optional[float] = None,
-    interpret: bool = False,
+    window: Optional[int],
+    softcap: Optional[float],
+    interpret: bool,
 ) -> jax.Array:
-    """Causal flash over a query chunk, gathered through block tables.
-
-    The chunk's own K/V must already live in the pages (the caller scatters
-    before calling — see ``models.attention.paged_prefill_attention``); row i
-    of the chunk attends to logical positions ``<= start + i``. Chunk length
-    C and table width are compile-time constants (the semi-static chunk and
-    capacity buckets). Returns [B, C, H, dh].
-    """
+    """Shared grid/spec plumbing for the fp32 and int8 public entry points;
+    ``scales`` (k_scale, v_scale) present selects the quantised kernel."""
     b, c, h, dh = q.shape
     _, page_size, kh, _ = k_pages.shape
     assert h % kh == 0
@@ -156,25 +163,33 @@ def paged_prefill_attention(
         group=group,
         sm_scale=sm_scale,
         num_pages_per_req=npages,
+        quantised=scales is not None,
     )
+    # page indirection: every per-page operand's index map chases the
+    # prefetched block table (scale pages included)
+    page_spec = pl.BlockSpec(
+        (1, page_size, 1, dh),
+        lambda b_, h_, pb, bt, start_: (bt[b_, pb], 0, h_, 0),
+    )
+    scale_spec = pl.BlockSpec(
+        (1, page_size), lambda b_, h_, pb, bt, start_: (bt[b_, pb], 0)
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, rows, dh),
+            lambda b_, h_, pb, bt, start_: (b_, h_, 0, 0),
+        ),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if scales is not None:
+        in_specs += [scale_spec, scale_spec]
+        operands += [jnp.asarray(s, jnp.float32) for s in scales]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # (block_tables, start)
         grid=(b, kh, npages),
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, rows, dh),
-                lambda b_, h_, pb, bt, start_: (b_, h_, 0, 0),
-            ),
-            # page indirection: the index map chases the block table
-            pl.BlockSpec(
-                (1, page_size, 1, dh),
-                lambda b_, h_, pb, bt, start_: (bt[b_, pb], 0, h_, 0),
-            ),
-            pl.BlockSpec(
-                (1, page_size, 1, dh),
-                lambda b_, h_, pb, bt, start_: (bt[b_, pb], 0, h_, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, rows, dh), lambda b_, h_, pb, bt, start_: (b_, h_, 0, 0)
         ),
@@ -195,13 +210,36 @@ def paged_prefill_attention(
     )(
         jnp.asarray(block_tables, jnp.int32),
         jnp.asarray(start, jnp.int32),
-        qg,
-        k_pages,
-        v_pages,
+        *operands,
     )
     # [B, KH, C*G, dh] -> [B, C, H, dh]
     out = out.reshape(b, kh, c, group, dh).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, c, h, dh)
+
+
+def paged_prefill_attention(
+    q: jax.Array,  # [B, C, H, dh] one chunk of C query tokens per sequence
+    k_pages: jax.Array,  # [P, page_size, KH, dh] pooled pages (chunk written)
+    v_pages: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
+    start: jax.Array,  # i32[B] logical position of each row's first chunk token
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal flash over a query chunk, gathered through block tables.
+
+    The chunk's own K/V must already live in the pages (the caller scatters
+    before calling — see ``models.attention.paged_prefill_attention``); row i
+    of the chunk attends to logical positions ``<= start + i``. Chunk length
+    C and table width are compile-time constants (the semi-static chunk and
+    capacity buckets). Returns [B, C, H, dh].
+    """
+    return _paged_prefill_call(
+        q, k_pages, v_pages, block_tables, start, None,
+        window=window, softcap=softcap, interpret=interpret,
+    )
 
 
 # Speculative decoding's verify pass is the same computation with C = K+1:
@@ -209,6 +247,57 @@ def paged_prefill_attention(
 # one pass (DESIGN.md §11). Alias it so the lane's kernel dependency is an
 # explicit, importable contract rather than an implementation coincidence.
 paged_verify_attention = paged_prefill_attention
+
+
+# --------------------------------------------------------------- int8 pages
+def paged_prefill_attention_int8(
+    q: jax.Array,  # [B, C, H, dh] one chunk of C query tokens per sequence
+    k_pages: jax.Array,  # int8 [P, page_size, KH, dh] (chunk written)
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # f32 [P, page_size] per-token-row scales
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket] page ids (0 = null page)
+    start: jax.Array,  # i32[B] logical position of the first chunk token
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal chunk flash over quantised pages (DESIGN.md §12): the int8
+    twin of ``paged_prefill_attention``, scale pages gathered through the
+    same block-table index maps. The chunk's quantised K/V (and scales)
+    must already live in the pages — the jax-level caller scatters via
+    ``models.attention.quantise_kv_rows`` before calling."""
+    return _paged_prefill_call(
+        q, k_pages, v_pages, block_tables, start, (k_scale, v_scale),
+        window=window, softcap=softcap, interpret=interpret,
+    )
+
+
+# The verify lane's int8 twin (DESIGN.md §11/§12): same kernel, C = K+1.
+paged_verify_attention_int8 = paged_prefill_attention_int8
+
+
+def paged_prefill_attention_int8_reference(
+    q: jax.Array,  # [B, C, H, dh]
+    k_pages: jax.Array,  # int8 [P, page_size, KH, dh]
+    v_pages: jax.Array,
+    k_scale: jax.Array,  # f32 [P, page_size]
+    v_scale: jax.Array,
+    block_tables: jax.Array,  # i32[B, pages_bucket]
+    start: jax.Array,  # i32[B]
+    *,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Pure-jax oracle for ``paged_prefill_attention_int8``: dequantise the
+    pools, then reuse the fp32 oracle."""
+    dk = k_pages.astype(jnp.float32) * k_scale[..., None, None]
+    dv = v_pages.astype(jnp.float32) * v_scale[..., None, None]
+    return paged_prefill_attention_reference(
+        q, dk.astype(q.dtype), dv.astype(q.dtype), block_tables, start,
+        window=window, softcap=softcap,
+    )
 
 
 def paged_prefill_attention_reference(

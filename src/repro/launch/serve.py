@@ -85,6 +85,7 @@ def _print_report(rep: dict) -> None:
         paged = {
             k: rep[k]
             for k in (
+                "kv_dtype",
                 "pool_pages",
                 "pages_in_use_peak",
                 "peak_concurrent",
@@ -137,6 +138,12 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--draft-layers", type=int, default=1,
                     help="speculative decoding: layer-periods of the target "
                          "retained in the truncated-layer draft view")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8"), default="fp32",
+                    help="paged engine: KV page storage dtype (DESIGN.md "
+                         "§12). int8 pages carry per-page scales and cost "
+                         "~1/4 the bytes; the dtype is a warmed dispatch "
+                         "coordinate, so serving either pool never "
+                         "compiles mid-stream")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -156,6 +163,11 @@ def main(argv: list[str] | None = None) -> dict:
         ap.error(
             "--spec-k requires --engine continuous or paged "
             "(the burst driver has no draft/verify lanes)"
+        )
+    if args.kv_dtype != "fp32" and args.engine != "paged":
+        ap.error(
+            "--kv-dtype requires --engine paged (the dense cache has no "
+            "page pool to quantise)"
         )
 
     cfg = get_config(args.arch)
@@ -177,6 +189,7 @@ def main(argv: list[str] | None = None) -> dict:
         prefill_chunk=args.prefill_chunk,
         spec_k=args.spec_k,
         draft_layers=args.draft_layers,
+        kv_dtype=args.kv_dtype,
     )
 
     def traffic(seed: int):

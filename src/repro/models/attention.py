@@ -325,8 +325,47 @@ def decode_attention(
 
 
 # ------------------------------------------------------------- paged decode
+# int8 KV quantisation range (DESIGN.md §12): symmetric, full int8 span.
+KV_QUANT_MAX = 127.0
+KV_SCALE_EPS = 1e-8  # all-zero rows quantise with a tiny non-zero scale
+
+# One domain for the kv_dtype dispatch coordinate: runtime/kvcache.py (the
+# host-side page accounting, stdlib-only) is canonical; validating against
+# a second copy here would let the two sites drift.
+from repro.runtime.kvcache import KV_DTYPES  # noqa: E402
+
+
+def quantise_kv_rows(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token-row symmetric int8 quantisation (DESIGN.md §12).
+
+    ``x``: ``[..., KH, dh]`` K or V rows in the model dtype. Each *row*
+    (one token's heads×dims) gets its own absmax scale, so a page of
+    ``page_size`` tokens carries ``page_size`` scales — the per-page scale
+    array that rides the pooled cache. Returns ``(q int8[...], scale
+    f32[...])`` with the trailing two axes reduced out of ``scale``.
+
+    One shared implementation for the decode scatter, the chunked-prefill
+    scatter, and the kernels' oracles: the written bits are identical
+    whichever lane wrote them, which is what keeps int8 chunked ingestion
+    bit-for-bit equal to int8 token-by-token decode.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = jnp.maximum(amax / KV_QUANT_MAX, KV_SCALE_EPS)
+    q = jnp.clip(
+        jnp.round(xf / scale[..., None, None]), -KV_QUANT_MAX, KV_QUANT_MAX
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantise_kv_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantise_kv_rows``: ``q [..., KH, dh]`` int8 rows times
+    their per-row scales ``[...]`` -> f32 rows."""
+    return q.astype(jnp.float32) * scale[..., None, None]
+
+
 def init_paged_kv_cache(
-    cfg: ArchConfig, num_pages: int, page_size: int
+    cfg: ArchConfig, num_pages: int, page_size: int, kv_dtype: str = "fp32"
 ) -> dict:
     """Pooled KV pages shared by every request (DESIGN.md §9).
 
@@ -334,9 +373,28 @@ def init_paged_kv_cache(
     page 0 (``kvcache.PagePool(n, ps)`` needs ``n + 1`` here). Unlike the
     dense cache there is no batch axis: concurrency is bounded by pages, not
     by ``B × max_len``.
+
+    ``kv_dtype`` is the page storage dtype — a *dispatch coordinate*
+    (DESIGN.md §12), not a hot-loop branch: ``"fp32"`` stores pages in the
+    model dtype; ``"int8"`` stores int8 pages plus per-page scale arrays
+    (``k_scale``/``v_scale``, f32 ``[P, page_size]`` — one scale per token
+    row) that are scattered on write and gathered on read alongside the
+    pages themselves. The executables specialise on the cache's abstract
+    dtype at trace time.
     """
-    dt = dtype_of(cfg)
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+        )
     shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if kv_dtype == "int8":
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:2], jnp.float32),
+            "v_scale": jnp.zeros(shape[:2], jnp.float32),
+        }
+    dt = dtype_of(cfg)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -366,9 +424,15 @@ def paged_decode_attention(
     whatever garbage the null page holds) are masked exactly like the dense
     per-row path, so paged and dense decode agree bit-for-bit.
 
+    With an int8 cache (DESIGN.md §12) the write quantises each new K/V row
+    (per-row absmax scale, ``quantise_kv_rows``) and scatters row + scale;
+    the read gathers pages *and* scales and dequantises before the shared
+    SDPA tail. The branch is on the cache's abstract dtype — trace-time,
+    one executable per ``kv_dtype`` coordinate, never a hot-loop check.
+
     On TPU the gather+SDPA lowers to ``kernels.paged_decode_attention``
-    (block-table indirection in the index map); this pure-jax path is its
-    oracle and the CPU/dry-run implementation.
+    (or its ``_int8`` variant; block-table indirection in the index map);
+    this pure-jax path is its oracle and the CPU/dry-run implementation.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -382,16 +446,29 @@ def paged_decode_attention(
     page_idx = jnp.clip(pos // ps, 0, pages_bucket - 1)
     wpage = jnp.take_along_axis(bt, page_idx[:, None], axis=1)[:, 0]
     woff = pos % ps
-    ck = cache["k"].at[wpage, woff].set(k[:, 0])
-    cv = cache["v"].at[wpage, woff].set(v[:, 0])
-    # ---- read: gather each request's pages into its logical view
     seq = pages_bucket * ps
-    gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
-    gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
-    return (
-        _decode_sdpa_rows(cfg, p, q, gk, gv, pos, local=local),
-        {"k": ck, "v": cv},
-    )
+    if cache["k"].dtype == jnp.int8:  # trace-time: dtype is a dispatch key
+        qk, ksc = quantise_kv_rows(k[:, 0])
+        qv, vsc = quantise_kv_rows(v[:, 0])
+        ck = cache["k"].at[wpage, woff].set(qk)
+        cv = cache["v"].at[wpage, woff].set(qv)
+        cks = cache["k_scale"].at[wpage, woff].set(ksc)
+        cvs = cache["v_scale"].at[wpage, woff].set(vsc)
+        gk = dequantise_kv_rows(ck[bt], cks[bt]).reshape(
+            b, seq, cfg.num_kv_heads, cfg.head_dim
+        )
+        gv = dequantise_kv_rows(cv[bt], cvs[bt]).reshape(
+            b, seq, cfg.num_kv_heads, cfg.head_dim
+        )
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        ck = cache["k"].at[wpage, woff].set(k[:, 0])
+        cv = cache["v"].at[wpage, woff].set(v[:, 0])
+        # ---- read: gather each request's pages into its logical view
+        gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+        gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+        new_cache = {"k": ck, "v": cv}
+    return _decode_sdpa_rows(cfg, p, q, gk, gv, pos, local=local), new_cache
 
 
 # ----------------------------------------------------------- chunked prefill
@@ -424,8 +501,8 @@ def paged_prefill_attention(
     contributes exactly 0.0 to every softmax sum (DESIGN.md §10).
 
     C (the chunk bucket) is a compile-time constant — the semi-static chunk
-    key ``("pf", chunk_bucket)`` — so chunk-size variation dispatches on the
-    cold path and never branches per step.
+    key ``("pf", slots, chunk_bucket, kv_dtype)`` — so chunk-size variation
+    dispatches on the cold path and never branches per step.
     """
     b, c = x.shape[:2]
     start = jnp.asarray(start, jnp.int32)
@@ -443,15 +520,33 @@ def paged_prefill_attention(
     wpage = jnp.take_along_axis(bt, page_idx, axis=1)  # [B,C]
     wpage = jnp.where(offs[None, :] < length[:, None], wpage, 0)
     woff = positions % ps
-    ck = cache["k"].at[wpage, woff].set(k)
-    cv = cache["v"].at[wpage, woff].set(v)
-    # ---- read: gather pages, mask per query row (causal within the chunk)
     seq = pages_bucket * ps
-    gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
-    gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+    if cache["k"].dtype == jnp.int8:  # trace-time: dtype is a dispatch key
+        # per-row scales, identical math to the decode scatter — int8
+        # chunked ingestion writes the same bits as int8 token-by-token
+        qk, ksc = quantise_kv_rows(k)
+        qv, vsc = quantise_kv_rows(v)
+        ck = cache["k"].at[wpage, woff].set(qk)
+        cv = cache["v"].at[wpage, woff].set(qv)
+        cks = cache["k_scale"].at[wpage, woff].set(ksc)
+        cvs = cache["v_scale"].at[wpage, woff].set(vsc)
+        gk = dequantise_kv_rows(ck[bt], cks[bt]).reshape(
+            b, seq, cfg.num_kv_heads, cfg.head_dim
+        )
+        gv = dequantise_kv_rows(cv[bt], cvs[bt]).reshape(
+            b, seq, cfg.num_kv_heads, cfg.head_dim
+        )
+        new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+    else:
+        ck = cache["k"].at[wpage, woff].set(k)
+        cv = cache["v"].at[wpage, woff].set(v)
+        # ---- read: gather pages, mask per query row (causal in the chunk)
+        gk = ck[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+        gv = cv[bt].reshape(b, seq, cfg.num_kv_heads, cfg.head_dim)
+        new_cache = {"k": ck, "v": cv}
     return (
         _decode_sdpa_rows(cfg, p, q, gk, gv, positions, local=local),
-        {"k": ck, "v": cv},
+        new_cache,
     )
 
 

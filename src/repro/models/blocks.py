@@ -117,16 +117,21 @@ def block_prefill(
 
 
 def block_paged_cache_init(
-    cfg: ArchConfig, slot: int, num_pages: int, page_size: int
+    cfg: ArchConfig,
+    slot: int,
+    num_pages: int,
+    page_size: int,
+    kv_dtype: str = "fp32",
 ) -> dict:
-    """Per-slot paged cache entry (attention mixers only, DESIGN.md §9)."""
+    """Per-slot paged cache entry (attention mixers only, DESIGN.md §9).
+    ``kv_dtype`` selects fp32 or int8+scales page storage (DESIGN.md §12)."""
     mixer = cfg.mixer_at(slot)
     if not mixer.startswith("attn"):
         raise ValueError(
             f"{cfg.name}: slot {slot} mixer {mixer!r} has recurrent state; "
             f"the paged KV path supports attention-only stacks."
         )
-    return attn.init_paged_kv_cache(cfg, num_pages, page_size)
+    return attn.init_paged_kv_cache(cfg, num_pages, page_size, kv_dtype)
 
 
 def block_paged_decode(

@@ -216,19 +216,28 @@ def decode_step(
     return logits, list(new_cache)
 
 
-def init_paged_cache(cfg: ArchConfig, num_pages: int, page_size: int) -> list:
+def init_paged_cache(
+    cfg: ArchConfig, num_pages: int, page_size: int, kv_dtype: str = "fp32"
+) -> list:
     """Pooled paged KV cache, stacked per period slot (DESIGN.md §9).
 
     ``num_pages`` includes the reserved null page 0. No batch axis: the same
     physical pages back every request via block tables, which is what lets
     shared prefixes dedupe and concurrency overcommit the dense ``B×max_len``
     bound. Attention-only stacks (SSM state is per-slot, not pageable).
+
+    ``kv_dtype`` (DESIGN.md §12): ``"fp32"`` model-dtype pages, ``"int8"``
+    quantised pages plus per-page scale leaves (``[m, P, page_size]``) that
+    ride the same pytree — ``copy_cache_pages`` COWs them with the pages
+    automatically because the page axis is shared.
     """
     p = cfg.period
     m = cfg.num_layers // p
     caches = []
     for slot in range(p):
-        one = block_paged_cache_init(cfg, slot, num_pages, page_size)
+        one = block_paged_cache_init(
+            cfg, slot, num_pages, page_size, kv_dtype=kv_dtype
+        )
         caches.append(jax.tree.map(lambda t: jnp.stack([t] * m), one))
     return caches
 
@@ -486,7 +495,9 @@ def copy_cache_pages(cache: list, src: jax.Array, dst: jax.Array) -> list:
     jit once per engine with donation so it is a cheap in-place scatter."""
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
-    # leaves are [m, P, page_size, KH, dh]: page axis is 1
+    # leaves are [m, P, page_size, KH, dh] pages — and, for int8 pools,
+    # [m, P, page_size] per-page scale arrays: page axis is 1 in both, so
+    # one tree map COWs quantised bits and scales together (DESIGN.md §12)
     return jax.tree.map(lambda t: t.at[:, dst].set(t[:, src]), cache)
 
 

@@ -35,6 +35,12 @@ Components:
 Device-side page *contents* are moved by a ``copy_page`` callback supplied by
 the engine (a single jitted gather/scatter, see ``models.copy_cache_pages``)
 so this module stays importable without a device.
+
+Pages may be stored quantised (DESIGN.md §12): ``kv_dtype`` labels the pool
+and ``page_bytes`` prices a page (int8 pages cost ~1/4 of fp32, plus
+per-token-row scale arrays that ride the device cache pytree — the same
+``copy_page`` COWs them with the page bits). Host-side accounting is
+dtype-blind: a page is a page; only its byte cost changes.
 """
 
 from __future__ import annotations
@@ -45,6 +51,35 @@ from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional, Sequence
 
 NULL_PAGE = 0
+
+# Page storage dtypes (DESIGN.md §12). The dtype is a *dispatch coordinate*
+# on the device side (one executable per kv_dtype); on this host side it is
+# pure accounting: how many bytes a page costs, which is what matched-memory
+# pool sizing (benchmarks/quantkv_bench.py) trades against page count.
+KV_DTYPES = ("fp32", "int8")
+_KV_ELEMENT_BYTES = {"fp32": 4, "int8": 1}
+_SCALE_BYTES = 4  # f32 per-token-row scale, int8 pools only
+
+
+def page_bytes(
+    page_size: int, kv_heads: int, head_dim: int, kv_dtype: str = "fp32"
+) -> int:
+    """Device bytes one physical page costs (K + V, plus scales for int8).
+
+    The matched-memory arithmetic of DESIGN.md §12: an int8 page stores the
+    same ``page_size × KH × dh`` K/V elements in a quarter of the bytes,
+    plus one f32 scale per token row per tensor — so a fixed byte budget
+    buys ~4× the pages, which is what lets an int8 pool seat ~2× the
+    concurrent requests under the seating gate.
+    """
+    if kv_dtype not in KV_DTYPES:
+        raise KVCacheError(
+            f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+        )
+    elems = page_size * kv_heads * head_dim
+    body = 2 * elems * _KV_ELEMENT_BYTES[kv_dtype]  # K + V
+    scales = 2 * page_size * _SCALE_BYTES if kv_dtype == "int8" else 0
+    return body + scales
 
 
 class KVCacheError(RuntimeError):
@@ -70,15 +105,25 @@ class PagePool:
     ``num_pages`` counts *allocatable* pages; the device cache holds
     ``num_pages + 1`` physical pages because page 0 is the reserved null page
     (never allocated, target of inactive-slot writes).
+
+    ``kv_dtype`` records the pool's page storage dtype (DESIGN.md §12) —
+    host-side metadata only (the device cache owns the actual arrays): it
+    labels reports and feeds the matched-memory arithmetic via
+    ``page_bytes``.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, kv_dtype: str = "fp32"):
         if num_pages < 1:
             raise KVCacheError(f"num_pages must be >= 1, got {num_pages}")
         if page_size < 1:
             raise KVCacheError(f"page_size must be >= 1, got {page_size}")
+        if kv_dtype not in KV_DTYPES:
+            raise KVCacheError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+            )
         self.num_pages = num_pages
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
         # page ids 1..num_pages are allocatable; 0 is the null page
         self._free: deque[int] = deque(range(1, num_pages + 1))
         self._ref = [0] * (num_pages + 1)

@@ -420,6 +420,14 @@ class BatcherStats:
     accepted_tokens: int = 0
     spec_tokens: int = 0
     k_bucket_crossings: int = 0
+    # Executable calls grouped by *lane spec name* (DESIGN.md §12): the
+    # registry's key namespace ("cb"/"cbp"/"pf"/"pfd"/"dr"/"drp"/"vf"/
+    # "vfd") is also the reporting namespace, so per-lane telemetry and
+    # dispatch keys can never drift apart.
+    lane_calls: dict = field(default_factory=dict)
+
+    def note_lane(self, spec_name: str) -> None:
+        self.lane_calls[spec_name] = self.lane_calls.get(spec_name, 0) + 1
 
     @property
     def occupancy(self) -> float:
@@ -485,7 +493,15 @@ class _MultiLaneMixin:
     accounting, flip-time first-token priming, the draft lane, and the
     accept/rollback arithmetic of the verify lane. The engines differ only
     in storage bookkeeping (dense rows vs pages) and executable signatures.
+
+    The ``_*_lane`` class attributes name each engine's lane *specs* in the
+    ``core.lanes`` registry (DESIGN.md §12) so ``stats.lane_calls`` groups
+    executable calls under the same names the dispatch keys carry.
     """
+
+    _decode_lane = "cb"
+    _prefill_lane = "pfd"
+    _verify_lane = "vfd"
 
     def _init_lanes(
         self,
@@ -637,6 +653,7 @@ class _MultiLaneMixin:
             self._mirror.get("keys", self._keys),
         )
         self.stats.draft_steps += 1
+        self.stats.note_lane("dr")
         return np.asarray(drafts)
 
     @staticmethod
@@ -679,6 +696,7 @@ class _MultiLaneMixin:
         tok = self._pack_verify_tok(drafts, lengths, k)
         rows, nxt0, keys = self._verify_call(k, tok, lengths)
         self.stats.verify_steps += 1
+        self.stats.note_lane(self._verify_lane)
         self._mirror.put("keys", keys)
         self._keys = np.array(keys, np.uint32)
         return self._apply_verify(
@@ -951,6 +969,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         # the device arrays are shared with the draft mirror below
         self.stats.h2d_uploads += 4
         self.stats.prefill_calls += 1
+        self.stats.note_lane(self._prefill_lane)
         tok_dev = jnp.asarray(tok)
         start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
         length_dev = jnp.asarray(length)
@@ -971,6 +990,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         # (the sampled head output and split keys are discarded).
         if self._spec_on and self._draft_prefill_dispatch is not None:
             dstep = self._draft_prefill_dispatch(bucket)
+            self.stats.note_lane("drp")
             _, self._draft_cache, _ = dstep(
                 self._draft_cache,
                 tok_dev,
@@ -1042,6 +1062,7 @@ class ContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("keys", self._keys),
         )
         self.stats.decode_steps += 1
+        self.stats.note_lane(self._decode_lane)
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
         nxt_host = np.asarray(nxt)  # blocks until the device step is done
@@ -1116,7 +1137,8 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     The slot-state machinery mirrors ``ContinuousBatcher``; what changes is
     capacity. Slots no longer own ``[max_len]`` cache rows — each active
     request owns a ``kvcache.BlockTable`` over the shared ``PagePool``, and
-    the hot-loop executable is keyed by ``("cb", slots, pages_bucket)``
+    the hot-loop executable is keyed by ``("cbp", slots, pages_bucket,
+    kv_dtype)``
     where ``pages_bucket`` is the (bucketed) widest block table currently
     active. The bucket moves rarely — once per ``page_size × bucket`` tokens
     — so the capacity check lives entirely on the cold path: ``dispatch_fn``
@@ -1131,6 +1153,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     pages recycle; the request re-queues and restarts) — admission never
     hard-rejects.
     """
+
+    _decode_lane = "cbp"
+    _prefill_lane = "pf"
+    _verify_lane = "vf"
 
     def __init__(
         self,
@@ -1224,6 +1250,13 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     @property
     def pages_bucket(self) -> int:
         return self._pages_bucket
+
+    @property
+    def kv_dtype(self) -> str:
+        """The pool's page storage dtype (DESIGN.md §12) — fixed per
+        batcher; the engine warmed every configured dtype's lanes, so a
+        new batcher on the other dtype rebinds without compiling."""
+        return self.pool.kv_dtype
 
     def live_tables(self):
         return [t for t in self._tables if t is not None]
@@ -1391,105 +1424,135 @@ class PagedContinuousBatcher(_MultiLaneMixin):
 
     # ------------------------------------------------------- prefill lane
     def _prefill_step(self, now: float, budget: int) -> list[Request]:
-        """Ingest the next chunk of one prefilling request (DESIGN.md §10):
-        plan and flip semantics live in ``_MultiLaneMixin``; this body is
-        the paged storage half — the chunk's pages are reserved up front
-        (reclaim -> preempt-self on OOM, exactly like decode growth), it is
-        fed to the ``("pf", chunk_bucket)`` executable with the real length
-        as data (padded columns write only the null page), and the flip
-        publishes the prompt's full pages to the prefix cache. One chunk
-        per step: the B=1 paged prefill executable keys on the chunk bucket
-        alone (the dense engine is the batched one)."""
-        plan = self._plan_chunks(budget, limit=1)
+        """Ingest chunks for prefilling requests, *batched* (DESIGN.md
+        §10/§12): plan and flip semantics live in ``_MultiLaneMixin``; this
+        body is the paged storage half. Every planned chunk's pages are
+        reserved up front (reclaim -> preempt-self on OOM, exactly like
+        decode growth), then every surviving slot rides one
+        ``("pf", slots, chunk_bucket, kv_dtype)`` call — per-row chunk
+        windows through per-row block tables, length 0 = idle row, padded
+        columns writing only the null page. Rows are independent (each
+        writes its own private pages), so the batched call is bitwise-equal
+        to running the chunks one slot at a time; the flip publishes each
+        prompt's full pages to the prefix cache. This closes PR 4's open
+        item: the paged prompt path is no longer B=1 per step."""
+        plan = self._plan_chunks(budget)
         if not plan:
             return []
-        s, cursor, chunk = plan[0]
-        req = self._slots[s]
-        prompt = req.effective_prompt
-        bucket = bucket_pow2(chunk, CHUNK_BUCKET_MIN, self.prefill_chunk)
-        table = self._tables[s]
-        need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
-        if need > 0:
-            self._tables_changed()
-            if not self._reclaim_pages(need, req.priority) or (
-                not table.ensure_capacity(cursor + chunk - 1)
-            ):
-                self._preempt_slot(s)  # can't grow: preempt the requester
-                return []
+        # ---- reserve every planned chunk's pages before the batched call.
+        # _reclaim_pages may preempt *other* slots — including ones planned
+        # earlier in this loop — so re-validate the survivors afterwards.
+        for s, cursor, chunk in plan:
+            req = self._slots[s]
+            if req is None or not self._active[s] or not self._prefilling[s]:
+                continue  # a victim of an earlier reservation's preemption
+            table = self._tables[s]
+            need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
+            if need > 0:
+                self._tables_changed()
+                if not self._reclaim_pages(need, req.priority) or (
+                    not table.ensure_capacity(cursor + chunk - 1)
+                ):
+                    self._preempt_slot(s)  # can't grow: preempt the requester
+        kept = [
+            (s, cursor, chunk)
+            for s, cursor, chunk in plan
+            if self._slots[s] is not None
+            and self._active[s]
+            and self._prefilling[s]
+        ]
+        if not kept:
+            return []
+        bucket = bucket_pow2(
+            max(c for _, _, c in kept), CHUNK_BUCKET_MIN, self.prefill_chunk
+        )
         self._note_chunk_bucket(bucket)
         step = self._prefill_dispatch(bucket)  # cold: slot-hit usually
-        tok = np.zeros((1, bucket), np.int32)
-        tok[0, :chunk] = prompt[cursor : cursor + chunk]
-        bt = np.zeros((1, self.max_pages_per_req), np.int32)
-        bt[0, : table.num_pages] = table.pages
-        # chunk-lane inputs are per-chunk data (tokens, cursor, table row,
-        # length, the slot's sampling params/keys) — uploaded raw, counted
-        self.stats.h2d_uploads += 7
+        tok = np.zeros((self.num_slots, bucket), np.int32)
+        length = np.zeros(self.num_slots, np.int32)
+        bt = np.zeros((self.num_slots, self.max_pages_per_req), np.int32)
+        for s, cursor, chunk in kept:
+            prompt = self._slots[s].effective_prompt
+            tok[s, :chunk] = prompt[cursor : cursor + chunk]
+            length[s] = chunk
+            table = self._tables[s]
+            bt[s, : table.num_pages] = table.pages
+        # chunk-lane inputs are per-chunk data (tokens, cursors, packed
+        # tables, lengths, split keys) — uploaded raw, counted honestly;
+        # idle rows carry length 0 + null tables (writes hit the null page)
+        self.stats.h2d_uploads += 5
         self.stats.prefill_calls += 1
+        self.stats.note_lane(self._prefill_lane)
+        tok_dev = jnp.asarray(tok)
+        start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
+        length_dev = jnp.asarray(length)
+        keys_dev = jnp.asarray(self._keys)
         nxt, self._cache, new_keys = step(
             self._cache,
-            jnp.asarray(tok),
-            jnp.asarray([cursor], jnp.int32),
+            tok_dev,
+            start_dev,
             jnp.asarray(bt),
-            jnp.asarray([chunk], jnp.int32),
-            jnp.asarray(self._temps[s : s + 1]),
-            jnp.asarray(self._greedy[s : s + 1]),
-            jnp.asarray(self._keys[s : s + 1]),
+            length_dev,
+            self._mirror.get("temps", self._temps),
+            self._mirror.get("greedy", self._greedy),
+            keys_dev,
         )
         # draft mirror (DESIGN.md §11): the draft stack ingests the same
-        # chunk window into its dense per-slot cache so its KV tracks the
-        # committed stream before the draft lane runs. Prefix-cache-adopted
-        # prompt pages never pass through here, so the draft's view of a
-        # shared prefix stays cold — acceptance degrades on those requests,
-        # correctness never does (the verify lane guards every token).
+        # chunk windows into its dense per-slot cache so its KV tracks the
+        # committed stream before the draft lane runs; the inputs are the
+        # target call's device arrays (no second upload). Prefix-cache-
+        # adopted prompt pages never pass through here, so the draft's view
+        # of a shared prefix stays cold — acceptance degrades on those
+        # requests, correctness never does (the verify lane guards every
+        # token).
         if self._spec_on and self._draft_prefill_dispatch is not None:
-            dtok = np.zeros((self.num_slots, bucket), np.int32)
-            dtok[s] = tok[0]
-            dlen = np.zeros(self.num_slots, np.int32)
-            dlen[s] = chunk
             dstep = self._draft_prefill_dispatch(bucket)
-            # the [S,...] chunk window is per-chunk data (2 raw uploads);
-            # pos/keys/sampling params ride the mirror
-            self.stats.h2d_uploads += 2
+            self.stats.note_lane("drp")
             _, self._draft_cache, _ = dstep(
                 self._draft_cache,
-                jnp.asarray(dtok),
-                self._mirror.get("pos", self._pos),
-                jnp.asarray(dlen),
+                tok_dev,
+                start_dev,
+                length_dev,
                 self._mirror.get("temps", self._temps),
                 self._mirror.get("greedy", self._greedy),
-                self._mirror.get("keys", self._keys),
+                keys_dev,
             )
-        self._keys[s] = np.asarray(new_keys)[0]
-        self._mirror.touch("keys")
-        self._chunk_slots.add(s)
-        cursor += chunk
-        self._cursor[s] = cursor
-        self._pos[s] = cursor
-        self._mirror.touch("pos")
-        table.num_tokens = cursor
-        self.stats.prompt_tokens += chunk
-        self.stats.prefill_chunks += 1
+        nk = np.asarray(new_keys)
+        nxt_host = np.asarray(nxt)
         finished: list[Request] = []
-        if cursor >= len(prompt):  # flip: prompt ingested, prime generation
-            # the packed decode table zeroed this slot's row while it was
-            # prefilling; it must carry the real pages from the next step on
-            self._tables_changed()
-            # publish the prompt's full pages for sharing at the flip
-            full = len(prompt) // self.pool.page_size
-            if full > 0:
-                self.prefix.insert(prompt, table.pages[:full])
-            self._prompt_cached[s] = True
-            self._prime_first_token(s, req, int(np.asarray(nxt)[0]), now)
-            if req.done:  # new_tokens == 1: the primed token was the last
-                req.t_done = now
-                table.release()
-                self._tables[s] = None
-                self._slots[s] = None
-                self._active[s] = False
+        for s, cursor, chunk in kept:
+            req = self._slots[s]
+            prompt = req.effective_prompt
+            table = self._tables[s]
+            self._keys[s] = nk[s]
+            self._chunk_slots.add(s)
+            cursor += chunk
+            self._cursor[s] = cursor
+            self._pos[s] = cursor
+            table.num_tokens = cursor
+            self.stats.prompt_tokens += chunk
+            self.stats.prefill_chunks += 1
+            if cursor >= len(prompt):  # flip: prompt done, prime generation
+                # the packed decode table zeroed this slot's row while it
+                # was prefilling; it must carry the real pages from the
+                # next step on
                 self._tables_changed()
-                self.stats.finished += 1
-                finished.append(req)
+                # publish the prompt's full pages for sharing at the flip
+                full = len(prompt) // self.pool.page_size
+                if full > 0:
+                    self.prefix.insert(prompt, table.pages[:full])
+                self._prompt_cached[s] = True
+                self._prime_first_token(s, req, int(nxt_host[s]), now)
+                if req.done:  # new_tokens == 1: the primed token was last
+                    req.t_done = now
+                    table.release()
+                    self._tables[s] = None
+                    self._slots[s] = None
+                    self._active[s] = False
+                    self._tables_changed()
+                    self.stats.finished += 1
+                    finished.append(req)
+        self._mirror.touch("pos", "keys")
         return finished
 
     # -------------------------------------------------------------- hot path
@@ -1552,6 +1615,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("keys", self._keys),
         )
         self.stats.decode_steps += 1
+        self.stats.note_lane(self._decode_lane)
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
         nxt_host = np.asarray(nxt)  # blocks until the device step is done
@@ -1683,6 +1747,10 @@ def latency_report(requests: Sequence[Request], batcher=None) -> dict:
     if batcher is not None:
         st = batcher.stats
         lanes["lane_steps"] = st.lane_steps
+        # per-spec-name executable calls (DESIGN.md §12): grouped under the
+        # registry's lane names, so reports and dispatch keys share one
+        # namespace ("cbp" and "cb" are different lanes, and read as such)
+        lanes["lane_calls"] = dict(st.lane_calls)
         if st.target_steps:
             lanes["tokens_per_target_step"] = round(
                 st.tokens / st.target_steps, 3

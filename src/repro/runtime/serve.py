@@ -12,7 +12,7 @@ Two serving modes share one ``core.dispatch.Dispatcher``:
   ``Engine.set_mode(...)`` is ``set_direction`` (with dummy-order warming);
   ``Engine.decode_loop`` is the patched-jmp hot path. The sampling mode is
   baked into the executable, so every mode flip is a dispatch (and a cold
-  compile on first sight of a (bucket, mode) key).
+  compile on first sight of a ``("burst", bucket, mode)`` key).
 * **Continuous batching** (``Engine.continuous()`` →
   ``runtime.scheduler.ContinuousBatcher``): one executable per bucket size,
   sampling params packed per-slot *as data*. Requests join and leave
@@ -20,10 +20,11 @@ Two serving modes share one ``core.dispatch.Dispatcher``:
 
 Plus the paged variant (``Engine.paged_continuous()`` →
 ``PagedContinuousBatcher``, DESIGN.md §9): KV lives in a shared page pool,
-requests map positions through block tables, and the dispatch key grows a
-third coordinate — ``("cb", slots, pages_bucket)`` — the semi-static
-capacity bucket. All buckets are AOT-warmed (log-sized fan-out), so bucket
-crossings rebind but never compile.
+requests map positions through block tables, and the dispatch key grows
+more coordinates — ``("cbp", slots, pages_bucket, kv_dtype)`` — the
+semi-static capacity bucket and page dtype (DESIGN.md §12). All buckets
+are AOT-warmed (log-sized fan-out), so bucket crossings rebind but never
+compile.
 
 Both continuous engines run a **multi-lane step pipeline** (DESIGN.md
 §10/§11): prefill chunks through ``("pf"/"pfd", ..., chunk_bucket)``, and —
@@ -31,10 +32,20 @@ with ``spec_k > 0`` — speculative decoding through the draft/verify lanes:
 ``("dr", slots, k_bucket)`` runs a truncated-layer *view* of the target
 (``models.draft_view``, no extra weights) K steps in one executable, and
 ``("vf"/"vfd", slots, k_bucket)`` scores all K+1 positions in one target
-pass over the chunked scatter path. Every lane/bucket crossing is AOT-warmed
-at ``continuous()``/``paged_continuous()`` time, so the whole fan-out —
-decode × capacity, prefill × chunk, draft/verify × k — compiles exactly once
-per engine and never again.
+pass over the chunked scatter path.
+
+The key space itself is declarative (DESIGN.md §12): every lane is a
+``core.lanes.LaneSpec`` — name, coordinate axes with their bucket ladders,
+builder/warmer hooks — and warmup is one registry iteration: every key in
+every enabled lane's ``fanout`` is AOT-compiled *and* dummy-run, so the
+whole fan-out — decode × capacity, prefill × chunk, draft/verify × k,
+paged lanes × ``kv_dtype`` — compiles exactly once per engine and never
+again. ``kv_dtype ∈ {fp32, int8}`` is the first registry-added coordinate:
+quantised int8 KV pages (per-page scales, ~4× the pages per byte) are just
+another semi-static axis — flipping a pool's dtype is a rebind over warmed
+executables, never a compile and never a per-step branch. Unregistered
+lanes raise ``UnknownLaneError`` at build/warmup time instead of falling
+through silently.
 """
 
 from __future__ import annotations
@@ -50,6 +61,8 @@ import numpy as np
 from repro import models
 from repro.configs import ArchConfig
 from repro.core import DispatchPolicy, Dispatcher, bucket_multiple
+from repro.core import lanes as lanes_mod
+from repro.core.lanes import LANES
 from repro.runtime import steps as steps_mod
 from repro.runtime.scheduler import (
     CHUNK_BUCKET_MIN,
@@ -85,7 +98,7 @@ class EngineConfig:
     # step. 0 disables the chunked lane (prompts teacher-force token by
     # token at decode speed — the baseline). Chunk sizes are drawn from the
     # log-sized bucket set {8, 16, ..., prefill_chunk}, each an AOT-warmed
-    # ("pf", chunk_bucket) dispatch key.
+    # ("pf", slots, chunk_bucket, kv_dtype) dispatch key.
     prefill_chunk: int = 0
     # Per-step token budget split across the lanes by the LanePolicy;
     # 0 = slots + prefill_chunk.
@@ -97,6 +110,31 @@ class EngineConfig:
     # layer-periods (models.draft_view).
     spec_k: int = 0
     draft_layers: int = 1
+    # Quantised KV pages (DESIGN.md §12): the paged pool's storage dtype
+    # ("fp32" or "int8" — int8 pages carry per-page scales and cost ~1/4
+    # the bytes), plus any *extra* dtypes to AOT-warm so a pool flip is a
+    # rebind over warmed executables, never a compile. kv_dtype is a
+    # registry axis on every paged lane key.
+    kv_dtype: str = "fp32"
+    kv_dtypes: tuple = ()
+
+
+@dataclass
+class _WarmCtx:
+    """Mutable state threaded through one registry warmup pass.
+
+    The warm methods dummy-run each executable through the exact runtime
+    path (paper §4.3) and thread the donated caches forward; ``spec`` is
+    the per-batcher speculation opt-in the ``_spec_lanes_enabled`` gate
+    reads. ``paged_caches`` holds one pooled cache per warmed ``kv_dtype``
+    (DESIGN.md §12) — the batcher adopts the active dtype's cache, the
+    rest exist only to warm their lanes' executables.
+    """
+
+    spec: bool = False
+    dense_cache: Any = None
+    paged_caches: dict = None  # kv_dtype -> pooled cache
+    draft_cache: Any = None
 
 
 class Engine:
@@ -154,34 +192,14 @@ class Engine:
     def _build(self, key: tuple) -> Callable:
         """Dispatcher builder: compile the executable for a dispatch key.
 
-        Keys: ``(bucket, mode)`` for per-burst steps (mode baked in),
-        ``("cb", slots)`` / ``("cb", slots, pages_bucket)`` for the
-        continuous-batching decode steps (mode as data), the chunked
-        prefill lane (DESIGN.md §10): ``("pf", chunk_bucket)`` for the paged
-        prompt path, ``("pfd", slots, chunk_bucket)`` for the dense one,
-        and the speculative lanes (DESIGN.md §11): ``("dr", slots, k)`` for
-        the draft scan, ``("vf"/"vfd", slots, k)`` for the paged/dense
-        verify pass, ``("drp", slots, chunk_bucket)`` for the draft's
-        prompt mirror.
+        The key space is the ``core.lanes`` registry (DESIGN.md §12): the
+        key's lane name resolves to its ``LaneSpec``, whose ``builder``
+        hook receives the arity-checked coordinates. An unregistered lane
+        (or a malformed key) raises ``UnknownLaneError`` here — at
+        build/warmup time — instead of falling through a sniffing chain.
         """
-        if key[0] == "cb":
-            if len(key) == 3:  # ("cb", slots, pages_bucket): paged decode
-                return self._build_paged_slot_decode(key[1], key[2])
-            return self._build_slot_decode(key[1])
-        if key[0] == "pf":  # ("pf", chunk_bucket): paged chunked prefill
-            return self._build_paged_prefill(key[1])
-        if key[0] == "pfd":  # ("pfd", slots, chunk_bucket): dense prefill
-            return self._build_slot_prefill(key[1], key[2])
-        if key[0] == "dr":  # ("dr", slots, k): draft lane
-            return self._build_draft(key[1], key[2])
-        if key[0] == "vf":  # ("vf", slots, k): paged verify lane
-            return self._build_paged_verify(key[1], key[2])
-        if key[0] == "vfd":  # ("vfd", slots, k): dense verify lane
-            return self._build_slot_verify(key[1], key[2])
-        if key[0] == "drp":  # ("drp", slots, chunk_bucket): draft prefill
-            return self._build_draft_prefill(key[1], key[2])
-        bucket, mode = key
-        return self._build_burst_decode(bucket, mode)
+        spec = LANES.spec_for(key)
+        return getattr(self, spec.builder)(*spec.coords(key))
 
     def _build_burst_decode(self, batch: int, mode: int) -> Callable:
         cfg, ecfg = self.cfg, self.ecfg
@@ -221,13 +239,19 @@ class Engine:
         )
         return lowered.compile()
 
-    def _build_paged_slot_decode(self, slots: int, pages_bucket: int) -> Callable:
-        """Executable for the ``("cb", slots, pages_bucket)`` dispatch key.
+    def _build_paged_slot_decode(
+        self, slots: int, pages_bucket: int, kv_dtype: str = "fp32"
+    ) -> Callable:
+        """Executable for the ``("cbp", slots, pages_bucket, kv_dtype)``
+        dispatch key.
 
-        Capacity is the semi-static condition here (DESIGN.md §9): the block
+        Capacity is one semi-static condition here (DESIGN.md §9): the block
         table's width is baked into the shapes, so the hot loop never checks
         whether a request fits — outgrowing the bucket re-dispatches on the
-        cold path exactly like a paper branch-direction change.
+        cold path exactly like a paper branch-direction change. The page
+        dtype is another (DESIGN.md §12): the cache's abstract dtype bakes
+        the quant/dequant into the executable, so fp32 and int8 pools are
+        two AOT branch targets, never a per-step check.
         """
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_paged_slot_decode_fn(
@@ -235,7 +259,7 @@ class Engine:
         )
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size
+                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
             )
         )
         lowered = jax.jit(step, donate_argnums=(1,)).lower(
@@ -251,35 +275,41 @@ class Engine:
         )
         return lowered.compile()
 
-    def _build_paged_prefill(self, chunk_bucket: int) -> Callable:
-        """Executable for the ``("pf", chunk_bucket)`` dispatch key.
+    def _build_paged_prefill(
+        self, slots: int, chunk_bucket: int, kv_dtype: str = "fp32"
+    ) -> Callable:
+        """Executable for the ``("pf", slots, chunk_bucket, kv_dtype)``
+        dispatch key: *batched* paged chunked prefill.
 
-        Chunk size is the semi-static condition here (DESIGN.md §10): the
-        chunk width is baked into the shapes, one executable per bucket in
-        the log-sized set, all AOT-warmed — prompt-length variation picks an
-        executable on the cold path and never branches in the hot loop. The
-        block-table width is pinned at the per-request page cap (masked
-        positions contribute exactly nothing), so chunk size is the *only*
-        prefill coordinate.
+        Chunk size is the headline semi-static condition (DESIGN.md §10):
+        the chunk width is baked into the shapes, one executable per bucket
+        in the log-sized set, all AOT-warmed — prompt-length variation
+        picks an executable on the cold path and never branches in the hot
+        loop. Every prefilling slot the budget covers rides the same call
+        (length 0 = idle row), mirroring the dense ``("pfd", ...)`` lane —
+        the old B=1-per-step limitation is gone. The block-table width is
+        pinned at the per-request page cap (masked positions contribute
+        exactly nothing); the page dtype is the registry's ``kv_dtype``
+        axis (DESIGN.md §12).
         """
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_paged_prefill_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size
+                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
             )
         )
         pb = self.max_pages_per_req
         lowered = jax.jit(step, donate_argnums=(1,)).lower(
             self._abstract_params(),
             c_shape,
-            jax.ShapeDtypeStruct((1, chunk_bucket), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.int32),
-            jax.ShapeDtypeStruct((1, pb), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.int32),
-            jax.ShapeDtypeStruct((1,), jnp.float32),
-            jax.ShapeDtypeStruct((1,), jnp.bool_),
-            jax.ShapeDtypeStruct((1, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots, pb), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.int32),
+            jax.ShapeDtypeStruct((slots,), jnp.float32),
+            jax.ShapeDtypeStruct((slots,), jnp.bool_),
+            jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
         return lowered.compile()
 
@@ -336,18 +366,20 @@ class Engine:
         )
         return lowered.compile()
 
-    def _build_paged_verify(self, slots: int, k: int) -> Callable:
-        """Executable for the ``("vf", slots, k)`` dispatch key: the target
-        scores all K+1 window positions in one pass through the paged
-        chunk path (DESIGN.md §11). The window width k+1 is baked into the
-        shapes; the block-table width is pinned at the per-request page cap
-        (masked positions contribute exactly nothing), so k is the *only*
-        verify coordinate."""
+    def _build_paged_verify(
+        self, slots: int, k: int, kv_dtype: str = "fp32"
+    ) -> Callable:
+        """Executable for the ``("vf", slots, k, kv_dtype)`` dispatch key:
+        the target scores all K+1 window positions in one pass through the
+        paged chunk path (DESIGN.md §11). The window width k+1 is baked
+        into the shapes; the block-table width is pinned at the per-request
+        page cap (masked positions contribute exactly nothing); the page
+        dtype rides as the registry's ``kv_dtype`` axis (DESIGN.md §12)."""
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_paged_verify_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size
+                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
             )
         )
         pb = self.max_pages_per_req
@@ -424,6 +456,11 @@ class Engine:
             self.pool_pages, -(-self.ecfg.max_len // self.ecfg.page_size)
         )
 
+    # ----------------------------------------------- registry axis ladders
+    # Each method below is a ``core.lanes.LaneAxis`` bucket ladder: the
+    # registry's ``fanout`` calls it by name to enumerate one coordinate's
+    # warmup values (DESIGN.md §12). Adding a coordinate = one LaneAxis in
+    # the relevant specs + one ladder method here.
     def _chunk_buckets(self) -> list[int]:
         """The log-sized chunk-bucket fan-out {8, 16, ..., prefill_chunk}."""
         if self.ecfg.prefill_chunk <= 0:
@@ -435,14 +472,6 @@ class Engine:
             if b >= self.ecfg.prefill_chunk:
                 return out
             b *= 2
-
-    def _supports_chunked_prefill(self) -> bool:
-        """Chunked prefill is attention-only: SSM slots carry recurrent
-        state and would need a per-chunk scan (ROADMAP open item)."""
-        return self.ecfg.prefill_chunk > 0 and all(
-            self.cfg.mixer_at(slot).startswith("attn")
-            for slot in range(self.cfg.period)
-        )
 
     def _k_buckets(self) -> list[int]:
         """The log-sized k-bucket fan-out {1, 2, 4, ..., spec_k}."""
@@ -456,6 +485,32 @@ class Engine:
                 return out
             b *= 2
 
+    def _pages_buckets(self) -> list[int]:
+        """The log-sized capacity-bucket fan-out {1, 2, ..., page cap}."""
+        out, pb = [], 1
+        while True:
+            out.append(pb)
+            if pb >= self.max_pages_per_req:
+                return out
+            pb = min(pb * 2, self.max_pages_per_req)
+
+    def _warm_kv_dtypes(self) -> tuple[str, ...]:
+        """The kv_dtype axis ladder (DESIGN.md §12): the active pool dtype
+        plus any extra dtypes the config asks to keep warm, deduped — a
+        pool flip across this set is a rebind, never a compile."""
+        return tuple(
+            dict.fromkeys((self.ecfg.kv_dtype,) + tuple(self.ecfg.kv_dtypes))
+        )
+
+    # ------------------------------------------------- lane enable gates
+    def _supports_chunked_prefill(self, ctx: Any = None) -> bool:
+        """Chunked prefill is attention-only: SSM slots carry recurrent
+        state and would need a per-chunk scan (ROADMAP open item)."""
+        return self.ecfg.prefill_chunk > 0 and all(
+            self.cfg.mixer_at(slot).startswith("attn")
+            for slot in range(self.cfg.period)
+        )
+
     def _supports_spec_decode(self) -> bool:
         """The verify lane rides the chunked scatter paths, so speculation
         shares chunked prefill's attention-only constraint."""
@@ -464,51 +519,188 @@ class Engine:
             for slot in range(self.cfg.period)
         )
 
-    def _spec_lanes(
-        self, slots: int, cache_is_paged: bool
-    ) -> tuple[Callable | None, Callable | None, Callable | None, Any]:
-        """Build + AOT-warm the speculative lanes for one batcher
-        (DESIGN.md §11): every ``("dr", slots, k)`` and
-        ``("vf"/"vfd", slots, k)`` bucket plus the ``("drp", slots, cb)``
-        prompt mirror is compiled *and* dummy-run through the exact runtime
-        path, so k-axis crossings rebind without compiling and the first
-        real verify pays no program load. Returns the three dispatch
-        closures and the warmed draft cache."""
-        if not self._supports_spec_decode():
-            return None, None, None, None
-        s, ecfg = slots, self.ecfg
-        vkey = "vf" if cache_is_paged else "vfd"
-        draft_cache = models.init_cache(self.draft_cfg, s, ecfg.max_len)
-        zeros = lambda *shape: jnp.asarray(np.zeros(shape, np.int32))
-        sampling = (
+    def _spec_lanes_enabled(self, ctx: "_WarmCtx") -> bool:
+        """Registry gate for the draft/verify lanes: per-batcher opt-in
+        (``spec_decode=`` override) AND architectural support."""
+        return bool(ctx.spec) and self._supports_spec_decode()
+
+    # ----------------------------------------------------- registry warmup
+    # One warm method per LaneSpec (the spec's ``warmer`` hook): dummy-run
+    # the freshly built executable through the *exact* runtime path (paper
+    # §4.3 — converts, device reshapes, D2H pulls included) so the first
+    # real dispatch pays neither compile nor program load, threading the
+    # donated caches through the ctx. Warm inputs use length 0 / inactive
+    # slots / null tables everywhere: no live cache row is written (paged
+    # garbage lands in the reserved null page).
+    def _warm_zeros(self, *shape: int) -> jax.Array:
+        return jnp.asarray(np.zeros(shape, np.int32))
+
+    def _warm_sampling(self, s: int) -> tuple:
+        return (
             jnp.asarray(np.ones(s, np.float32)),
             jnp.asarray(np.ones(s, bool)),
             jnp.asarray(np.zeros((s, 2), np.uint32)),
         )
-        for k in self._k_buckets():
-            dr = self._decode.build(("dr", s, k))
-            warm = dr(
-                self.draft_params,
-                draft_cache,
-                zeros(s, 1),
-                zeros(s),
-                jnp.asarray(np.zeros(s, bool)),
-                *sampling,
+
+    def _warm_cb(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        s = lanes_mod.CB.coord(key, "slots")
+        warm = exe(
+            self.params,
+            ctx.dense_cache,
+            self._warm_zeros(s, 1),
+            self._warm_zeros(s),
+            jnp.asarray(np.zeros(s, bool)),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        nxt, ctx.dense_cache, pos, keys = warm
+        _ = nxt[:, None]  # the hot loop's device-side tok reshape
+        np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
+
+    def _warm_cbp(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, pb, dt = key
+        warm = exe(
+            self.params,
+            ctx.paged_caches[dt],
+            self._warm_zeros(s, 1),
+            self._warm_zeros(s),
+            self._warm_zeros(s, pb),
+            jnp.asarray(np.zeros(s, bool)),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        nxt, ctx.paged_caches[dt], pos, keys = warm
+        _ = nxt[:, None]  # the hot loop's device-side tok reshape
+        np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
+
+    def _warm_pf(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, cb, dt = key
+        warm = exe(
+            self.params,
+            ctx.paged_caches[dt],
+            self._warm_zeros(s, cb),
+            self._warm_zeros(s),
+            self._warm_zeros(s, self.max_pages_per_req),
+            self._warm_zeros(s),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        np.asarray(warm[0]), np.asarray(warm[2])
+        ctx.paged_caches[dt] = warm[1]
+
+    def _warm_pfd(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, cb = key
+        warm = exe(
+            self.params,
+            ctx.dense_cache,
+            self._warm_zeros(s, cb),
+            self._warm_zeros(s),
+            self._warm_zeros(s),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        np.asarray(warm[0]), np.asarray(warm[2])
+        ctx.dense_cache = warm[1]
+
+    def _warm_vf(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, k, dt = key
+        warm = exe(
+            self.params,
+            ctx.paged_caches[dt],
+            self._warm_zeros(s, k + 1),
+            self._warm_zeros(s),
+            self._warm_zeros(s, self.max_pages_per_req),
+            self._warm_zeros(s),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        np.asarray(warm[0]), np.asarray(warm[1])
+        ctx.paged_caches[dt] = warm[2]
+
+    def _warm_vfd(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, k = key
+        warm = exe(
+            self.params,
+            ctx.dense_cache,
+            self._warm_zeros(s, k + 1),
+            self._warm_zeros(s),
+            self._warm_zeros(s),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        np.asarray(warm[0]), np.asarray(warm[1])
+        ctx.dense_cache = warm[2]
+
+    def _warm_dr(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, k = key
+        if ctx.draft_cache is None:
+            ctx.draft_cache = models.init_cache(
+                self.draft_cfg, s, self.ecfg.max_len
             )
-            jax.block_until_ready(warm)
-            np.asarray(warm[0])
-            draft_cache = warm[1]
-        for cb in self._chunk_buckets():
-            drp = self._decode.build(("drp", s, cb))
-            warm = drp(
-                self.draft_params, draft_cache, zeros(s, cb), zeros(s),
-                zeros(s), *sampling,
-            )
-            jax.block_until_ready(warm)
-            draft_cache = warm[1]
+        warm = exe(
+            self.draft_params,
+            ctx.draft_cache,
+            self._warm_zeros(s, 1),
+            self._warm_zeros(s),
+            jnp.asarray(np.zeros(s, bool)),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        np.asarray(warm[0])
+        ctx.draft_cache = warm[1]
+
+    def _warm_drp(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        _, s, cb = key
+        warm = exe(
+            self.draft_params,
+            ctx.draft_cache,
+            self._warm_zeros(s, cb),
+            self._warm_zeros(s),
+            self._warm_zeros(s),
+            *self._warm_sampling(s),
+        )
+        jax.block_until_ready(warm)
+        ctx.draft_cache = warm[1]
+
+    def _warm_lanes(
+        self,
+        kind: str,
+        slots: int,
+        ctx: _WarmCtx,
+        pins: dict | None = None,
+    ) -> None:
+        """Registry-driven warmup (DESIGN.md §12): iterate every LaneSpec
+        the ``kind`` engine warms, skip gated-off lanes, and for each key
+        in the spec's ``fanout`` compile *and* dummy-run the executable.
+        This single loop replaces the seven hand-edited per-lane warm
+        blocks; adding a coordinate never touches it. ``pins`` holds axes
+        down to one value (``warm_all_buckets=False``, active-dtype-only
+        warms)."""
+        pins = dict(pins or {})
+        pins["slots"] = slots
+        for spec in LANES.for_engine(kind):
+            if spec.enabled is not None and not getattr(self, spec.enabled)(
+                ctx
+            ):
+                continue
+            lane_pins = {
+                name: v for name, v in pins.items() if name in spec.axis_names
+            }
+            for key in spec.fanout(self, **lane_pins):
+                exe = self._decode.build(key)
+                if spec.warmer is not None:
+                    getattr(self, spec.warmer)(key, exe, ctx)
+
+    def _spec_dispatchers(
+        self, slots: int, cache_is_paged: bool, kv_dtype: str = "fp32"
+    ) -> tuple[Callable, Callable, Callable]:
+        """The speculative lanes' dispatch closures (DESIGN.md §11); the
+        executables themselves were AOT-warmed by ``_warm_lanes``. The
+        paged verify closure pins the batcher's ``kv_dtype`` coordinate."""
+        s = slots
 
         def draft_dispatch(k: int) -> Callable:
-            exe = self._decode.dispatch(("dr", s, k))
+            exe = self._decode.dispatch(lanes_mod.DR.key(s, k))
 
             def bound_draft(dcache, tok, pos, active, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
@@ -520,7 +712,7 @@ class Engine:
             return bound_draft
 
         def draft_prefill_dispatch(chunk_bucket: int) -> Callable:
-            exe = self._decode.dispatch(("drp", s, chunk_bucket))
+            exe = self._decode.dispatch(lanes_mod.DRP.key(s, chunk_bucket))
 
             def bound_drp(dcache, tok, start, length, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
@@ -534,7 +726,9 @@ class Engine:
         if cache_is_paged:
 
             def verify_dispatch(k: int) -> Callable:
-                exe = self._decode.dispatch((vkey, s, k))
+                exe = self._decode.dispatch(
+                    lanes_mod.VF.key(s, k, kv_dtype)
+                )
 
                 def bound_verify(
                     cache, tok, start, bt, length, temps, greedy, keys
@@ -550,7 +744,7 @@ class Engine:
         else:
 
             def verify_dispatch(k: int) -> Callable:
-                exe = self._decode.dispatch((vkey, s, k))
+                exe = self._decode.dispatch(lanes_mod.VFD.key(s, k))
 
                 def bound_verify(
                     cache, tok, start, length, temps, greedy, keys
@@ -563,10 +757,7 @@ class Engine:
 
                 return bound_verify
 
-        return (
-            draft_dispatch, verify_dispatch, draft_prefill_dispatch,
-            draft_cache,
-        )
+        return draft_dispatch, verify_dispatch, draft_prefill_dispatch
 
     def set_mode(
         self, *, batch: int, sampling: int = GREEDY, warm: bool = True
@@ -576,7 +767,7 @@ class Engine:
         bucket = bucket_multiple(
             batch, self.ecfg.batch_quantum, self.ecfg.max_batch
         )
-        key = (bucket, sampling)
+        key = lanes_mod.BURST.key(bucket, sampling)
         exe = self._decode.dispatch(key)
         self._current = exe  # <- the jmp patch (engine-side mirror)
         self._current_key = key
@@ -666,57 +857,29 @@ class Engine:
                 f"back as inputs and needs a token-input arch."
             )
         s = slots or self.ecfg.max_batch
-        exe = self._decode.dispatch(("cb", s))
-        cache = models.init_cache(self.cfg, s, self.ecfg.max_len)
-        # Dummy-order warming (paper §4.3): pay device program load now —
-        # through the exact runtime path (upload converts, device reshape,
-        # D2H pulls), so the first real step op-compiles nothing. All slots
-        # are inactive, so positions stay 0 and the garbage K/V the warm
-        # call writes is masked out for any future occupant.
-        warm_out = exe(
-            self.params,
-            cache,
-            jnp.asarray(np.zeros((s, 1), np.int32)),
-            jnp.asarray(np.zeros(s, np.int32)),
-            jnp.asarray(np.zeros(s, bool)),
-            jnp.asarray(np.ones(s, np.float32)),
-            jnp.asarray(np.ones(s, bool)),
-            jnp.asarray(np.zeros((s, 2), np.uint32)),
+        use_spec = (
+            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
-        jax.block_until_ready(warm_out)
-        nxt, cache, pos, keys = warm_out
-        _ = nxt[:, None]  # the hot loop's device-side tok reshape
-        np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
+        # Registry-driven warmup (DESIGN.md §12): every enabled dense lane
+        # (cb, pfd, vfd, dr, drp), every bucket in its fan-out, compiled
+        # *and* dummy-run — one loop instead of per-lane warm blocks.
+        ctx = _WarmCtx(
+            spec=use_spec,
+            dense_cache=models.init_cache(self.cfg, s, self.ecfg.max_len),
+        )
+        self._warm_lanes("dense", s, ctx)
+        cache = ctx.dense_cache
+        exe = self._decode.dispatch(lanes_mod.CB.key(s))
 
         def bound_step(cache, tok, pos, active, temps, greedy, keys):
             self.stats["hot_calls"] += 1
             return exe(self.params, cache, tok, pos, active, temps, greedy, keys)
 
-        # Chunked-prefill lane (DESIGN.md §10): AOT-compile *and* dummy-run
-        # every chunk bucket (paper §4.3) so prompt-length variation never
-        # compiles or pays first-run program load post-warmup. Warm inputs
-        # use length 0 everywhere: no cache row is written.
         prefill_dispatch = None
         if self._supports_chunked_prefill():
-            for cb in self._chunk_buckets():
-                pf_exe = self._decode.build(("pfd", s, cb))
-                # warm the exact runtime path (converts included)
-                warm = pf_exe(
-                    self.params,
-                    cache,
-                    jnp.asarray(np.zeros((s, cb), np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.ones(s, np.float32)),
-                    jnp.asarray(np.ones(s, bool)),
-                    jnp.asarray(np.zeros((s, 2), np.uint32)),
-                )
-                jax.block_until_ready(warm)
-                np.asarray(warm[0]), np.asarray(warm[2])
-                cache = warm[1]
 
             def prefill_dispatch(chunk_bucket: int) -> Callable:
-                pf = self._decode.dispatch(("pfd", s, chunk_bucket))
+                pf = self._decode.dispatch(lanes_mod.PFD.key(s, chunk_bucket))
 
                 def bound_prefill(cache, tok, start, length, temps, greedy, keys):
                     self.stats["hot_calls"] += 1
@@ -727,35 +890,11 @@ class Engine:
 
                 return bound_prefill
 
-        # Speculative lanes (DESIGN.md §11): AOT-compile *and* dummy-run
-        # every ("vfd", slots, k) verify bucket against the real cache
-        # (length 0 everywhere: no cache row is written), then the draft
-        # side via _spec_lanes.
         draft_dispatch = verify_dispatch = draft_prefill_dispatch = None
-        draft_cache = None
-        use_spec = (
-            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
-        )
         if use_spec and self._supports_spec_decode():
-            for k in self._k_buckets():
-                vf_exe = self._decode.build(("vfd", s, k))
-                warm = vf_exe(
-                    self.params,
-                    cache,
-                    jnp.asarray(np.zeros((s, k + 1), np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.ones(s, np.float32)),
-                    jnp.asarray(np.ones(s, bool)),
-                    jnp.asarray(np.zeros((s, 2), np.uint32)),
-                )
-                jax.block_until_ready(warm)
-                np.asarray(warm[0]), np.asarray(warm[1])
-                cache = warm[2]
             (
                 draft_dispatch, verify_dispatch, draft_prefill_dispatch,
-                draft_cache,
-            ) = self._spec_lanes(s, cache_is_paged=False)
+            ) = self._spec_dispatchers(s, cache_is_paged=False)
 
         return ContinuousBatcher(
             step=bound_step,
@@ -769,7 +908,7 @@ class Engine:
             draft_dispatch=draft_dispatch,
             verify_dispatch=verify_dispatch,
             draft_prefill_dispatch=draft_prefill_dispatch,
-            draft_cache=draft_cache,
+            draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
         )
 
@@ -782,20 +921,25 @@ class Engine:
         seed: int = 0,
         warm_all_buckets: bool = True,
         spec_decode: bool | None = None,
+        kv_dtype: str | None = None,
     ) -> PagedContinuousBatcher:
-        """Cold path: build the page pool + prefix cache and warm the
-        capacity buckets; returns a paged batcher (DESIGN.md §9).
+        """Cold path: build the page pool + prefix cache and warm every
+        paged lane through the registry; returns a paged batcher
+        (DESIGN.md §9/§12).
 
-        The dispatcher key is ``("cb", slots, pages_bucket)``: one executable
-        per capacity bucket, found/rebound by the hysteresis policy as
-        requests grow. The pooled page cache itself is bucket-independent —
-        a rebind swaps the executable, never the cache.
+        The decode key is ``("cbp", slots, pages_bucket, kv_dtype)``: one
+        executable per capacity bucket *per page dtype*, found/rebound by
+        the hysteresis policy as requests grow. The pooled page cache
+        itself is bucket-independent — a rebind swaps the executable,
+        never the cache.
 
-        ``warm_all_buckets`` precompiles every power-of-two bucket up to the
-        per-request page cap (the paper's AOT warm-everything pattern): the
-        bucket fan-out is log-sized, so a handful of cold compiles at warmup
-        buys a stream with *zero* compiles — every bucket crossing is then a
-        pure slot rebind.
+        ``warm_all_buckets`` precompiles every bucket in every enabled
+        lane's registry fan-out — including the full ``kv_dtype`` axis
+        (``EngineConfig.kv_dtype`` + ``kv_dtypes``) — so bucket crossings
+        *and* pool-dtype flips are pure rebinds with zero compiles; the
+        opt-out pins the fan-out to the smallest capacity bucket and the
+        active dtype. ``kv_dtype`` overrides the config's active pool
+        dtype for this batcher; it must be inside the warmed set.
         """
         from repro.runtime.kvcache import PagePool, PrefixCache
 
@@ -806,15 +950,43 @@ class Engine:
             )
         s = slots or self.ecfg.max_batch
         ecfg = self.ecfg
-        pool = PagePool(self.pool_pages, ecfg.page_size)
-        prefix = PrefixCache(pool)
-        cache = models.init_paged_cache(
-            self.cfg, self.pool_pages + 1, ecfg.page_size
+        dt = kv_dtype or ecfg.kv_dtype
+        warm_dtypes = self._warm_kv_dtypes()
+        if dt not in warm_dtypes:
+            raise ValueError(
+                f"kv_dtype={dt!r} is not in the warmed set {warm_dtypes}; "
+                f"add it to EngineConfig.kv_dtype/kv_dtypes so its lanes "
+                f"are AOT-warmed (a cold pool dtype would compile mid-"
+                f"stream)."
+            )
+        use_spec = (
+            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
+        pool = PagePool(self.pool_pages, ecfg.page_size, kv_dtype=dt)
+        prefix = PrefixCache(pool)
         max_pages_per_req = self.max_pages_per_req
+        # Registry-driven warmup (DESIGN.md §12): every enabled paged lane
+        # (cbp, pf, vf, dr, drp), every bucket in its fan-out, every warmed
+        # page dtype — compiled *and* dummy-run against a pooled cache of
+        # the matching dtype. The batcher adopts the active dtype's cache;
+        # the other dtypes' caches existed only to warm their executables.
+        ctx = _WarmCtx(
+            spec=use_spec,
+            paged_caches={
+                d: models.init_paged_cache(
+                    self.cfg, self.pool_pages + 1, ecfg.page_size, d
+                )
+                for d in warm_dtypes
+            },
+        )
+        pins = {} if warm_all_buckets else {"pages_bucket": 1, "kv_dtype": dt}
+        self._warm_lanes("paged", s, ctx, pins=pins)
+        cache = ctx.paged_caches[dt]
 
         def dispatch(pages_bucket: int) -> Callable:
-            exe = self._decode.dispatch(("cb", s, pages_bucket))
+            exe = self._decode.dispatch(
+                lanes_mod.CBP.key(s, pages_bucket, dt)
+            )
 
             def bound_step(cache, tok, pos, bt, active, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
@@ -825,66 +997,13 @@ class Engine:
 
             return bound_step
 
-        if warm_all_buckets:  # AOT warm-everything: log-sized bucket fan-out
-            pb = 1
-            while True:
-                cb_exe = self._decode.build(("cb", s, pb))
-                # dummy-run too (paper §4.3): a built-but-never-run
-                # executable still pays program load at its first crossing,
-                # and the hot loop's host<->device glue (upload converts,
-                # the [:,None] reshape, D2H pulls) op-compiles per shape on
-                # first sight — warm the *exact* runtime path, so the first
-                # real request pays none of it. All slots inactive + null
-                # tables: writes hit the null page.
-                warm = cb_exe(
-                    self.params,
-                    cache,
-                    jnp.asarray(np.zeros((s, 1), np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.zeros((s, pb), np.int32)),
-                    jnp.asarray(np.zeros(s, bool)),
-                    jnp.asarray(np.ones(s, np.float32)),
-                    jnp.asarray(np.ones(s, bool)),
-                    jnp.asarray(np.zeros((s, 2), np.uint32)),
-                )
-                jax.block_until_ready(warm)
-                nxt, cache, pos, keys = warm
-                _ = nxt[:, None]  # the hot loop's device-side tok reshape
-                np.asarray(nxt), np.array(pos, np.int32)
-                np.array(keys, np.uint32)
-                if pb >= max_pages_per_req:
-                    break
-                pb = min(pb * 2, max_pages_per_req)
-
-        # Chunked-prefill lane (DESIGN.md §10): one ("pf", chunk_bucket)
-        # executable per log-sized bucket, all AOT-compiled *and* dummy-run
-        # (paper §4.3: a built-but-never-run executable still pays program
-        # load on first sight) — no chunk-bucket crossing ever compiles or
-        # stalls post-warmup. Warm inputs use length 0 and null tables, so
-        # the garbage K/V lands in the reserved null page.
         prefill_dispatch = None
         if self._supports_chunked_prefill():
-            for cb in self._chunk_buckets():
-                pf_exe = self._decode.build(("pf", cb))
-                # warm the exact runtime path (converts included), not just
-                # the executable — see the decode-bucket warm loop above
-                warm = pf_exe(
-                    self.params,
-                    cache,
-                    jnp.asarray(np.zeros((1, cb), np.int32)),
-                    jnp.asarray(np.zeros(1, np.int32)),
-                    jnp.asarray(np.zeros((1, max_pages_per_req), np.int32)),
-                    jnp.asarray(np.zeros(1, np.int32)),
-                    jnp.asarray(np.ones(1, np.float32)),
-                    jnp.asarray(np.ones(1, bool)),
-                    jnp.asarray(np.zeros((1, 2), np.uint32)),
-                )
-                jax.block_until_ready(warm)
-                np.asarray(warm[0]), np.asarray(warm[2])
-                cache = warm[1]
 
             def prefill_dispatch(chunk_bucket: int) -> Callable:
-                pf = self._decode.dispatch(("pf", chunk_bucket))
+                pf = self._decode.dispatch(
+                    lanes_mod.PF.key(s, chunk_bucket, dt)
+                )
 
                 def bound_prefill(
                     cache, tok, start, bt, length, temps, greedy, keys
@@ -897,57 +1016,15 @@ class Engine:
 
                 return bound_prefill
 
-        # Speculative lanes (DESIGN.md §11): AOT-compile *and* dummy-run
-        # every ("vf", slots, k) verify bucket against the real pooled
-        # cache (length 0 + null tables: writes land in the null page),
-        # then the draft side via _spec_lanes.
         draft_dispatch = verify_dispatch = draft_prefill_dispatch = None
-        draft_cache = None
-        use_spec = (
-            self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
-        )
         if use_spec and self._supports_spec_decode():
-            for k in self._k_buckets():
-                vf_exe = self._decode.build(("vf", s, k))
-                warm = vf_exe(
-                    self.params,
-                    cache,
-                    jnp.asarray(np.zeros((s, k + 1), np.int32)),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(
-                        np.zeros((s, max_pages_per_req), np.int32)
-                    ),
-                    jnp.asarray(np.zeros(s, np.int32)),
-                    jnp.asarray(np.ones(s, np.float32)),
-                    jnp.asarray(np.ones(s, bool)),
-                    jnp.asarray(np.zeros((s, 2), np.uint32)),
-                )
-                jax.block_until_ready(warm)
-                np.asarray(warm[0]), np.asarray(warm[1])
-                cache = warm[2]
             (
                 draft_dispatch, verify_dispatch, draft_prefill_dispatch,
-                draft_cache,
-            ) = self._spec_lanes(s, cache_is_paged=True)
+            ) = self._spec_dispatchers(s, cache_is_paged=True, kv_dtype=dt)
 
-        # Pre-bind the hot slot to the smallest bucket (cheap dispatch); the
-        # warm-all loop above already dummy-ran every bucket, so only the
-        # opt-out path still needs its own warm call (paper §4.3).
-        exe = self._decode.dispatch(("cb", s, 1))
-        if not warm_all_buckets:
-            warm_out = exe(
-                self.params,
-                cache,
-                jnp.zeros((s, 1), jnp.int32),
-                jnp.zeros((s,), jnp.int32),
-                jnp.zeros((s, 1), jnp.int32),
-                jnp.zeros((s,), jnp.bool_),
-                jnp.ones((s,), jnp.float32),
-                jnp.ones((s,), jnp.bool_),
-                jnp.zeros((s, 2), jnp.uint32),
-            )
-            jax.block_until_ready(warm_out)
-            cache = warm_out[1]
+        # Pre-bind the hot slot to the smallest bucket (cheap dispatch);
+        # the registry warm already dummy-ran it.
+        self._decode.dispatch(lanes_mod.CBP.key(s, 1, dt))
 
         # COW device half (cold path): one jitted in-place page copy; the
         # batcher threads it through the same cache its steps donate.
@@ -970,7 +1047,7 @@ class Engine:
             draft_dispatch=draft_dispatch,
             verify_dispatch=verify_dispatch,
             draft_prefill_dispatch=draft_prefill_dispatch,
-            draft_cache=draft_cache,
+            draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
         )
 
@@ -1100,17 +1177,23 @@ def run_paged_stream(
     slots: int | None = None,
     seed: int = 0,
     clock: Clock | None = None,
+    kv_dtype: str | None = None,
 ) -> dict:
     """Drive a request stream through the paged KV engine; return a report.
 
     The acceptance contract (ISSUE 2): the only post-warmup compiles are
     first sightings of a new ``pages_bucket`` — between bucket crossings the
     hot loop never recompiles, and sharing lets peak *logical* tokens exceed
-    the pool's physical token capacity.
+    the pool's physical token capacity. ``kv_dtype`` overrides the engine
+    config's active pool dtype (DESIGN.md §12) — it must be in the warmed
+    set, and flipping it across streams on one engine is the dtype crossing
+    ``benchmarks/quantkv_bench.py`` gates at zero compiles.
     """
     from repro.runtime.kvcache import sharing_report
 
-    cb = eng.paged_continuous(slots=slots, seed=seed)  # warmup compile first
+    cb = eng.paged_continuous(  # warmup compile first
+        slots=slots, seed=seed, kv_dtype=kv_dtype
+    )
     clock = clock or Clock()  # ...so served latencies exclude it
     warm_compiles = eng._decode.stats.misses
     warm_rebinds = eng._decode.stats.rebinds
@@ -1158,6 +1241,7 @@ def run_paged_stream(
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),
         page_size=cb.pool.page_size,
+        kv_dtype=cb.pool.kv_dtype,
         pool_pages=cb.pool.num_pages,
         pool_tokens=cb.pool.total_tokens,
         pages_in_use_peak=cb.pool.stats.peak_in_use,

@@ -193,7 +193,7 @@ def make_paged_slot_decode_fn(
     ``cache`` is the pooled page cache (``models.init_paged_cache``), shared
     by every slot. ``PB`` (``pages_bucket``) is baked into the executable's
     shapes: it is the semi-static capacity key — one executable per
-    ``("cb", slots, pages_bucket)``, and a request growing past the bucket
+    ``("cbp", slots, pages_bucket, kv_dtype)``, and a request growing past the bucket
     is a cold-path rebind, never a hot-loop capacity check. Inactive slots
     carry all-null block tables, so their (structurally unavoidable) writes
     land in the reserved null page.
@@ -344,8 +344,9 @@ def make_paged_prefill_fn(
 
     ``CB`` (the chunk bucket, from the log-sized set {8, 16, 32, ...}) is
     baked into the executable's shapes — the semi-static chunk key
-    ``("pf", chunk_bucket)``. Ingesting a prompt is then a handful of direct
-    executable calls instead of one decode step per token; the returned
+    ``("pf", slots, chunk_bucket, kv_dtype)``. Ingesting prompts is then a
+    handful of direct executable calls instead of one decode step per
+    token; the returned
     ``next_tok`` (sampled from the last real chunk row) primes generation
     when the chunk reaches the prompt end. Cache contents and priming
     *logits* are bit-for-bit what token-by-token forcing through

@@ -243,16 +243,16 @@ def test_engine_hysteresis_under_mode_oscillation():
         EngineConfig(max_len=16, batch_quantum=4, max_batch=4, hysteresis=2),
     )
     eng.set_mode(batch=4, sampling=GREEDY, warm=False)
-    eng.set_mode(batch=4, sampling=GREEDY, warm=False)  # slot: (4, GREEDY)
-    assert eng._decode.current_key == (4, GREEDY)
+    eng.set_mode(batch=4, sampling=GREEDY, warm=False)  # slot captured
+    assert eng._decode.current_key == ("burst", 4, GREEDY)
     rebinds = eng._decode.stats.rebinds
     for _ in range(4):
         eng.set_mode(batch=4, sampling=SAMPLE, warm=False)
         eng.set_mode(batch=4, sampling=GREEDY, warm=False)
     assert eng._decode.stats.rebinds == rebinds  # slot never moved
-    assert eng._decode.current_key == (4, GREEDY)
+    assert eng._decode.current_key == ("burst", 4, GREEDY)
     # both modes still served correct executables (from the table)
-    assert eng._current_key == (4, GREEDY)
+    assert eng._current_key == ("burst", 4, GREEDY)
     eng.set_mode(batch=4, sampling=SAMPLE, warm=False)
-    assert eng._current_key == (4, SAMPLE)
+    assert eng._current_key == ("burst", 4, SAMPLE)
     eng.close()

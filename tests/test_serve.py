@@ -25,7 +25,7 @@ def test_set_mode_buckets_and_compiles(engine):
     cfg, eng = engine
     info = eng.set_mode(batch=3, sampling=GREEDY)
     assert info["bucket"] == 4
-    assert (4, GREEDY) in eng._decode
+    assert ("burst", 4, GREEDY) in eng._decode
     # same bucket: cache hit, no new compile
     before = eng._decode.stats.misses
     eng.set_mode(batch=4, sampling=GREEDY)
@@ -67,6 +67,6 @@ def test_greedy_matches_direct_decode(engine):
 def test_mode_switch_changes_sampling(engine):
     cfg, eng = engine
     eng.set_mode(batch=2, sampling=SAMPLE)
-    assert eng._current_key[1] == SAMPLE
+    assert eng._current_key[2] == SAMPLE
     eng.set_mode(batch=2, sampling=GREEDY)
-    assert eng._current_key[1] == GREEDY
+    assert eng._current_key[2] == GREEDY

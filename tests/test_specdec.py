@@ -272,24 +272,20 @@ def test_warmup_completeness_all_lanes(smoke_setup, engine_kind):
     s = 4
     if engine_kind == "paged":
         cb = eng.paged_continuous(slots=s)
-        decode_keys = []
-        pb = 1
-        while True:
-            decode_keys.append(("cb", s, pb))
-            if pb >= eng.max_pages_per_req:
-                break
-            pb = min(pb * 2, eng.max_pages_per_req)
+        decode_keys = [
+            ("cbp", s, pb, "fp32") for pb in eng._pages_buckets()
+        ]
         lane_dispatches = [
             lambda b=b: cb._prefill_dispatch(b) for b in eng._chunk_buckets()
         ]
-        vkey = "vf"
+        vkey = lambda k: ("vf", s, k, "fp32")
     else:
         cb = eng.continuous(slots=s)
         decode_keys = [("cb", s)]
         lane_dispatches = [
             lambda b=b: cb._prefill_dispatch(b) for b in eng._chunk_buckets()
         ]
-        vkey = "vfd"
+        vkey = lambda k: ("vfd", s, k)
     misses = eng._decode.stats.misses
     # every decode bucket, chunk bucket, and k bucket must already exist
     for key in decode_keys:
@@ -300,7 +296,7 @@ def test_warmup_completeness_all_lanes(smoke_setup, engine_kind):
         cb._draft_dispatch(k)
         cb._verify_dispatch(k)
         cb._draft_prefill_dispatch(CHUNK_BUCKET := 8)
-        assert (vkey, s, k) in eng._decode
+        assert vkey(k) in eng._decode
         assert ("dr", s, k) in eng._decode
     assert eng._decode.stats.misses == misses, (
         f"{engine_kind}: lane/bucket dispatch compiled after warmup "
