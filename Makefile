@@ -2,12 +2,12 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv bench-serving bench-kvcache bench-prefill bench-specdec \
-	bench-quantkv bench-check bench examples
+	smoke-quantkv smoke-async bench-serving bench-kvcache bench-prefill \
+	bench-specdec bench-quantkv bench-check bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
 verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv
+	smoke-quantkv smoke-async
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -53,8 +53,18 @@ smoke-quantkv:
 		--page-size 8 --num-pages 28 --prompt-len 16 --prefill-chunk 16 \
 		--kv-dtype int8 --sample-frac 0
 
+# CPU smoke: the async step pipeline (DESIGN.md §13) on both continuous
+# engines — greedy streams bitwise identical to the synchronous loop.
+smoke-async:
+	$(PY) -m repro.launch.serve --smoke --requests 12 --rate 200 \
+		--tokens-mean 5 --max-len 32 --engine continuous --async-steps
+	$(PY) -m repro.launch.serve --smoke --requests 12 --rate 200 \
+		--tokens-mean 5 --max-len 32 --engine paged \
+		--page-size 8 --num-pages 20 --prefix-len 8 --async-steps
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
-# continuous-batching throughput/latency/cold-path counters).
+# continuous-batching throughput/latency/cold-path counters, plus the
+# sync-vs-async step-pipeline pair on the saturated stream).
 bench-serving:
 	$(PY) -m benchmarks.run --only serving --fast
 

@@ -103,6 +103,13 @@ def serving_comparison(
     The acceptance contract (ISSUE 1): the continuous report must show
     ``compiles_after_warmup == 0`` while the burst report shows compiles and
     rebinds tracking the mode flips.
+
+    The async step pipeline (ISSUE 6, DESIGN.md §13) is measured sync vs
+    async on a *saturated* copy of the stream: at sub-saturation rates the
+    report's span is arrival-bound (tok/s measures the arrival process, not
+    the engine), so the pipeline pair drives every request in at once and
+    longer decodes through both loops and compares pure decode throughput.
+    Greedy token streams must stay bitwise identical across the pair.
     """
     from repro.runtime.scheduler import poisson_arrivals
     from repro.runtime.serve import run_burst_stream, run_continuous_stream
@@ -123,17 +130,46 @@ def serving_comparison(
             vocab=cfg.vocab_size,
         )
 
+    sat_rate = max(rate_hz, 100.0 * n_requests)  # all due ~immediately
+
+    def saturated_traffic():
+        return poisson_arrivals(
+            n_requests,
+            sat_rate,
+            seed=seed,
+            tokens_mean=2.0 * tokens_mean,
+            tokens_max=max_len - 1,
+            sample_frac=0.5,
+            vocab=cfg.vocab_size,
+        )
+
     eng_c = Engine(cfg, params, ecfg)
     continuous = run_continuous_stream(eng_c, traffic(), slots=slots)
     eng_c.close()
     eng_b = Engine(cfg, params, ecfg)
     burst = run_burst_stream(eng_b, traffic())
     eng_b.close()
+
+    def greedy_tokens(reqs):
+        return {r.rid: list(r.tokens) for r in reqs if r.greedy}
+
+    eng_s = Engine(cfg, params, ecfg)
+    sync_reqs = saturated_traffic()
+    sync_rep = run_continuous_stream(eng_s, sync_reqs, slots=slots)
+    eng_s.close()
+    eng_a = Engine(cfg, params, ecfg)
+    async_reqs = saturated_traffic()
+    async_rep = run_continuous_stream(
+        eng_a, async_reqs, slots=slots, async_steps=True
+    )
+    eng_a.close()
+
     return {
         "meta": {
             "arch": cfg.name,
             "n_requests": n_requests,
             "rate_hz": rate_hz,
+            "saturated_rate_hz": sat_rate,
             "tokens_mean": tokens_mean,
             "max_len": max_len,
             "slots": slots,
@@ -141,4 +177,14 @@ def serving_comparison(
         },
         "continuous": continuous,
         "burst": burst,
+        "continuous_sync": sync_rep,
+        "continuous_async": async_rep,
+        "async": {
+            "speedup": async_rep["tok_per_s"] / sync_rep["tok_per_s"],
+            "greedy_bitwise_identical": (
+                greedy_tokens(sync_reqs) == greedy_tokens(async_reqs)
+            ),
+            "sync_tok_per_s": sync_rep["tok_per_s"],
+            "async_tok_per_s": async_rep["tok_per_s"],
+        },
     }

@@ -148,7 +148,7 @@ def _serving_suite(fast: bool, json_path: str) -> list[str]:
     with open(json_path, "w") as f:
         json.dump(res, f, indent=2, default=float)
     rows = []
-    for kind in ("continuous", "burst"):
+    for kind in ("continuous", "burst", "continuous_sync", "continuous_async"):
         r = res[kind]
         rows.append(
             f"serving/{kind}/tok_per_s,{r.get('tok_per_s', 0.0):.1f},"
@@ -157,6 +157,11 @@ def _serving_suite(fast: bool, json_path: str) -> list[str]:
             f"compiles_after_warmup={r.get('compiles_after_warmup')};"
             f"rebinds={r.get('rebinds')}"
         )
+    a = res["async"]
+    rows.append(
+        f"serving/async/speedup,{a['speedup']:.3f},"
+        f"greedy_bitwise_identical={a['greedy_bitwise_identical']}"
+    )
     rows.append(f"serving/json,0.0,written={json_path}")
     return rows
 

@@ -5,7 +5,10 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
 
 * BENCH_serving.json — the continuous engine must report
   ``compiles_after_warmup == 0``: once the bucket executable exists, no
-  greedy/sample mix may ever touch the compiler again.
+  greedy/sample mix may ever touch the compiler again. The async step
+  pipeline (DESIGN.md §13) must beat the synchronous loop by >= 1.15x
+  tok/s on the saturated stream with bitwise-identical greedy tokens and
+  zero post-warmup compiles in both modes.
 * BENCH_kvcache.json — the paged engine must (a) keep post-warmup compiles
   at zero (capacity buckets are AOT-warmed; crossings are pure rebinds),
   (b) seat more concurrent requests than its pool's memory would buy as
@@ -48,6 +51,35 @@ def check_serving(data: dict) -> list[str]:
         errors.append(
             f"serving: continuous engine recompiled after warmup "
             f"(compiles_after_warmup={caw}, must be 0)"
+        )
+    # async step pipeline (DESIGN.md §13): the pipelined loop must beat the
+    # synchronous loop on the saturated stream, stream bitwise-identical
+    # greedy tokens, and stay off the compiler in both modes
+    for kind in ("continuous_sync", "continuous_async"):
+        rep = data.get(kind, {})
+        acaw = rep.get("compiles_after_warmup")
+        if acaw is None:
+            errors.append(
+                f"serving: report lacks {kind} (async step pipeline pair)"
+            )
+        elif acaw > 0:
+            errors.append(
+                f"serving: {kind} recompiled after warmup "
+                f"(compiles_after_warmup={acaw}, must be 0)"
+            )
+    a = data.get("async", {})
+    speedup = a.get("speedup")
+    if speedup is None:
+        errors.append("serving: report lacks async.speedup")
+    elif not speedup >= 1.15:
+        errors.append(
+            f"serving: async step pipeline speedup {speedup:.3f} must be "
+            f">= 1.15x the synchronous loop on the saturated stream"
+        )
+    if a.get("greedy_bitwise_identical") is not True:
+        errors.append(
+            "serving: async greedy token streams must be bitwise identical "
+            "to the synchronous loop"
         )
     return errors
 

@@ -40,3 +40,10 @@ python -m repro.launch.serve --smoke --requests 8 --rate 200 \
   --tokens-mean 4 --max-len 64 --engine paged \
   --page-size 8 --num-pages 28 --prompt-len 16 --prefill-chunk 16 \
   --kv-dtype int8 --sample-frac 0
+
+echo "== async step pipeline smoke (CPU) =="
+python -m repro.launch.serve --smoke --requests 12 --rate 200 \
+  --tokens-mean 5 --max-len 32 --engine continuous --async-steps
+python -m repro.launch.serve --smoke --requests 12 --rate 200 \
+  --tokens-mean 5 --max-len 32 --engine paged \
+  --page-size 8 --num-pages 20 --prefix-len 8 --async-steps

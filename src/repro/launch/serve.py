@@ -70,6 +70,18 @@ def _print_report(rep: dict) -> None:
         if "tokens_per_target_step" in rep:
             lanes["tok_per_target_step"] = rep["tokens_per_target_step"]
         print(f"[serve/{rep['engine']}] lanes: {lanes}", flush=True)
+    if rep.get("pipeline"):  # async step pipeline telemetry (DESIGN.md §13)
+        pl = rep["pipeline"]
+        print(
+            f"[serve/{rep['engine']}] pipeline: "
+            f"async={pl['async_steps']} "
+            f"host_plan {pl['host_plan_ms']:.1f}ms / "
+            f"device_wait {pl['device_wait_ms']:.1f}ms "
+            f"(overlap {pl['overlap_ratio']:.2f}) "
+            f"inflight_depth={pl['inflight_depth']} "
+            f"d2h_transfers={pl['d2h_transfers']}",
+            flush=True,
+        )
     if rep.get("spec"):
         sp = rep["spec"]
         print(
@@ -144,6 +156,12 @@ def main(argv: list[str] | None = None) -> dict:
                          "~1/4 the bytes; the dtype is a warmed dispatch "
                          "coordinate, so serving either pool never "
                          "compiles mid-stream")
+    ap.add_argument("--async-steps", action="store_true",
+                    help="software-pipelined step loop (DESIGN.md §13): "
+                         "host plans step N+1 while step N's outputs stay "
+                         "on device; d2h syncs land at token-emit "
+                         "boundaries only. Greedy streams are bitwise "
+                         "identical to the synchronous loop")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -168,6 +186,11 @@ def main(argv: list[str] | None = None) -> dict:
         ap.error(
             "--kv-dtype requires --engine paged (the dense cache has no "
             "page pool to quantise)"
+        )
+    if args.async_steps and args.engine in ("burst", "both", "all"):
+        ap.error(
+            "--async-steps requires --engine continuous or paged (the "
+            "per-burst driver has no step pipeline to overlap)"
         )
 
     cfg = get_config(args.arch)
@@ -225,7 +248,10 @@ def main(argv: list[str] | None = None) -> dict:
     if args.engine in ("continuous", "both", "all"):
         eng = Engine(cfg, params, ecfg)
         reports["continuous"] = run_continuous_stream(
-            eng, traffic(args.seed), slots=args.slots or None
+            eng,
+            traffic(args.seed),
+            slots=args.slots or None,
+            async_steps=args.async_steps,
         )
         eng.close()
     if args.engine in ("burst", "both", "all"):
@@ -241,7 +267,10 @@ def main(argv: list[str] | None = None) -> dict:
             else prefix_traffic(args.seed)
         )
         reports["paged"] = run_paged_stream(
-            eng, paged_reqs, slots=args.slots or None
+            eng,
+            paged_reqs,
+            slots=args.slots or None,
+            async_steps=args.async_steps,
         )
         eng.close()
 

@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bucket_multiple, bucket_pow2
+from repro.runtime.steps import pack_step_d2h, pack_verify_d2h
 
 GREEDY, SAMPLE = 0, 1
 
@@ -410,6 +411,14 @@ class BatcherStats:
     prefill_calls: int = 0  # prefill-lane executable calls
     chunk_bucket_crossings: int = 0
     h2d_uploads: int = 0  # host->device coordinate uploads (see _DeviceMirror)
+    # Step-pipeline telemetry (DESIGN.md §13): host-side planning/bookkeeping
+    # time vs time spent blocked on device pulls, the peak number of issued-
+    # but-uncommitted steps, and how many d2h transfers actually happened
+    # (the packed-pull satellite shrinks this per step; async defers it).
+    host_plan_ms: float = 0.0
+    device_wait_ms: float = 0.0
+    inflight_depth: int = 0
+    d2h_transfers: int = 0
     # Per-lane step counts (DESIGN.md §11): executable calls per lane.
     decode_steps: int = 0
     draft_steps: int = 0
@@ -487,6 +496,27 @@ class _DeviceMirror:
         self._dev[name] = dev
 
 
+@dataclass
+class _InflightStep:
+    """One issued-but-uncommitted device step (DESIGN.md §13).
+
+    ``packed`` is the step's single host-bound device array — for a decode
+    step the executable's own bundle output (``steps._step_bundle``,
+    ``[next_tok | new_pos | keys]``), for a spec step the host-packed
+    verify rows (``steps.pack_verify_d2h``) — the *only* d2h sync the step
+    ever costs, deferred to its token-emit boundary. A spec step keeps the
+    draft candidates and verify-window lengths so accept/rollback can be
+    *replayed* one step late against the pulled verify rows.
+    """
+
+    kind: str  # "decode" | "spec"
+    packed: Any  # device [S, W] int32, pulled once at commit
+    chainable: bool = False  # a second decode may issue on top of this one
+    drafts: np.ndarray | None = None  # spec: host [S, K] candidates
+    lengths: np.ndarray | None = None  # spec: per-slot verify-window lengths
+    k: int = 0  # spec: the step's k-bucket
+
+
 class _MultiLaneMixin:
     """The multi-lane step core shared by both batchers (DESIGN.md §10/§11):
     the per-step ``LanePolicy`` plan, FIFO chunk allocation, chunk/k bucket
@@ -511,9 +541,13 @@ class _MultiLaneMixin:
         draft_prefill_dispatch: Callable[[int], Callable] | None,
         draft_cache: Any,
         spec_k: int,
+        async_steps: bool = False,
     ) -> None:
         """Lane wiring shared by both constructors. Speculation is active
         only when the engine supplied both spec lanes."""
+        self.async_steps = async_steps
+        self._pending: _InflightStep | None = None  # issued, uncommitted
+        self._backlog: list[Request] = []  # finished off the step path
         self._draft_dispatch = draft_dispatch
         self._verify_dispatch = verify_dispatch
         self._draft_prefill_dispatch = draft_prefill_dispatch
@@ -537,6 +571,155 @@ class _MultiLaneMixin:
     @property
     def _spec_on(self) -> bool:
         return self.spec_k > 0
+
+    # ------------------------------------------------- step pipeline (§13)
+    def _pull(self, dev) -> np.ndarray:
+        """The emit-boundary d2h sync: every host read of a device array
+        goes through here so ``device_wait_ms`` measures exactly how long
+        the host sat blocked on the device and ``d2h_transfers`` counts
+        every transfer the step loop actually paid for."""
+        t0 = time.perf_counter()
+        out = np.asarray(dev)
+        self.stats.device_wait_ms += (time.perf_counter() - t0) * 1e3
+        self.stats.d2h_transfers += 1
+        return out
+
+    def step(self, now: float = 0.0) -> list[Request]:
+        """One scheduler step; returns requests that finished.
+
+        The software-pipelined wrapper around the engines' ``_step_impl``
+        (DESIGN.md §13). Synchronous mode is a pass-through. Async mode
+        keeps at most one issued-but-uncommitted device step: when the
+        pending step is a plain decode whose outcome cannot change what
+        the host would plan next (``chainable``), the *next* decode is
+        issued first and the pending step's tokens are emitted while the
+        device runs it — host bookkeeping for step N overlaps device
+        execution of step N+1. Any step the host must read before planning
+        (spec accept/rollback, prefill flips, finishes, teacher forcing)
+        commits first, so the device-visible call sequence — and therefore
+        every token stream — is identical to the synchronous loop.
+        """
+        t0 = time.perf_counter()
+        dw0 = self.stats.device_wait_ms
+        finished = self._backlog
+        self._backlog = []
+        if self.async_steps and self._pending is not None:
+            if self._can_run_ahead():
+                finished.extend(self._run_ahead(now))
+                self.stats.host_plan_ms += (
+                    (time.perf_counter() - t0) * 1e3
+                    - (self.stats.device_wait_ms - dw0)
+                )
+                return finished
+            finished.extend(self._commit_pending(now))
+        finished.extend(self._step_impl(now))
+        self.stats.host_plan_ms += (
+            (time.perf_counter() - t0) * 1e3
+            - (self.stats.device_wait_ms - dw0)
+        )
+        return finished
+
+    def flush(self, now: float = 0.0) -> list[Request]:
+        """Drain the pipeline: commit the pending step (if any) and return
+        every finished request not yet handed out. Call after the last
+        ``step`` of a stream; a no-op in synchronous mode."""
+        finished = self._backlog
+        self._backlog = []
+        if self._pending is not None:
+            finished.extend(self._commit_pending(now))
+        return finished
+
+    def _can_run_ahead(self) -> bool:
+        """Issue-before-commit is legal only when the pending step cannot
+        change the next step's plan: a chainable decode with no prefilling
+        slot in flight (a chunk flip would edit the decoding mask)."""
+        rec = self._pending
+        return (
+            rec is not None
+            and rec.kind == "decode"
+            and rec.chainable
+            and not (self._prefilling & self._active).any()
+        )
+
+    def _run_ahead(self, now: float) -> list[Request]:
+        """The overlap step: issue decode N+1 against the mirror's chained
+        device arrays (step N's outputs are already its inputs — no host
+        round-trip), *then* pull and emit step N's tokens while the device
+        works on N+1."""
+        rec, self._pending = self._pending, None
+        self._pre_issue_fast()
+        decoding = self._active & ~self._prefilling
+        if not decoding.any():  # _pre_issue_fast may have preempted slots
+            return self._commit_rec(rec, now)
+        self._decode_lane_step(now, decoding)
+        if self._pending is not None:
+            self.stats.inflight_depth = max(self.stats.inflight_depth, 2)
+        return self._commit_rec(rec, now)
+
+    def _pre_issue_fast(self) -> None:
+        """Cold-path upkeep that must precede an issued decode even on the
+        run-ahead path (paged storage overrides with page upkeep)."""
+
+    def _decode_chainable(self, decoding) -> bool:
+        """True when the *next* step's plan is independent of this decode's
+        outputs for every decoding slot: past teacher forcing (the next
+        input token is the step's own output, already chained on device),
+        not finishing (the emit loop would free the slot), and not about
+        to enter the draft/verify lanes (their plan reads host state)."""
+        for s, req in enumerate(self._slots):
+            if req is None or not decoding[s]:
+                continue
+            if self._cursor[s] + 1 < len(req.effective_prompt):
+                return False
+            rem_after = req.new_tokens - len(req.tokens) - 1
+            if rem_after < 1:
+                return False
+            if self._spec_on and req.greedy and rem_after > 1:
+                return False
+        return True
+
+    def _queue_decode(self, packed, decoding) -> None:
+        """Park a just-issued decode instead of syncing on it. ``packed``
+        is the executable's own bundle output (``steps._step_bundle``) —
+        queuing costs no dispatch at all. Positions advance *predictively*
+        — the device computes ``pos + active`` and the host mirrors that
+        arithmetic, so ``self._pos`` stays current for the next step's
+        planning without a d2h pull (commit re-reads the device's own
+        ``new_pos`` from the packed array)."""
+        new_pos = np.array(self._pos, np.int32)
+        new_pos[decoding] += 1
+        self._pos = new_pos
+        self._pending = _InflightStep(
+            kind="decode",
+            packed=packed,
+            chainable=self._decode_chainable(decoding),
+        )
+        self.stats.inflight_depth = max(self.stats.inflight_depth, 1)
+
+    def _commit_pending(self, now: float) -> list[Request]:
+        rec, self._pending = self._pending, None
+        return self._commit_rec(rec, now)
+
+    def _commit_rec(self, rec: _InflightStep, now: float) -> list[Request]:
+        """The emit boundary: one packed pull, then exactly the bookkeeping
+        the synchronous loop runs after its step call."""
+        if rec.kind == "spec":
+            return self._commit_spec(rec, now)
+        p = self._pull(rec.packed)  # [S,4]: nxt | new_pos | keys-as-int32
+        self._keys = p[:, 2:4].astype(np.uint32)  # bit-exact (see steps.py)
+        return self._emit_decode(p[:, 0], p[:, 1], now)
+
+    def _commit_spec(self, rec: _InflightStep, now: float) -> list[Request]:
+        """Replay accept/rollback one step late: the pulled verify rows and
+        the parked draft candidates reproduce the exact accept-length
+        arithmetic the synchronous loop ran immediately, so the committed
+        stream — including every rollback — is bitwise identical."""
+        p = self._pull(rec.packed)
+        k = rec.k
+        rows = p[:, : k + 1]
+        nxt0 = p[:, k + 1]
+        self._keys = p[:, k + 2 : k + 4].astype(np.uint32)
+        return self._apply_verify(now, rows, nxt0, rec.drafts, rec.lengths)
 
     # ------------------------------------------------------------- planning
     def _plan_step(self) -> StepPlan:
@@ -654,7 +837,9 @@ class _MultiLaneMixin:
         )
         self.stats.draft_steps += 1
         self.stats.note_lane("dr")
-        return np.asarray(drafts)
+        # an inherent sync point: the host packs the verify windows from
+        # the candidates, so the draft pull cannot be deferred
+        return self._pull(drafts)
 
     @staticmethod
     def _accepted_prefix(drafts_row, rows_row, k_s: int) -> int:
@@ -698,10 +883,21 @@ class _MultiLaneMixin:
         self.stats.verify_steps += 1
         self.stats.note_lane(self._verify_lane)
         self._mirror.put("keys", keys)
-        self._keys = np.array(keys, np.uint32)
-        return self._apply_verify(
-            now, np.asarray(rows), np.asarray(nxt0), drafts, lengths
+        rec = _InflightStep(
+            kind="spec",
+            packed=pack_verify_d2h(rows, nxt0, keys),
+            drafts=drafts,
+            lengths=lengths,
+            k=k,
         )
+        if self.async_steps:
+            # accept/rollback lags one step: the next step() commits it by
+            # replaying the decision against the parked drafts — the verify
+            # plan never needs the outcome, so nothing is guessed
+            self._pending = rec
+            self.stats.inflight_depth = max(self.stats.inflight_depth, 1)
+            return []
+        return self._commit_spec(rec, now)
 
     def _apply_verify(
         self, now, rows, nxt0, drafts, lengths
@@ -852,6 +1048,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         draft_prefill_dispatch: Callable[[int], Callable] | None = None,
         draft_cache: Any = None,
         spec_k: int = 0,
+        async_steps: bool = False,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -884,6 +1081,7 @@ class ContinuousBatcher(_MultiLaneMixin):
             draft_prefill_dispatch=draft_prefill_dispatch,
             draft_cache=draft_cache,
             spec_k=spec_k,
+            async_steps=async_steps,
         )
 
     # ------------------------------------------------------------ properties
@@ -897,11 +1095,16 @@ class ContinuousBatcher(_MultiLaneMixin):
 
     @property
     def has_work(self) -> bool:
-        return bool(self._active.any())
+        return bool(self._active.any()) or self._pending is not None
 
     # ------------------------------------------------------------- cold path
     def admit(self, requests: Iterable[Request], now: float = 0.0) -> int:
         """Seat requests in free slots. Returns the number admitted."""
+        requests = list(requests)
+        if requests and self._pending is not None:
+            # admission edits the full per-slot state and re-uploads it; the
+            # in-flight step must land first so those arrays are current
+            self._backlog.extend(self._commit_pending(now))
         admitted = 0
         free = [i for i, r in enumerate(self._slots) if r is None]
         for req in requests:
@@ -1000,8 +1203,10 @@ class ContinuousBatcher(_MultiLaneMixin):
                 self._mirror.get("greedy", self._greedy),
                 keys_dev,
             )
-        nk = np.asarray(new_keys)
-        nxt_host = np.asarray(nxt)
+        # one packed transfer for the chunk's host-bound outputs (§13)
+        p = self._pull(pack_step_d2h(nxt, new_keys))
+        nxt_host = p[:, 0]
+        nk = p[:, 1:3].astype(np.uint32)
         finished: list[Request] = []
         for s, cursor, chunk in plan:
             req = self._slots[s]
@@ -1025,8 +1230,9 @@ class ContinuousBatcher(_MultiLaneMixin):
         return finished
 
     # -------------------------------------------------------------- hot path
-    def step(self, now: float = 0.0) -> list[Request]:
-        """One multi-lane step for all slots; returns finished requests.
+    def _step_impl(self, now: float = 0.0) -> list[Request]:
+        """One multi-lane step for all slots (entered through the mixin's
+        pipelined ``step`` wrapper); returns finished requests.
 
         Lane order (DESIGN.md §11): prefill chunks first, then either the
         draft/verify pair (speculation planned this step) or the plain
@@ -1052,7 +1258,17 @@ class ContinuousBatcher(_MultiLaneMixin):
             self.stats.steps += 1
             self._count_prefilling_slot_steps()
             return finished
-        nxt, self._cache, pos, keys = self._step(
+        finished.extend(self._decode_lane_step(now, decoding))
+        return finished
+
+    def _decode_lane_step(self, now: float, decoding) -> list[Request]:
+        """Dense decode lane: one direct executable call. Synchronous mode
+        pulls and emits immediately; async adopts the executable's bundle
+        outputs (chained input + packed d2h array, ``steps._step_bundle``)
+        and parks the step for the pipeline to commit at the next emit
+        boundary (DESIGN.md §13). A legacy 4-output step fn (tests inject
+        them) degrades async to the synchronous commit."""
+        out = self._step(
             self._cache,
             self._mirror.get("tok", self._tok),
             self._mirror.get("pos", self._pos),
@@ -1061,17 +1277,31 @@ class ContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        nxt, self._cache, pos, keys = out[:4]
         self.stats.decode_steps += 1
         self.stats.note_lane(self._decode_lane)
+        self.stats.steps += 1
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
-        nxt_host = np.asarray(nxt)  # blocks until the device step is done
-        # copies: the host mutates these on join (device views are read-only)
-        self._pos = np.array(pos, np.int32)
-        self._keys = np.array(keys, np.uint32)
-        self.stats.steps += 1
-        self._tok = nxt_host[:, None].astype(np.int32)
+        if self.async_steps and len(out) == 6:
+            self._mirror.put("tok", out[4])  # bundle-staged chained input
+            self._queue_decode(out[5], decoding)
+            return []
         self._mirror.put("tok", nxt[:, None])  # device reshape, no upload
+        nxt_host = self._pull(nxt)  # blocks until the device step is done
+        # copies: the host mutates these on join (device views are read-only)
+        self._pos = np.array(self._pull(pos), np.int32)
+        self._keys = np.array(self._pull(keys), np.uint32)
+        return self._emit_decode(nxt_host, self._pos, now)
+
+    def _emit_decode(
+        self, nxt_host, pos_host, now: float
+    ) -> list[Request]:
+        """The decode step's emit boundary: pure host bookkeeping against
+        already-pulled outputs (``pos_host`` is unused here — dense slots
+        carry no storage that tracks positions; the paged twin needs it)."""
+        finished: list[Request] = []
+        self._tok = np.asarray(nxt_host)[:, None].astype(np.int32)
         self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
@@ -1177,6 +1407,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         draft_prefill_dispatch: Callable[[int], Callable] | None = None,
         draft_cache: Any = None,
         spec_k: int = 0,
+        async_steps: bool = False,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -1226,6 +1457,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             draft_prefill_dispatch=draft_prefill_dispatch,
             draft_cache=draft_cache,
             spec_k=spec_k,
+            async_steps=async_steps,
         )
 
     def _tables_changed(self) -> None:
@@ -1245,7 +1477,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
 
     @property
     def has_work(self) -> bool:
-        return bool(self._active.any())
+        return bool(self._active.any()) or self._pending is not None
 
     @property
     def pages_bucket(self) -> int:
@@ -1312,6 +1544,11 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         lack of pages (callers re-queue them — admission never rejects)."""
         from repro.runtime.kvcache import BlockTable
 
+        requests = list(requests)
+        if requests and self._pending is not None:
+            # admission edits the full per-slot state and re-uploads it; the
+            # in-flight step must land first so those arrays are current
+            self._backlog.extend(self._commit_pending(now))
         deferred: list[Request] = []
         free = [i for i, r in enumerate(self._slots) if r is None]
         for req in requests:
@@ -1517,8 +1754,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 self._mirror.get("greedy", self._greedy),
                 keys_dev,
             )
-        nk = np.asarray(new_keys)
-        nxt_host = np.asarray(nxt)
+        # one packed transfer for the chunk's host-bound outputs (§13)
+        p = self._pull(pack_step_d2h(nxt, new_keys))
+        nxt_host = p[:, 0]
+        nk = p[:, 1:3].astype(np.uint32)
         finished: list[Request] = []
         for s, cursor, chunk in kept:
             req = self._slots[s]
@@ -1556,8 +1795,9 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         return finished
 
     # -------------------------------------------------------------- hot path
-    def step(self, now: float = 0.0) -> list[Request]:
-        """One multi-lane step for all slots; returns finished requests.
+    def _step_impl(self, now: float = 0.0) -> list[Request]:
+        """One multi-lane step for all slots (entered through the mixin's
+        pipelined ``step`` wrapper); returns finished requests.
 
         Cold path first (the lane plan, one prefill chunk, page upkeep,
         bucket dispatch — mostly no-ops on the vast majority of steps),
@@ -1583,6 +1823,21 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self.stats.steps += 1
             self._count_prefilling_slot_steps()
             return finished
+        finished.extend(self._decode_lane_step(now, decoding))
+        return finished
+
+    def _pre_issue_fast(self) -> None:
+        """Run-ahead cold path: decode write windows still need writable
+        pages (growth/COW) before the next step issues. ``self._pos`` is
+        the predictive frontier, which is exactly the position the issued
+        step writes; a preemption here discards a pending token the
+        restarted request would discard anyway."""
+        self._page_upkeep(0)
+
+    def _decode_lane_step(self, now: float, decoding) -> list[Request]:
+        """Paged decode lane: capacity-bucket dispatch, packed block
+        tables, one direct executable call. Synchronous mode pulls and
+        emits immediately; async parks the step (DESIGN.md §13)."""
         bucket = bucket_pow2(
             max(
                 [t.num_pages for s, t in enumerate(self._tables)
@@ -1604,7 +1859,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._bt_host = bt
             self._bt_dirty = False
             self._mirror.touch("bt")
-        nxt, self._cache, pos, keys = step(
+        out = step(
             self._cache,
             self._mirror.get("tok", self._tok),
             self._mirror.get("pos", self._pos),
@@ -1614,16 +1869,31 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        nxt, self._cache, pos, keys = out[:4]
         self.stats.decode_steps += 1
         self.stats.note_lane(self._decode_lane)
+        self.stats.steps += 1
         self._mirror.put("pos", pos)
         self._mirror.put("keys", keys)
-        nxt_host = np.asarray(nxt)  # blocks until the device step is done
-        self._pos = np.array(pos, np.int32)
-        self._keys = np.array(keys, np.uint32)
-        self.stats.steps += 1
-        self._tok = nxt_host[:, None].astype(np.int32)
+        if self.async_steps and len(out) == 6:
+            self._mirror.put("tok", out[4])  # bundle-staged chained input
+            self._queue_decode(out[5], decoding)
+            return []
         self._mirror.put("tok", nxt[:, None])  # device reshape, no upload
+        nxt_host = self._pull(nxt)  # blocks until the device step is done
+        self._pos = np.array(self._pull(pos), np.int32)
+        self._keys = np.array(self._pull(keys), np.uint32)
+        return self._emit_decode(nxt_host, self._pos, now)
+
+    def _emit_decode(
+        self, nxt_host, pos_host, now: float
+    ) -> list[Request]:
+        """The paged decode step's emit boundary. ``pos_host`` is the
+        committing step's position frontier — under run-ahead the live
+        ``self._pos`` is already one step further, so tables sync to the
+        record's own positions, never the live array."""
+        finished: list[Request] = []
+        self._tok = np.asarray(nxt_host)[:, None].astype(np.int32)
         self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
@@ -1633,7 +1903,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 continue  # chunked lane owns this slot (ticked above)
             self.stats.active_slot_steps += 1
             table = self._tables[s]
-            table.num_tokens = int(self._pos[s])
+            table.num_tokens = int(pos_host[s])
             prompt = req.effective_prompt
             if self._cursor[s] + 1 < len(prompt):
                 # token-by-token fallback (prefill_chunk == 0): feed the
@@ -1751,6 +2021,17 @@ def latency_report(requests: Sequence[Request], batcher=None) -> dict:
         # registry's lane names, so reports and dispatch keys share one
         # namespace ("cbp" and "cb" are different lanes, and read as such)
         lanes["lane_calls"] = dict(st.lane_calls)
+        # step-pipeline telemetry (DESIGN.md §13): how much host work ran
+        # concurrently with (rather than serialised against) the device
+        busy = st.host_plan_ms + st.device_wait_ms
+        lanes["pipeline"] = {
+            "async_steps": bool(getattr(batcher, "async_steps", False)),
+            "host_plan_ms": round(st.host_plan_ms, 3),
+            "device_wait_ms": round(st.device_wait_ms, 3),
+            "overlap_ratio": round(st.host_plan_ms / busy, 4) if busy else 0.0,
+            "inflight_depth": st.inflight_depth,
+            "d2h_transfers": st.d2h_transfers,
+        }
         if st.target_steps:
             lanes["tokens_per_target_step"] = round(
                 st.tokens / st.target_steps, 3

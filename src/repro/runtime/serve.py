@@ -553,8 +553,9 @@ class Engine:
             *self._warm_sampling(s),
         )
         jax.block_until_ready(warm)
-        nxt, ctx.dense_cache, pos, keys = warm
-        _ = nxt[:, None]  # the hot loop's device-side tok reshape
+        nxt, ctx.dense_cache, pos, keys = warm[:4]
+        _ = nxt[:, None]  # the sync loop's device-side tok reshape
+        np.asarray(warm[5])  # the async loop's packed bundle pull
         np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
 
     def _warm_cbp(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
@@ -569,8 +570,9 @@ class Engine:
             *self._warm_sampling(s),
         )
         jax.block_until_ready(warm)
-        nxt, ctx.paged_caches[dt], pos, keys = warm
-        _ = nxt[:, None]  # the hot loop's device-side tok reshape
+        nxt, ctx.paged_caches[dt], pos, keys = warm[:4]
+        _ = nxt[:, None]  # the sync loop's device-side tok reshape
+        np.asarray(warm[5])  # the async loop's packed bundle pull
         np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
 
     def _warm_pf(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
@@ -691,6 +693,20 @@ class Engine:
                 if spec.warmer is not None:
                     getattr(self, spec.warmer)(key, exe, ctx)
 
+    def _warm_d2h_packs(self, slots: int) -> None:
+        """Warm the packed-d2h helpers (``steps.pack_step_d2h`` /
+        ``pack_verify_d2h``) for this slot bucket: they are plain ``jax.jit``
+        functions outside the Dispatcher's key space, but their first trace
+        must land in warmup so the serving loop never compiles mid-stream —
+        async mode adds zero new dispatch keys (DESIGN.md §13)."""
+        s = slots
+        nxt = jnp.zeros((s,), jnp.int32)
+        keys = jnp.zeros((s, 2), jnp.uint32)
+        np.asarray(steps_mod.pack_step_d2h(nxt, keys))
+        for k in self._k_buckets():
+            rows = jnp.zeros((s, k + 1), jnp.int32)
+            np.asarray(steps_mod.pack_verify_d2h(rows, nxt, keys))
+
     def _spec_dispatchers(
         self, slots: int, cache_is_paged: bool, kv_dtype: str = "fp32"
     ) -> tuple[Callable, Callable, Callable]:
@@ -800,8 +816,13 @@ class Engine:
         start_pos: int,
         num_tokens: int,
         rng: jax.Array | None = None,
+        on_step: Callable[[int, jax.Array], None] | None = None,
     ) -> tuple[np.ndarray, Any]:
-        """The latency-critical loop: direct executable calls only."""
+        """The latency-critical loop: direct executable calls only.
+
+        ``on_step(i, tok)`` (optional) observes each step's device output
+        as it is issued — e.g. to timestamp the first token without
+        serialising the rest of the loop."""
         exe = self._current
         assert exe is not None, "set_mode() before decode_loop() (cold path)"
         batch = int(first_token.shape[0])
@@ -828,6 +849,8 @@ class Engine:
                 self.params, cache, tok2d, jnp.int32(pos), step_keys[i]
             )
             out.append(tok)
+            if on_step is not None:
+                on_step(i, tok)
             tok = tok[:, None] if self.cfg.input_kind == "tokens" else tok
             pos += 1
             self.stats["hot_calls"] += 1
@@ -841,6 +864,7 @@ class Engine:
         slots: int | None = None,
         seed: int = 0,
         spec_decode: bool | None = None,
+        async_steps: bool = False,
     ) -> ContinuousBatcher:
         """Cold path: build+warm every lane/bucket executable, return a
         batcher.
@@ -849,7 +873,9 @@ class Engine:
         bucket size; afterwards joins, leaves, greedy/sample flips, chunk
         sizes, and draft depths are pure hot-loop data or warmed rebinds.
         ``spec_decode`` overrides the engine config (None = on iff
-        ``spec_k > 0``).
+        ``spec_k > 0``). ``async_steps`` turns on the software-pipelined
+        step loop (DESIGN.md §13) — same lanes, same dispatch keys, same
+        warmup; only the host's read schedule changes.
         """
         if self.cfg.input_kind != "tokens":
             raise ValueError(
@@ -868,6 +894,7 @@ class Engine:
             dense_cache=models.init_cache(self.cfg, s, self.ecfg.max_len),
         )
         self._warm_lanes("dense", s, ctx)
+        self._warm_d2h_packs(s)
         cache = ctx.dense_cache
         exe = self._decode.dispatch(lanes_mod.CB.key(s))
 
@@ -910,6 +937,7 @@ class Engine:
             draft_prefill_dispatch=draft_prefill_dispatch,
             draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
+            async_steps=async_steps,
         )
 
 
@@ -922,6 +950,7 @@ class Engine:
         warm_all_buckets: bool = True,
         spec_decode: bool | None = None,
         kv_dtype: str | None = None,
+        async_steps: bool = False,
     ) -> PagedContinuousBatcher:
         """Cold path: build the page pool + prefix cache and warm every
         paged lane through the registry; returns a paged batcher
@@ -981,6 +1010,7 @@ class Engine:
         )
         pins = {} if warm_all_buckets else {"pages_bucket": 1, "kv_dtype": dt}
         self._warm_lanes("paged", s, ctx, pins=pins)
+        self._warm_d2h_packs(s)
         cache = ctx.paged_caches[dt]
 
         def dispatch(pages_bucket: int) -> Callable:
@@ -1049,6 +1079,7 @@ class Engine:
             draft_prefill_dispatch=draft_prefill_dispatch,
             draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
+            async_steps=async_steps,
         )
 
 
@@ -1060,14 +1091,19 @@ def run_continuous_stream(
     slots: int | None = None,
     seed: int = 0,
     clock: Clock | None = None,
+    async_steps: bool = False,
 ) -> dict:
     """Drive a request stream through continuous batching; return a report.
 
     The report's ``compiles_after_warmup`` is the acceptance metric: it must
     stay 0 for any mix of greedy/sample requests once the bucket executable
-    exists.
+    exists. ``async_steps`` pipelines host scheduling against device
+    execution (DESIGN.md §13); greedy token streams are bitwise identical
+    either way.
     """
-    cb = eng.continuous(slots=slots, seed=seed)  # warmup compile first...
+    cb = eng.continuous(  # warmup compile first...
+        slots=slots, seed=seed, async_steps=async_steps
+    )
     clock = clock or Clock()  # ...so served latencies exclude it
     warm_compiles = eng._decode.stats.misses
     warm_rebinds = eng._decode.stats.rebinds
@@ -1085,9 +1121,11 @@ def run_continuous_stream(
             if nxt is None:
                 break
             clock.jump_to(nxt)  # idle: fast-forward to the next arrival
+    finished.extend(cb.flush(clock.now()))  # commit any in-flight step
     report = latency_report(finished, batcher=cb)
     report.update(
         engine="continuous",
+        async_steps=cb.async_steps,
         slots=cb.num_slots,
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),
@@ -1149,14 +1187,24 @@ def run_burst_stream(
             key = jnp.asarray(
                 rng.integers(0, 2**32, size=2, dtype=np.uint32)
             )
+            # TTFT anchor: timestamp the burst's first step when its output
+            # actually exists on device — not when the whole burst returns
+            # (that conflated TTFT with total latency in the report).
+            first_t: dict = {}
+
+            def note_first(i, tok, _first_t=first_t):
+                if i == 0:
+                    jax.block_until_ready(tok)
+                    _first_t["t"] = clock.now()
+
             toks, _ = eng.decode_loop(  # hot path
-                cache, jnp.asarray(first), 0, steps, rng=key
+                cache, jnp.asarray(first), 0, steps, rng=key,
+                on_step=note_first,
             )
             done_t = clock.now()
             for i, r in enumerate(chunk):
                 r.tokens = [int(t) for t in toks[i, : r.new_tokens]]
-                # the burst hands all tokens back at once: TTFT == latency
-                r.t_first = done_t
+                r.t_first = first_t.get("t", done_t)
                 r.t_done = done_t
                 finished.append(r)
     report = latency_report(finished)
@@ -1178,6 +1226,7 @@ def run_paged_stream(
     seed: int = 0,
     clock: Clock | None = None,
     kv_dtype: str | None = None,
+    async_steps: bool = False,
 ) -> dict:
     """Drive a request stream through the paged KV engine; return a report.
 
@@ -1192,7 +1241,7 @@ def run_paged_stream(
     from repro.runtime.kvcache import sharing_report
 
     cb = eng.paged_continuous(  # warmup compile first
-        slots=slots, seed=seed, kv_dtype=kv_dtype
+        slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps
     )
     clock = clock or Clock()  # ...so served latencies exclude it
     warm_compiles = eng._decode.stats.misses
@@ -1234,9 +1283,11 @@ def run_paged_stream(
         if nxt is None:
             break
         clock.jump_to(nxt)  # idle: fast-forward to the next arrival
+    finished.extend(cb.flush(clock.now()))  # commit any in-flight step
     report = latency_report(finished, batcher=cb)
     report.update(
         engine="paged",
+        async_steps=cb.async_steps,
         slots=cb.num_slots,
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),

@@ -153,7 +153,15 @@ def make_slot_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callabl
 
         step(params, cache, tok[S,1], pos[S], active[S], temps[S],
              greedy[S], keys[S,2])
-          -> (next_tok[S], cache, new_pos[S], new_keys[S,2])
+          -> (next_tok[S], cache, new_pos[S], new_keys[S,2],
+              tok_col[S,1], packed[S,4])
+
+    The trailing pair is the step's *bundle* (DESIGN.md §13): ``tok_col``
+    is the next step's chained input and ``packed`` the single host-bound
+    d2h array ``[next_tok | new_pos | new_keys-as-int32]``, both staged
+    inside the executable so the async pipeline pays no per-step host
+    re-staging or packing dispatch. The synchronous loop ignores them and
+    keeps its legacy pulls.
 
     Per-slot fields:
       * ``pos``    — each slot's own cache depth; frozen while inactive.
@@ -173,7 +181,8 @@ def make_slot_decode_fn(cfg: ArchConfig, *, moe_policy: str = "drop") -> Callabl
         )
         nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
         new_pos = pos + active.astype(jnp.int32)
-        return nxt, cache, new_pos, new_keys
+        return (nxt, cache, new_pos, new_keys,
+                *_step_bundle(nxt, new_pos, new_keys))
 
     return slot_step
 
@@ -188,7 +197,8 @@ def make_paged_slot_decode_fn(
 
         step(params, cache, tok[S,1], pos[S], block_tables[S,PB], active[S],
              temps[S], greedy[S], keys[S,2])
-          -> (next_tok[S], cache, new_pos[S], new_keys[S,2])
+          -> (next_tok[S], cache, new_pos[S], new_keys[S,2],
+              tok_col[S,1], packed[S,4])
 
     ``cache`` is the pooled page cache (``models.init_paged_cache``), shared
     by every slot. ``PB`` (``pages_bucket``) is baked into the executable's
@@ -207,9 +217,55 @@ def make_paged_slot_decode_fn(
         )
         nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
         new_pos = pos + active.astype(jnp.int32)
-        return nxt, cache, new_pos, new_keys
+        return (nxt, cache, new_pos, new_keys,
+                *_step_bundle(nxt, new_pos, new_keys))
 
     return paged_slot_step
+
+
+# ----------------------------------------------------- packed d2h transfers
+# The serving loop used to pull each step's outputs as separate
+# ``np.asarray`` transfers (next tokens, split keys, verify rows). Every
+# pull is a blocking device sync with its own fixed cost, so the step
+# pipeline (DESIGN.md §13) packs all host-bound outputs of a step into one
+# int32 device array and fetches it in a single transfer — on the async
+# path that one transfer is also the *only* sync point, deferred to the
+# token-emit boundary. uint32 key halves ride along bit-cast to int32
+# (``np.ndarray.astype(np.uint32)`` on the host restores the exact bits).
+#
+# The decode lanes go one step further: ``_step_bundle`` runs *inside* the
+# compiled step executable, so the packed array and the chained next-step
+# input are part of the step's own outputs — a "future-returning step
+# bundle" the host merely holds on to. ``pack_step_d2h``/``pack_verify_d2h``
+# remain as host-dispatched packers for the lanes whose executables predate
+# the bundle contract (prefill, verify).
+#
+# Donation audit: every step executable donates only its cache argument
+# (``donate_argnums=(1,)``), so the nxt/pos/keys outputs packed here are
+# fresh buffers — packing reads them *after* the mirror adopted them as
+# next-step inputs, and jax.jit without donation never aliases them away.
+def _step_bundle(nxt, new_pos, new_keys):
+    """Bundle tail of a decode step, traced into the step executable:
+    ``tok_col [S,1]`` (the chained next-step input) and ``packed [S,4]``
+    (``[next_tok | new_pos | new_keys-as-int32]``, one d2h transfer)."""
+    tok_col = nxt[:, None]
+    k32 = jax.lax.bitcast_convert_type(new_keys, jnp.int32)
+    packed = jnp.concatenate([tok_col, new_pos[:, None], k32], axis=1)
+    return tok_col, packed
+
+
+@jax.jit
+def pack_step_d2h(nxt, keys):
+    """[S] int32 next tokens + [S,2] uint32 keys -> [S,3] int32."""
+    k32 = jax.lax.bitcast_convert_type(keys, jnp.int32)
+    return jnp.concatenate([nxt[:, None], k32], axis=1)
+
+
+@jax.jit
+def pack_verify_d2h(rows, nxt0, keys):
+    """[S,K+1] rows + [S] next0 + [S,2] uint32 keys -> [S,K+4] int32."""
+    k32 = jax.lax.bitcast_convert_type(keys, jnp.int32)
+    return jnp.concatenate([rows, nxt0[:, None], k32], axis=1)
 
 
 def _sample_rows(logits, temps, greedy, keys):
