@@ -2,12 +2,13 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv smoke-async bench-serving bench-kvcache bench-prefill \
-	bench-specdec bench-quantkv bench-check bench examples
+	smoke-quantkv smoke-async smoke-telemetry bench-serving bench-kvcache \
+	bench-prefill bench-specdec bench-quantkv bench-telemetry bench-check \
+	bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
 verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv smoke-async
+	smoke-quantkv smoke-async smoke-telemetry
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -62,6 +63,17 @@ smoke-async:
 		--tokens-mean 5 --max-len 32 --engine paged \
 		--page-size 8 --num-pages 20 --prefix-len 8 --async-steps
 
+# CPU smoke: the flight recorder + metrics registry (DESIGN.md §14) —
+# capture a trace and a Prometheus snapshot from the full paged stack and
+# validate both (Chrome-trace schema, event-type diversity, per-lane
+# latency histograms).
+smoke-telemetry:
+	$(PY) -m repro.launch.serve --smoke --requests 12 --rate 200 \
+		--tokens-mean 5 --max-len 32 --engine paged \
+		--page-size 8 --num-pages 20 --prefix-len 8 \
+		--trace-out trace_smoke.json --metrics-out metrics_smoke.prom
+	$(PY) scripts/check_trace.py trace_smoke.json metrics_smoke.prom
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters, plus the
 # sync-vs-async step-pipeline pair on the saturated stream).
@@ -89,10 +101,16 @@ bench-specdec:
 bench-quantkv:
 	$(PY) -m benchmarks.run --only quantkv --fast
 
+# Telemetry overhead: writes BENCH_telemetry.json (tracing off vs on
+# tok/s, disabled-path overhead estimate, capture validity — DESIGN.md §14).
+bench-telemetry:
+	$(PY) -m benchmarks.run --only telemetry --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
 	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
-		BENCH_prefill.json BENCH_specdec.json BENCH_quantkv.json
+		BENCH_prefill.json BENCH_specdec.json BENCH_quantkv.json \
+		BENCH_telemetry.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

@@ -166,6 +166,38 @@ def _serving_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _telemetry_suite(fast: bool, json_path: str) -> list[str]:
+    from . import telemetry_bench
+
+    res = telemetry_bench.telemetry_comparison(
+        n_requests=16 if fast else 48,
+        slots=4 if fast else 8,
+        repeats=2 if fast else 3,
+    )
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("off_sync", "on_sync", "off_async", "on_async"):
+        r = res[kind]
+        rows.append(
+            f"telemetry/{kind}/tok_per_s,{r.get('tok_per_s', 0.0):.1f},"
+            f"p50_ms={r.get('p50_ms', 0.0):.1f};"
+            f"p99_ms={r.get('p99_ms', 0.0):.1f};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    a = res["acceptance"]
+    rows.append(
+        f"telemetry/overhead,{a['tracing_off_overhead_frac']},"
+        f"on_ratio_sync={a['tracing_on_ratio_sync']};"
+        f"on_ratio_async={a['tracing_on_ratio_async']};"
+        f"trace_valid={a['trace_valid']};"
+        f"prometheus_valid={a['prometheus_valid']};"
+        f"event_types={len(a['trace_event_types'])}"
+    )
+    rows.append(f"telemetry/json,0.0,written={json_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -175,6 +207,7 @@ def main() -> None:
     ap.add_argument("--prefill-json", default="BENCH_prefill.json")
     ap.add_argument("--specdec-json", default="BENCH_specdec.json")
     ap.add_argument("--quantkv-json", default="BENCH_quantkv.json")
+    ap.add_argument("--telemetry-json", default="BENCH_telemetry.json")
     args = ap.parse_args()
 
     from . import (
@@ -205,6 +238,7 @@ def main() -> None:
         "prefill": lambda: _prefill_suite(args.fast, args.prefill_json),
         "specdec": lambda: _specdec_suite(args.fast, args.specdec_json),
         "quantkv": lambda: _quantkv_suite(args.fast, args.quantkv_json),
+        "telemetry": lambda: _telemetry_suite(args.fast, args.telemetry_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

@@ -29,6 +29,13 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
   pool-dtype flip (the kv_dtype axis is AOT-warmed by the registry
   fan-out; a crossing rebinds, never compiles).
 
+* BENCH_telemetry.json — the flight recorder (DESIGN.md §14) must be
+  compiled out unless enabled: the disabled-path overhead estimate stays
+  under 1% of a serving step, tracing-on holds >= 95% of tracing-off
+  throughput (sync and async), greedy streams are bitwise identical off
+  vs on, post-warmup compiles stay zero, and the tracing-on capture
+  passes Chrome-trace and Prometheus validation.
+
 Usage: python scripts/bench_check.py [BENCH_*.json ...]
 Missing files are skipped with a warning (suites can be run selectively);
 any present-but-failing contract exits 1.
@@ -215,12 +222,59 @@ def check_quantkv(data: dict) -> list[str]:
     return errors
 
 
+def check_telemetry(data: dict) -> list[str]:
+    errors = []
+    a = data.get("acceptance", {})
+    frac = a.get("tracing_off_overhead_frac")
+    if frac is None:
+        errors.append("telemetry: report lacks tracing_off_overhead_frac")
+    elif not frac <= 0.01:
+        errors.append(
+            f"telemetry: disabled-path overhead estimate {frac:.4f} of a "
+            f"step must be <= 1% (the compiled-out contract, DESIGN.md §14)"
+        )
+    for mode in ("sync", "async"):
+        ratio = a.get(f"tracing_on_ratio_{mode}")
+        if ratio is None:
+            errors.append(f"telemetry: report lacks tracing_on_ratio_{mode}")
+        elif not ratio >= 0.95:
+            errors.append(
+                f"telemetry: tracing-on throughput is {ratio:.3f}x "
+                f"tracing-off ({mode}); must hold >= 0.95x"
+            )
+    if a.get("greedy_bitwise_identical") is not True:
+        errors.append(
+            "telemetry: greedy token streams must be bitwise identical "
+            "with tracing off vs on (observation must not perturb serving)"
+        )
+    if a.get("zero_post_warmup_compiles") is not True:
+        errors.append(
+            "telemetry: post-warmup compiles must stay 0 in every arm "
+            "(telemetry adds no dispatch keys)"
+        )
+    if a.get("trace_valid") is not True:
+        errors.append("telemetry: tracing-on capture failed trace validation")
+    if len(a.get("trace_event_types", [])) < 5:
+        errors.append(
+            f"telemetry: capture shows only "
+            f"{len(a.get('trace_event_types', []))} event types "
+            f"{a.get('trace_event_types')}; need >= 5"
+        )
+    if a.get("prometheus_valid") is not True:
+        errors.append(
+            "telemetry: Prometheus exposition lacks per-lane latency "
+            "histograms (lane_step_ms) or request-phase families"
+        )
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
     "BENCH_prefill.json": check_prefill,
     "BENCH_specdec.json": check_specdec,
     "BENCH_quantkv.json": check_quantkv,
+    "BENCH_telemetry.json": check_telemetry,
 }
 
 

@@ -47,3 +47,10 @@ python -m repro.launch.serve --smoke --requests 12 --rate 200 \
 python -m repro.launch.serve --smoke --requests 12 --rate 200 \
   --tokens-mean 5 --max-len 32 --engine paged \
   --page-size 8 --num-pages 20 --prefix-len 8 --async-steps
+
+echo "== telemetry smoke (CPU): flight recorder + metrics registry =="
+python -m repro.launch.serve --smoke --requests 12 --rate 200 \
+  --tokens-mean 5 --max-len 32 --engine paged \
+  --page-size 8 --num-pages 20 --prefix-len 8 \
+  --trace-out trace_smoke.json --metrics-out metrics_smoke.prom
+python scripts/check_trace.py trace_smoke.json metrics_smoke.prom

@@ -32,6 +32,12 @@ from .semistatic import (
 )
 from .semistatic import reset_entry_points as _reset_branch_changers
 from .specialization import SpecStats, SpecTable, bucket_multiple, bucket_pow2
+from .telemetry import (
+    FlightRecorder,
+    Histogram,
+    MetricsRegistry,
+    Telemetry,
+)
 from .tracing import semi_static, semi_static_switch
 
 
@@ -56,6 +62,10 @@ __all__ = [
     "LaneRegistry",
     "LaneSpec",
     "UnknownLaneError",
+    "FlightRecorder",
+    "Histogram",
+    "MetricsRegistry",
+    "Telemetry",
     "SpecStats",
     "SpecTable",
     "bucket_multiple",

@@ -76,7 +76,12 @@ class CompileCache:
       dangling-entry-point hazard).
     """
 
-    def __init__(self, name: str = "cache", capacity: int | None = None):
+    def __init__(
+        self,
+        name: str = "cache",
+        capacity: int | None = None,
+        recorder: Any = None,
+    ):
         if capacity is not None and capacity < 1:
             raise DispatchError(f"capacity must be >= 1, got {capacity}")
         self.name = name
@@ -86,6 +91,11 @@ class CompileCache:
         self._pinned: set[Hashable] = set()
         self._lock = threading.Lock()
         self.stats = CacheStats()
+        # Optional flight recorder (core.telemetry.FlightRecorder): compile
+        # spans and evictions land on the "dispatcher" trace track, each
+        # tagged with its key. None (the default) costs one compare per
+        # cold-path build — never per warm dispatch.
+        self.recorder = recorder
 
     def __contains__(self, key: Hashable) -> bool:
         with self._lock:
@@ -139,6 +149,11 @@ class CompileCache:
                     leader = False
                     self.stats.single_flight_waits += 1
             if leader:
+                rec = self.recorder
+                t0_ns = (
+                    time.perf_counter_ns()
+                    if rec is not None and rec.enabled else 0
+                )
                 t0 = time.perf_counter()
                 try:
                     exe = builder()
@@ -148,15 +163,22 @@ class CompileCache:
                         del self._building[key]
                     build.event.set()
                     raise
+                build_s = time.perf_counter() - t0
                 with self._lock:
                     self._table[key] = exe
                     self._table.move_to_end(key)
                     self.stats.misses += 1
                     self.stats.keys.append(key)
-                    self.stats.compile_seconds += time.perf_counter() - t0
+                    self.stats.compile_seconds += build_s
                     self._evict_locked()
                     del self._building[key]
                 build.event.set()
+                if t0_ns:  # compile span, tagged with its dispatch key
+                    rec.complete(
+                        "compile", "dispatcher", t0_ns,
+                        args={"key": str(key),
+                              "build_ms": round(build_s * 1e3, 3)},
+                    )
                 return exe
             # Follower: wait for the leader, then retry the lookup (the entry
             # may have been evicted or the leader may have failed; in either
@@ -166,6 +188,7 @@ class CompileCache:
     def _evict_locked(self) -> None:
         if self.capacity is None:
             return
+        rec = self.recorder
         for key in list(self._table):
             if len(self._table) <= self.capacity:
                 break
@@ -173,6 +196,9 @@ class CompileCache:
                 continue
             del self._table[key]
             self.stats.evictions += 1
+            if rec is not None and rec.enabled:
+                rec.emit("cache_evict", "dispatcher",
+                         args={"key": str(key)})
 
 
 # -------------------------------------------------------------------- policy
@@ -272,13 +298,19 @@ class Dispatcher:
         name: str | None = None,
         policy: DispatchPolicy | None = None,
         warmer: Callable[[Hashable, Any], Any] | None = None,
+        recorder: Any = None,
     ):
         self._builder = builder
         self.policy = policy or DispatchPolicy()
         self._warmer = warmer
         self._name = name or f"dispatch@{id(self):x}"
+        # Flight recorder shared with the cache: compile spans / evictions
+        # come from the cache, rebind + hysteresis events from here. The
+        # slot fast path never touches it.
+        self.recorder = recorder
         self.cache = CompileCache(
-            name=self._name, capacity=self.policy.capacity
+            name=self._name, capacity=self.policy.capacity,
+            recorder=recorder,
         )
         self._current: Callable | None = None  # the hot slot
         self._current_key: Hashable | None = None
@@ -344,6 +376,13 @@ class Dispatcher:
         else:
             self.stats.suppressed_rebinds += 1
             self.stats.table_dispatches += 1
+            rec = self.recorder
+            if rec is not None and rec.enabled:
+                rec.emit(
+                    "rebind_suppressed", "dispatcher",
+                    args={"key": str(key), "streak": self._streak,
+                          "hysteresis": self.policy.hysteresis},
+                )
         return exe
 
     def set_direction(self, key: Hashable, *, warm: bool = False) -> Any:
@@ -369,6 +408,14 @@ class Dispatcher:
             self._warmer(key, exe)
             self.stats.warms += 1
         self.stats.last_rebind_seconds = time.perf_counter() - t0
+        rec = self.recorder
+        if rec is not None and rec.enabled:  # the hot-slot flip itself
+            rec.emit(
+                "rebind", "dispatcher",
+                args={"key": str(key),
+                      "from": None if old is None else str(old),
+                      "warmed": bool(do_warm and self._warmer is not None)},
+            )
 
     # -------------------------------------------------------------- hot path
     def hot(self, *args: Any) -> Any:

@@ -326,3 +326,18 @@ def analyze(hlo_text: str) -> dict:
         "collective_bytes_total": sum(cost.collectives.values()),
         "unknown_trip_whiles": cost.unknown_trip_whiles,
     }
+
+
+def analyze_compiled(compiled) -> dict:
+    """Cost-analyze a compiled executable (best effort).
+
+    The telemetry compile report (DESIGN.md §14) calls this on every
+    executable the Engine's ``_build`` produces. Backends differ in what
+    text a compiled object exposes — a report must never fail a build, so
+    any extraction or parse error is folded into an ``{"error": ...}``
+    entry instead of raised."""
+    try:
+        text = compiled.as_text()
+        return analyze(text)
+    except Exception as exc:  # noqa: BLE001 - report, never break a build
+        return {"error": f"{type(exc).__name__}: {exc}"}

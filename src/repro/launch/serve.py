@@ -17,6 +17,7 @@ import jax
 
 from repro import models
 from repro.configs import get_config
+from repro.core.telemetry import Telemetry
 from repro.runtime.scheduler import (
     attach_distinct_prompts,
     poisson_arrivals,
@@ -29,6 +30,7 @@ from repro.runtime.serve import (
     run_continuous_stream,
     run_paged_stream,
 )
+from repro.runtime.tracing import write_trace
 
 
 def _print_report(rep: dict) -> None:
@@ -165,6 +167,18 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable the flight recorder (DESIGN.md §14) and "
+                         "write a Chrome trace-event JSON file, openable "
+                         "in ui.perfetto.dev — one track per lane plus "
+                         "dispatcher / scheduler / page-pool tracks")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot after the "
+                         "run: Prometheus text exposition if PATH ends in "
+                         ".prom, JSON otherwise")
+    ap.add_argument("--compile-report", default=None, metavar="PATH",
+                    help="write a per-DispatchKey compile report (build "
+                         "ms + HLO FLOPs/bytes estimate) as JSON")
     args = ap.parse_args(argv)
     if args.rate <= 0:
         ap.error(f"--rate must be > 0 requests/s, got {args.rate}")
@@ -244,9 +258,18 @@ def main(argv: list[str] | None = None) -> dict:
             vocab=cfg.vocab_size,
         )
 
+    # One Telemetry shared by every engine (DESIGN.md §14): the flight
+    # recorder is enabled only when a trace is requested (otherwise call
+    # sites pay a single None-check), compile analysis only when the
+    # compile report is requested (as_text + parse per built executable).
+    telemetry = Telemetry(
+        enabled=args.trace_out is not None,
+        compile_analysis=args.compile_report is not None,
+    )
+
     reports = {}
     if args.engine in ("continuous", "both", "all"):
-        eng = Engine(cfg, params, ecfg)
+        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
         reports["continuous"] = run_continuous_stream(
             eng,
             traffic(args.seed),
@@ -255,11 +278,11 @@ def main(argv: list[str] | None = None) -> dict:
         )
         eng.close()
     if args.engine in ("burst", "both", "all"):
-        eng = Engine(cfg, params, ecfg)
+        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
         reports["burst"] = run_burst_stream(eng, traffic(args.seed))
         eng.close()
     if args.engine in ("paged", "all"):
-        eng = Engine(cfg, params, ecfg)
+        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
         # --prompt-len switches the paged stream from the shared-prefix
         # workload (DESIGN.md §9) to long distinct prompts (DESIGN.md §10)
         paged_reqs = (
@@ -273,6 +296,31 @@ def main(argv: list[str] | None = None) -> dict:
             async_steps=args.async_steps,
         )
         eng.close()
+
+    if args.trace_out:
+        trace = write_trace(args.trace_out, telemetry.recorder)
+        print(
+            f"[serve] trace: {args.trace_out} "
+            f"({len(trace['traceEvents'])} events, "
+            f"{telemetry.recorder.dropped} dropped) — open in "
+            f"ui.perfetto.dev",
+            flush=True,
+        )
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            if args.metrics_out.endswith(".prom"):
+                fh.write(telemetry.registry.to_prometheus())
+            else:
+                fh.write(telemetry.metrics_json())
+        print(f"[serve] metrics: {args.metrics_out}", flush=True)
+    if args.compile_report:
+        with open(args.compile_report, "w") as fh:
+            json.dump(telemetry.compile_reports, fh, indent=2)
+        print(
+            f"[serve] compile report: {args.compile_report} "
+            f"({len(telemetry.compile_reports)} keys)",
+            flush=True,
+        )
 
     if args.json:
         print(json.dumps(reports, indent=2))

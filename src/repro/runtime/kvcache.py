@@ -112,7 +112,13 @@ class PagePool:
     ``page_bytes``.
     """
 
-    def __init__(self, num_pages: int, page_size: int, kv_dtype: str = "fp32"):
+    def __init__(
+        self,
+        num_pages: int,
+        page_size: int,
+        kv_dtype: str = "fp32",
+        telemetry=None,
+    ):
         if num_pages < 1:
             raise KVCacheError(f"num_pages must be >= 1, got {num_pages}")
         if page_size < 1:
@@ -128,6 +134,18 @@ class PagePool:
         self._free: deque[int] = deque(range(1, num_pages + 1))
         self._ref = [0] * (num_pages + 1)
         self.stats = PoolStats()
+        # Flight-recorder hookup (core.telemetry, DESIGN.md §14): page
+        # lifecycle events + occupancy counter samples on the "page-pool"
+        # track. ``_trace`` is None unless recording, so the alloc/free hot
+        # path pays one compare when telemetry is off.
+        self.telemetry = telemetry
+        self._trace = telemetry.trace_or_none() if telemetry else None
+
+    def _occupancy_sample(self, rec) -> None:
+        rec.counter(
+            "pool_occupancy", "page-pool",
+            pages_in_use=self.pages_in_use, pages_free=self.pages_free,
+        )
 
     # ------------------------------------------------------------ accounting
     @property
@@ -169,13 +187,19 @@ class PagePool:
     # ------------------------------------------------------------- alloc/free
     def alloc(self) -> Optional[int]:
         """Pop a free page with ref=1, or None when the pool is dry."""
+        rec = self._trace
         if not self._free:
             self.stats.alloc_failures += 1
+            if rec is not None:
+                rec.emit("alloc_failure", "page-pool")
             return None
         pid = self._free.popleft()
         self._ref[pid] = 1
         self.stats.allocs += 1
         self.stats.peak_in_use = max(self.stats.peak_in_use, self.pages_in_use)
+        if rec is not None:
+            rec.emit("page_alloc", "page-pool", args={"page": pid})
+            self._occupancy_sample(rec)
         return pid
 
     def incref(self, pid: int) -> None:
@@ -197,6 +221,10 @@ class PagePool:
         if self._ref[pid] == 0:
             self._free.append(pid)
             self.stats.frees += 1
+            rec = self._trace
+            if rec is not None:
+                rec.emit("page_free", "page-pool", args={"page": pid})
+                self._occupancy_sample(rec)
             return True
         return False
 
@@ -261,6 +289,10 @@ class BlockTable:
         self.pool.decref(pid)
         self.pages[idx] = new
         self.pool.stats.cow_copies += 1
+        rec = self.pool._trace
+        if rec is not None:
+            rec.emit("cow_copy", "page-pool",
+                     args={"src": pid, "dst": new})
         return True
 
     def trim(self, keep_pages: int) -> int:
@@ -430,6 +462,10 @@ class PrefixCache:
             self._nodes -= 1
             self.pool.decref(victim.page)
             self.pool.stats.prefix_evictions += 1
+            rec = self.pool._trace
+            if rec is not None:
+                rec.emit("prefix_evict", "page-pool",
+                         args={"page": victim.page})
             freed += 1
             if parent is not self._root and evictable(parent):
                 heapq.heappush(heap, (parent.last_used, id(parent), parent))

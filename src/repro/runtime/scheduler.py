@@ -64,7 +64,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bucket_multiple, bucket_pow2
-from repro.runtime.steps import pack_step_d2h, pack_verify_d2h
+from repro.core.telemetry import MetricsRegistry, Telemetry
+from repro.runtime.steps import pack_step_d2h, pack_verify_d2h, pull_host
 
 GREEDY, SAMPLE = 0, 1
 
@@ -151,6 +152,7 @@ class Request:
     tokens: list = field(default_factory=list)
     t_admit: float | None = None
     t_first: float | None = None  # first emitted token (TTFT anchor)
+    t_last: float | None = None  # last emit (inter-token histogram anchor)
     t_done: float | None = None
     preemptions: int = 0
 
@@ -429,14 +431,24 @@ class BatcherStats:
     accepted_tokens: int = 0
     spec_tokens: int = 0
     k_bucket_crossings: int = 0
-    # Executable calls grouped by *lane spec name* (DESIGN.md §12): the
-    # registry's key namespace ("cb"/"cbp"/"pf"/"pfd"/"dr"/"drp"/"vf"/
-    # "vfd") is also the reporting namespace, so per-lane telemetry and
-    # dispatch keys can never drift apart.
-    lane_calls: dict = field(default_factory=dict)
+    # The metrics registry (core.telemetry, DESIGN.md §14) this batcher's
+    # per-lane counters and latency histograms live in. ``lane_calls`` is
+    # *derived* from it — the registry's lane-label namespace ("cb"/"cbp"/
+    # "pf"/"pfd"/"dr"/"drp"/"vf"/"vfd"/"burst") is the dispatch-key
+    # namespace, so per-lane telemetry, the Prometheus snapshot, the trace,
+    # and the dispatch keys can never drift apart.
+    registry: MetricsRegistry = field(
+        default_factory=MetricsRegistry, repr=False, compare=False
+    )
 
     def note_lane(self, spec_name: str) -> None:
-        self.lane_calls[spec_name] = self.lane_calls.get(spec_name, 0) + 1
+        self.registry.inc("lane_calls_total", lane=spec_name)
+
+    @property
+    def lane_calls(self) -> dict:
+        """Executable calls grouped by lane spec name (DESIGN.md §12),
+        read straight out of the registry."""
+        return self.registry.labeled_values("lane_calls_total", "lane")
 
     @property
     def occupancy(self) -> float:
@@ -533,6 +545,67 @@ class _MultiLaneMixin:
     _prefill_lane = "pfd"
     _verify_lane = "vfd"
 
+    def _init_telemetry(self, telemetry: Telemetry | None) -> None:
+        """Telemetry wiring shared by both constructors (DESIGN.md §14).
+
+        Runs before ``stats`` is built so the batcher's counters land in
+        the engine's registry. ``_trace`` is None unless the flight
+        recorder is enabled — every hot-path emit site guards on that one
+        compare, which is the whole disabled-path overhead. The request-
+        phase histograms are cached as plain attributes (one bisect per
+        observation, no registry lookup per token)."""
+        self.telemetry = telemetry or Telemetry()
+        self._trace = self.telemetry.trace_or_none()
+        reg = self.telemetry.registry
+        self._h_qwait = reg.histogram("queue_wait_ms")
+        self._h_ttft = reg.histogram("ttft_ms")
+        self._h_itl = reg.histogram("inter_token_ms")
+        self._h_e2e = reg.histogram("request_latency_ms")
+        self._lane_hist: dict[str, Any] = {}
+
+    def _lane_tick(self, lane: str, t0_ns: int) -> None:
+        """Per-lane executable-call latency, anchored at ``t0_ns`` (taken
+        just before the lane call): the ``lane_step_ms{lane=...}``
+        histogram always observes (the per-lane Prometheus surface); a
+        span lands on the lane's trace track only when recording."""
+        dt_ns = time.perf_counter_ns() - t0_ns
+        h = self._lane_hist.get(lane)
+        if h is None:
+            h = self._lane_hist[lane] = self.telemetry.registry.histogram(
+                "lane_step_ms", lane=lane
+            )
+        h.observe(dt_ns / 1e6)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("lane_step", "lane:" + lane, ph="X", ts_ns=t0_ns,
+                    dur_ns=dt_ns)
+
+    def _note_admit(self, req: Request, now: float) -> None:
+        """Queue-wait histogram + admission lifecycle event."""
+        self._h_qwait.observe(max(now - req.arrival_s, 0.0) * 1e3)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("admit", "scheduler", args={"rid": req.rid})
+
+    def _note_tokens(self, req: Request, now: float) -> None:
+        """Request-phase emit accounting: TTFT on the first emitted token,
+        inter-token gap after it. Virtual-clock milliseconds — the same
+        basis as ``latency_report``'s percentiles."""
+        if req.t_first is None:
+            req.t_first = now
+            self._h_ttft.observe(max(now - req.arrival_s, 0.0) * 1e3)
+        elif req.t_last is not None and now > req.t_last:
+            self._h_itl.observe((now - req.t_last) * 1e3)
+        req.t_last = now
+
+    def _note_finish(self, req: Request, now: float) -> None:
+        """End-to-end latency histogram + finish lifecycle event."""
+        self._h_e2e.observe(max(now - req.arrival_s, 0.0) * 1e3)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("finish", "scheduler",
+                    args={"rid": req.rid, "tokens": len(req.tokens)})
+
     def _init_lanes(
         self,
         *,
@@ -575,12 +648,12 @@ class _MultiLaneMixin:
     # ------------------------------------------------- step pipeline (§13)
     def _pull(self, dev) -> np.ndarray:
         """The emit-boundary d2h sync: every host read of a device array
-        goes through here so ``device_wait_ms`` measures exactly how long
-        the host sat blocked on the device and ``d2h_transfers`` counts
-        every transfer the step loop actually paid for."""
-        t0 = time.perf_counter()
-        out = np.asarray(dev)
-        self.stats.device_wait_ms += (time.perf_counter() - t0) * 1e3
+        goes through ``steps.pull_host`` so ``device_wait_ms`` measures
+        exactly how long the host sat blocked on the device,
+        ``d2h_transfers`` counts every transfer the step loop actually
+        paid for, and (when recording) each pull lands as a "d2h" span."""
+        out, dt_ns = pull_host(dev, self._trace)
+        self.stats.device_wait_ms += dt_ns / 1e6
         self.stats.d2h_transfers += 1
         return out
 
@@ -647,6 +720,9 @@ class _MultiLaneMixin:
         round-trip), *then* pull and emit step N's tokens while the device
         works on N+1."""
         rec, self._pending = self._pending, None
+        tr = self._trace
+        if tr is not None:
+            tr.emit("async_issue", "scheduler")
         self._pre_issue_fast()
         decoding = self._active & ~self._prefilling
         if not decoding.any():  # _pre_issue_fast may have preempted slots
@@ -695,6 +771,10 @@ class _MultiLaneMixin:
             chainable=self._decode_chainable(decoding),
         )
         self.stats.inflight_depth = max(self.stats.inflight_depth, 1)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("async_park", "scheduler",
+                    args={"chainable": self._pending.chainable})
 
     def _commit_pending(self, now: float) -> list[Request]:
         rec, self._pending = self._pending, None
@@ -703,6 +783,9 @@ class _MultiLaneMixin:
     def _commit_rec(self, rec: _InflightStep, now: float) -> list[Request]:
         """The emit boundary: one packed pull, then exactly the bookkeeping
         the synchronous loop runs after its step call."""
+        tr = self._trace
+        if tr is not None:
+            tr.emit("async_commit", "scheduler", args={"kind": rec.kind})
         if rec.kind == "spec":
             return self._commit_spec(rec, now)
         p = self._pull(rec.packed)  # [S,4]: nxt | new_pos | keys-as-int32
@@ -826,6 +909,7 @@ class _MultiLaneMixin:
         and the split keys the draft returns are discarded so sampling
         streams are untouched."""
         step = self._draft_dispatch(k)  # cold: slot-hit unless k moved
+        t0_ns = time.perf_counter_ns()
         drafts, self._draft_cache, _, _ = step(
             self._draft_cache,
             self._mirror.get("tok", self._tok),
@@ -835,6 +919,7 @@ class _MultiLaneMixin:
             self._mirror.get("spec_greedy", np.ones(self.num_slots, bool)),
             self._mirror.get("keys", self._keys),
         )
+        self._lane_tick("dr", t0_ns)
         self.stats.draft_steps += 1
         self.stats.note_lane("dr")
         # an inherent sync point: the host packs the verify windows from
@@ -879,7 +964,9 @@ class _MultiLaneMixin:
             [self._verify_len(s, k) for s in range(self.num_slots)], np.int32
         )
         tok = self._pack_verify_tok(drafts, lengths, k)
+        t0_ns = time.perf_counter_ns()
         rows, nxt0, keys = self._verify_call(k, tok, lengths)
+        self._lane_tick(self._verify_lane, t0_ns)
         self.stats.verify_steps += 1
         self.stats.note_lane(self._verify_lane)
         self._mirror.put("keys", keys)
@@ -939,16 +1026,25 @@ class _MultiLaneMixin:
                 self.stats.drafted_tokens += k_s
                 self.stats.accepted_tokens += a
                 self.accept_samples.append(a / k_s)
+                tr = self._trace
+                if tr is not None:
+                    # a < k_s means the target rejected a draft suffix:
+                    # the rollback is the interesting trace event
+                    tr.emit(
+                        "spec_rollback" if a < k_s else "spec_accept",
+                        "lane:" + self._verify_lane,
+                        args={"slot": s, "accepted": a, "k": k_s},
+                    )
             self._pos[s] += len(emitted)
             self._tok[s, 0] = emitted[-1]
             req.tokens.extend(emitted)
             self._after_commit(s, req)
-            if req.t_first is None:
-                req.t_first = now
+            self._note_tokens(req, now)
             self.stats.tokens += len(emitted)
             self.stats.spec_tokens += len(emitted)
             if req.done:
                 req.t_done = now
+                self._note_finish(req, now)
                 finished.append(req)
                 self._release_spec_slot(s)
                 self._mirror.touch("active")
@@ -1001,8 +1097,7 @@ class _MultiLaneMixin:
         self._flip_slots.add(s)  # spec lanes treat it as plain decode today
         self._mirror.touch("active")  # the decoding mask just changed
         req.tokens.append(token)
-        if req.t_first is None:
-            req.t_first = now
+        self._note_tokens(req, now)
         self.stats.tokens += 1
         self._tok[s, 0] = token
         self._mirror.touch("tok")
@@ -1049,9 +1144,11 @@ class ContinuousBatcher(_MultiLaneMixin):
         draft_cache: Any = None,
         spec_k: int = 0,
         async_steps: bool = False,
+        telemetry: Telemetry | None = None,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self._init_telemetry(telemetry)
         self._step = step
         self.num_slots = num_slots
         self.max_len = max_len
@@ -1073,7 +1170,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         self._chunk_bucket = 0
         self._cursor = np.zeros(num_slots, np.int64)  # next prompt index fed
         self._prefilling = np.zeros(num_slots, bool)
-        self.stats = BatcherStats()
+        self.stats = BatcherStats(registry=self.telemetry.registry)
         self._mirror = _DeviceMirror(self.stats)
         self._init_lanes(
             draft_dispatch=draft_dispatch,
@@ -1135,6 +1232,7 @@ class ContinuousBatcher(_MultiLaneMixin):
                 0, 2**32, size=2, dtype=np.uint32
             )
             req.t_admit = now
+            self._note_admit(req, now)
             admitted += 1
         if admitted:
             self._mirror.touch(
@@ -1177,6 +1275,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
         length_dev = jnp.asarray(length)
         keys_dev = jnp.asarray(self._keys)
+        t0_ns = time.perf_counter_ns()
         nxt, self._cache, new_keys = step(
             self._cache,
             tok_dev,
@@ -1186,6 +1285,7 @@ class ContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             keys_dev,
         )
+        self._lane_tick(self._prefill_lane, t0_ns)
         # draft mirror (DESIGN.md §11): the draft stack must ingest the
         # same prompt windows so its KV tracks the committed stream before
         # the draft lane runs; the inputs are the target call's device
@@ -1194,6 +1294,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         if self._spec_on and self._draft_prefill_dispatch is not None:
             dstep = self._draft_prefill_dispatch(bucket)
             self.stats.note_lane("drp")
+            t0_ns = time.perf_counter_ns()
             _, self._draft_cache, _ = dstep(
                 self._draft_cache,
                 tok_dev,
@@ -1203,6 +1304,7 @@ class ContinuousBatcher(_MultiLaneMixin):
                 self._mirror.get("greedy", self._greedy),
                 keys_dev,
             )
+            self._lane_tick("drp", t0_ns)
         # one packed transfer for the chunk's host-bound outputs (§13)
         p = self._pull(pack_step_d2h(nxt, new_keys))
         nxt_host = p[:, 0]
@@ -1222,6 +1324,7 @@ class ContinuousBatcher(_MultiLaneMixin):
                 self._prime_first_token(s, req, int(nxt_host[s]), now)
                 if req.done:
                     req.t_done = now
+                    self._note_finish(req, now)
                     finished.append(req)
                     self._slots[s] = None
                     self._active[s] = False
@@ -1268,6 +1371,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         and parks the step for the pipeline to commit at the next emit
         boundary (DESIGN.md §13). A legacy 4-output step fn (tests inject
         them) degrades async to the synchronous commit."""
+        t0_ns = time.perf_counter_ns()
         out = self._step(
             self._cache,
             self._mirror.get("tok", self._tok),
@@ -1277,6 +1381,7 @@ class ContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        self._lane_tick(self._decode_lane, t0_ns)
         nxt, self._cache, pos, keys = out[:4]
         self.stats.decode_steps += 1
         self.stats.note_lane(self._decode_lane)
@@ -1320,11 +1425,11 @@ class ContinuousBatcher(_MultiLaneMixin):
                 self.stats.prompt_tokens += 1
                 continue
             req.tokens.append(int(nxt_host[s]))
-            if req.t_first is None:
-                req.t_first = now
+            self._note_tokens(req, now)
             self.stats.tokens += 1
             if req.done:
                 req.t_done = now
+                self._note_finish(req, now)
                 finished.append(req)
                 self._slots[s] = None
                 self._active[s] = False
@@ -1408,9 +1513,11 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         draft_cache: Any = None,
         spec_k: int = 0,
         async_steps: bool = False,
+        telemetry: Telemetry | None = None,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self._init_telemetry(telemetry)
         self._dispatch = dispatch_fn
         self.pool = pool
         self.prefix = prefix_cache
@@ -1443,7 +1550,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         self.preempted: list[Request] = []
         self.rejected: list[Request] = []  # oversized: can never be seated
         self._starved_rids: set[int] = set()
-        self.stats = PagedBatcherStats()
+        self.stats = PagedBatcherStats(registry=self.telemetry.registry)
         self._mirror = _DeviceMirror(self.stats)
         self._bt_dirty = True  # host block-table array needs a rebuild
         # full-width packed table for the verify lane (pinned at the
@@ -1538,6 +1645,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         req.preemptions += 1
         self.stats.preemptions += 1
         self.preempted.append(req)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("preempt", "scheduler",
+                    args={"rid": req.rid, "slot": s})
 
     def admit(self, requests: Iterable[Request], now: float = 0.0) -> list:
         """Seat requests in free slots; returns the requests deferred for
@@ -1569,6 +1680,11 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 # than crash the stream (deferring would loop forever)
                 self.stats.rejected_oversize += 1
                 self.rejected.append(req)
+                tr = self._trace
+                if tr is not None:
+                    tr.emit("admission_rejected", "scheduler",
+                            args={"rid": req.rid,
+                                  "need_pages": need_pages})
                 continue
             # Prefix-cache walk: adopt already-populated full prompt pages,
             # but never the page holding the last prompt token — that token
@@ -1592,6 +1708,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                     self._starved_rids.add(req.rid)
                     self.stats.starved_admissions += 1
                 deferred.append(req)
+                tr = self._trace
+                if tr is not None:
+                    tr.emit("admission_deferred", "scheduler",
+                            args={"rid": req.rid})
                 continue
             s = free.pop(0)
             self._slots[s] = req
@@ -1613,6 +1733,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             )
             self._prompt_cached[s] = False
             req.t_admit = now
+            self._note_admit(req, now)
             self._mirror.touch(
                 "tok", "pos", "active", "temps", "greedy", "keys"
             )
@@ -1724,6 +1845,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
         length_dev = jnp.asarray(length)
         keys_dev = jnp.asarray(self._keys)
+        t0_ns = time.perf_counter_ns()
         nxt, self._cache, new_keys = step(
             self._cache,
             tok_dev,
@@ -1734,6 +1856,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             keys_dev,
         )
+        self._lane_tick(self._prefill_lane, t0_ns)
         # draft mirror (DESIGN.md §11): the draft stack ingests the same
         # chunk windows into its dense per-slot cache so its KV tracks the
         # committed stream before the draft lane runs; the inputs are the
@@ -1745,6 +1868,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         if self._spec_on and self._draft_prefill_dispatch is not None:
             dstep = self._draft_prefill_dispatch(bucket)
             self.stats.note_lane("drp")
+            t0_ns = time.perf_counter_ns()
             _, self._draft_cache, _ = dstep(
                 self._draft_cache,
                 tok_dev,
@@ -1754,6 +1878,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 self._mirror.get("greedy", self._greedy),
                 keys_dev,
             )
+            self._lane_tick("drp", t0_ns)
         # one packed transfer for the chunk's host-bound outputs (§13)
         p = self._pull(pack_step_d2h(nxt, new_keys))
         nxt_host = p[:, 0]
@@ -1784,6 +1909,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 self._prime_first_token(s, req, int(nxt_host[s]), now)
                 if req.done:  # new_tokens == 1: the primed token was last
                     req.t_done = now
+                    self._note_finish(req, now)
                     table.release()
                     self._tables[s] = None
                     self._slots[s] = None
@@ -1859,6 +1985,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._bt_host = bt
             self._bt_dirty = False
             self._mirror.touch("bt")
+        t0_ns = time.perf_counter_ns()
         out = step(
             self._cache,
             self._mirror.get("tok", self._tok),
@@ -1869,6 +1996,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._mirror.get("greedy", self._greedy),
             self._mirror.get("keys", self._keys),
         )
+        self._lane_tick(self._decode_lane, t0_ns)
         nxt, self._cache, pos, keys = out[:4]
         self.stats.decode_steps += 1
         self.stats.note_lane(self._decode_lane)
@@ -1920,11 +2048,11 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                     self.prefix.insert(prompt, table.pages[:full])
                 self._prompt_cached[s] = True
             req.tokens.append(int(nxt_host[s]))
-            if req.t_first is None:
-                req.t_first = now
+            self._note_tokens(req, now)
             self.stats.tokens += 1
             if req.done:
                 req.t_done = now
+                self._note_finish(req, now)
                 finished.append(req)
                 table.release()
                 self._tables[s] = None
@@ -2005,15 +2133,26 @@ class PagedContinuousBatcher(_MultiLaneMixin):
 
 
 # ------------------------------------------------------------------ reports
-def latency_report(requests: Sequence[Request], batcher=None) -> dict:
+def latency_report(
+    requests: Sequence[Request], batcher=None, registry=None
+) -> dict:
     """p50/p95/p99 latency + TTFT + throughput over finished requests.
 
     With a ``batcher``, the report also carries the multi-lane telemetry
     (DESIGN.md §11): per-lane step counts, accepted-tokens-per-target-step,
     and acceptance-rate percentiles over the per-slot verify samples — the
-    numbers ``launch/serve.py`` prints for any engine."""
+    numbers ``launch/serve.py`` prints for any engine.
+
+    ``registry`` (a :class:`~repro.core.telemetry.MetricsRegistry`) covers the
+    batcher-less burst path: per-lane call counts are derived from the same
+    ``lane_calls_total`` family the batchers feed, so burst and continuous
+    engines report through one namespace (DESIGN.md §14)."""
     done = [r for r in requests if r.t_done is not None]
     lanes: dict = {}
+    if batcher is None and registry is not None:
+        calls = registry.labeled_values("lane_calls_total", "lane")
+        if calls:
+            lanes["lane_calls"] = calls
     if batcher is not None:
         st = batcher.stats
         lanes["lane_steps"] = st.lane_steps

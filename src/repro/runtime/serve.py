@@ -63,6 +63,7 @@ from repro.configs import ArchConfig
 from repro.core import DispatchPolicy, Dispatcher, bucket_multiple
 from repro.core import lanes as lanes_mod
 from repro.core.lanes import LANES
+from repro.core.telemetry import Telemetry
 from repro.runtime import steps as steps_mod
 from repro.runtime.scheduler import (
     CHUNK_BUCKET_MIN,
@@ -140,16 +141,31 @@ class _WarmCtx:
 class Engine:
     """Single-host reference engine (the multi-pod path reuses steps.py)."""
 
-    def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig):
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        ecfg: EngineConfig,
+        telemetry: Telemetry | None = None,
+    ):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
+        # Flight recorder + metrics registry (DESIGN.md §14). The default
+        # is disabled recording: the registry still accumulates (it backs
+        # latency_report), but the event ring costs one None-check per
+        # call site until ``telemetry.enable()``.
+        self.telemetry = telemetry or Telemetry()
+        self._warm_marks: dict | None = None
+        self._burst_calls = None  # lazy: lane_calls_total{lane="burst"}
+        self._burst_hist = None  # lazy: lane_step_ms{lane="burst"}
         self._decode = Dispatcher(
             self._build,
             name=f"decode@{id(self):x}",
             policy=DispatchPolicy(
                 hysteresis=ecfg.hysteresis, capacity=ecfg.cache_capacity
             ),
+            recorder=self.telemetry.recorder,
         )
         self._current: Callable | None = None  # mirror of the hot slot
         self._current_key: tuple | None = None
@@ -199,7 +215,22 @@ class Engine:
         build/warmup time — instead of falling through a sniffing chain.
         """
         spec = LANES.spec_for(key)
-        return getattr(self, spec.builder)(*spec.coords(key))
+        if not self.telemetry.compile_analysis:
+            return getattr(self, spec.builder)(*spec.coords(key))
+        # Per-key compile report (DESIGN.md §14): build time plus the HLO
+        # cost-model estimate, collected into telemetry.compile_reports
+        # (launch/serve.py --compile-report writes them as one artifact).
+        t0 = time.perf_counter()
+        exe = getattr(self, spec.builder)(*spec.coords(key))
+        build_ms = (time.perf_counter() - t0) * 1e3
+        from repro.hlo_analysis import analyze_compiled
+
+        rep = analyze_compiled(exe)
+        rep["key"] = str(key)
+        rep["lane"] = spec.name
+        rep["build_ms"] = round(build_ms, 3)
+        self.telemetry.compile_reports.append(rep)
+        return exe
 
     def _build_burst_decode(self, batch: int, mode: int) -> Callable:
         cfg, ecfg = self.cfg, self.ecfg
@@ -693,6 +724,36 @@ class Engine:
                 if spec.warmer is not None:
                     getattr(self, spec.warmer)(key, exe, ctx)
 
+    def mark_warm_boundary(self) -> None:
+        """Warmup/steady-state separation (DESIGN.md §14): snapshot the
+        dispatcher's compile/rebind counters and roll the metrics registry
+        into its ``"warmup"`` section, so every post-warmup gate
+        (``compiles_after_warmup == 0``, steady-state latency histograms)
+        reads clean numbers by construction rather than by subtraction at
+        each call site."""
+        st = self._decode.stats
+        self._warm_marks = {"compiles": st.misses, "rebinds": st.rebinds}
+        self.telemetry.registry.rollover("warmup")
+        rec = self.telemetry.trace_or_none()
+        if rec is not None:
+            rec.emit(
+                "warm_boundary",
+                "dispatcher",
+                args={"compiles": st.misses, "rebinds": st.rebinds},
+            )
+
+    @property
+    def post_warmup_compiles(self) -> int:
+        """Dispatcher compiles since the last ``mark_warm_boundary`` (all
+        compiles ever, if no boundary was marked)."""
+        base = (self._warm_marks or {}).get("compiles", 0)
+        return self._decode.stats.misses - base
+
+    @property
+    def post_warmup_rebinds(self) -> int:
+        base = (self._warm_marks or {}).get("rebinds", 0)
+        return self._decode.stats.rebinds - base
+
     def _warm_d2h_packs(self, slots: int) -> None:
         """Warm the packed-d2h helpers (``steps.pack_step_d2h`` /
         ``pack_verify_d2h``) for this slot bucket: they are plain ``jax.jit``
@@ -801,6 +862,7 @@ class Engine:
             )
             jax.block_until_ready(out)
         self.stats["mode_switches"] += 1
+        self.telemetry.registry.inc("mode_switches_total")
         return {
             "bucket": bucket,
             "key": key,
@@ -839,15 +901,33 @@ class Engine:
         # One key per step, derived in the prologue: reusing a single key
         # across steps would correlate every sampled token in the burst.
         step_keys = jax.random.split(base_key, num_tokens)
+        # Burst/continuous report parity (DESIGN.md §14): burst steps feed
+        # the same registry families the batcher lanes do, under the
+        # "burst" lane label. Handles are cached; the loop pays one counter
+        # add, one histogram bisect, and an is-None check per step.
+        if self._burst_calls is None:
+            reg = self.telemetry.registry
+            self._burst_calls = reg.counter("lane_calls_total", lane="burst")
+            self._burst_hist = reg.histogram("lane_step_ms", lane="burst")
+        rec = self.telemetry.trace_or_none()
         out = []
         pos = start_pos
         for i in range(num_tokens):
             # tokens arrive as [B,1]; stub-frontend embeddings as [B,D] and
             # need the singleton seq axis the model expects ([B,1,D]).
             tok2d = tok if self.cfg.input_kind == "tokens" else tok[:, None, :]
+            t0_ns = time.perf_counter_ns()
             tok, cache = exe(
                 self.params, cache, tok2d, jnp.int32(pos), step_keys[i]
             )
+            dt_ns = time.perf_counter_ns() - t0_ns
+            self._burst_calls.inc()
+            self._burst_hist.observe(dt_ns / 1e6)
+            if rec is not None:
+                rec.emit(
+                    "lane_step", "lane:burst", ph="X",
+                    ts_ns=t0_ns, dur_ns=dt_ns, args={"step": i},
+                )
             out.append(tok)
             if on_step is not None:
                 on_step(i, tok)
@@ -923,6 +1003,10 @@ class Engine:
                 draft_dispatch, verify_dispatch, draft_prefill_dispatch,
             ) = self._spec_dispatchers(s, cache_is_paged=False)
 
+        # Warmup is complete: everything from here on is steady state
+        # (DESIGN.md §14). The batcher's registry handles are created after
+        # the rollover, so its counters start from zero by construction.
+        self.mark_warm_boundary()
         return ContinuousBatcher(
             step=bound_step,
             num_slots=s,
@@ -938,6 +1022,7 @@ class Engine:
             draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
+            telemetry=self.telemetry,
         )
 
 
@@ -991,7 +1076,10 @@ class Engine:
         use_spec = (
             self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
-        pool = PagePool(self.pool_pages, ecfg.page_size, kv_dtype=dt)
+        pool = PagePool(
+            self.pool_pages, ecfg.page_size, kv_dtype=dt,
+            telemetry=self.telemetry,
+        )
         prefix = PrefixCache(pool)
         max_pages_per_req = self.max_pages_per_req
         # Registry-driven warmup (DESIGN.md §12): every enabled paged lane
@@ -1060,6 +1148,9 @@ class Engine:
         # batcher threads it through the same cache its steps donate.
         copy_jit = jax.jit(models.copy_cache_pages, donate_argnums=(0,))
 
+        # Warmup is complete: everything from here on is steady state
+        # (DESIGN.md §14).
+        self.mark_warm_boundary()
         return PagedContinuousBatcher(
             dispatch_fn=dispatch,
             pool=pool,
@@ -1080,6 +1171,7 @@ class Engine:
             draft_cache=ctx.draft_cache,
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
+            telemetry=self.telemetry,
         )
 
 
@@ -1105,8 +1197,8 @@ def run_continuous_stream(
         slots=slots, seed=seed, async_steps=async_steps
     )
     clock = clock or Clock()  # ...so served latencies exclude it
-    warm_compiles = eng._decode.stats.misses
-    warm_rebinds = eng._decode.stats.rebinds
+    # continuous() marked the warm boundary (DESIGN.md §14); the report's
+    # post-warmup counters read from it instead of local snapshots.
     q = RequestQueue(requests)
     finished: list[Request] = []
     while q or cb.has_work:
@@ -1137,8 +1229,8 @@ def run_continuous_stream(
         spec_k=cb.spec_k,
         k_bucket_crossings=cb.stats.k_bucket_crossings,
         compiles_total=eng._decode.stats.misses,
-        compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
-        rebinds=eng._decode.stats.rebinds - warm_rebinds,
+        compiles_after_warmup=eng.post_warmup_compiles,
+        rebinds=eng.post_warmup_rebinds,
     )
     return report
 
@@ -1207,7 +1299,7 @@ def run_burst_stream(
                 r.t_first = first_t.get("t", done_t)
                 r.t_done = done_t
                 finished.append(r)
-    report = latency_report(finished)
+    report = latency_report(finished, registry=eng.telemetry.registry)
     report.update(
         engine="burst",
         mode_switches=switches,
@@ -1244,8 +1336,7 @@ def run_paged_stream(
         slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps
     )
     clock = clock or Clock()  # ...so served latencies exclude it
-    warm_compiles = eng._decode.stats.misses
-    warm_rebinds = eng._decode.stats.rebinds
+    # paged_continuous() marked the warm boundary (DESIGN.md §14).
     q = RequestQueue(requests)
     finished: list[Request] = []
     peak_share: dict = {"share_ratio": 1.0, "overcommit_ratio": 0.0,
@@ -1327,7 +1418,7 @@ def run_paged_stream(
         prefix_evictions=cb.pool.stats.prefix_evictions,
         unserved=len(requests) - len(finished),
         compiles_total=eng._decode.stats.misses,
-        compiles_after_warmup=eng._decode.stats.misses - warm_compiles,
-        rebinds=eng._decode.stats.rebinds - warm_rebinds,
+        compiles_after_warmup=eng.post_warmup_compiles,
+        rebinds=eng.post_warmup_rebinds,
     )
     return report

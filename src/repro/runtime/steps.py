@@ -8,10 +8,12 @@ target goes through (DESIGN.md §2).
 from __future__ import annotations
 
 import functools
+import time
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import models, perf
@@ -266,6 +268,26 @@ def pack_verify_d2h(rows, nxt0, keys):
     """[S,K+1] rows + [S] next0 + [S,2] uint32 keys -> [S,K+4] int32."""
     k32 = jax.lax.bitcast_convert_type(keys, jnp.int32)
     return jnp.concatenate([rows, nxt0[:, None], k32], axis=1)
+
+
+def pull_host(dev, recorder=None) -> tuple[np.ndarray, int]:
+    """The d2h pull boundary: materialise a packed device array on the host.
+
+    This is *the* sync point of the step pipeline (DESIGN.md §13) — on the
+    async path the only place the host ever blocks on the device — so it is
+    also where the flight recorder measures device wait. Returns
+    ``(host_array, elapsed_ns)``; when ``recorder`` is an enabled
+    ``FlightRecorder`` a "d2h" span lands on the scheduler track with the
+    transfer size."""
+    t0 = time.perf_counter_ns()
+    out = np.asarray(dev)
+    dt = time.perf_counter_ns() - t0
+    if recorder is not None and recorder.enabled:
+        recorder.emit(
+            "d2h", "scheduler", ph="X", ts_ns=t0, dur_ns=dt,
+            args={"nbytes": int(out.nbytes), "shape": list(out.shape)},
+        )
+    return out, dt
 
 
 def _sample_rows(logits, temps, greedy, keys):
