@@ -2,13 +2,13 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv smoke-async smoke-telemetry bench-serving bench-kvcache \
-	bench-prefill bench-specdec bench-quantkv bench-telemetry bench-check \
-	bench examples
+	smoke-quantkv smoke-async smoke-telemetry smoke-chaos bench-serving \
+	bench-kvcache bench-prefill bench-specdec bench-quantkv bench-telemetry \
+	bench-overload bench-check bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
 verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv smoke-async smoke-telemetry
+	smoke-quantkv smoke-async smoke-telemetry smoke-chaos
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -74,6 +74,21 @@ smoke-telemetry:
 		--trace-out trace_smoke.json --metrics-out metrics_smoke.prom
 	$(PY) scripts/check_trace.py trace_smoke.json metrics_smoke.prom
 
+# CPU smoke: overload hardening + chaos (DESIGN.md §15) — bounded
+# admission, deadlines, the degradation ladder, and a seeded fault plan
+# across {sync,async} x {spec on,off}; the dense arms of the chaos matrix
+# run in tier-1 via tests/test_faults.py.
+smoke-chaos:
+	for async_flag in "" "--async-steps"; do \
+		for speck in 0 2; do \
+			$(PY) -m repro.launch.serve --smoke --requests 10 --rate 500 \
+				--tokens-mean 5 --max-len 64 --engine overload \
+				--page-size 8 --num-pages 28 --spec-k $$speck --sample-frac 0 \
+				--capacity 12 --shed-policy drop-oldest --deadline 2.0 \
+				--degrade --chaos-seed 0 $$async_flag || exit 1; \
+		done; \
+	done
+
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters, plus the
 # sync-vs-async step-pipeline pair on the saturated stream).
@@ -106,11 +121,17 @@ bench-quantkv:
 bench-telemetry:
 	$(PY) -m benchmarks.run --only telemetry --fast
 
+# Overload hardening: writes BENCH_overload.json (goodput vs the
+# unbounded baseline at >=2x capacity, bounded admitted p95, ladder
+# down+up, chaos containment, bitwise-inert identity — DESIGN.md §15).
+bench-overload:
+	$(PY) -m benchmarks.run --only overload --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
 	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
 		BENCH_prefill.json BENCH_specdec.json BENCH_quantkv.json \
-		BENCH_telemetry.json
+		BENCH_telemetry.json BENCH_overload.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

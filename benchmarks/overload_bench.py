@@ -1,0 +1,244 @@
+"""Overload-hardening benchmark (DESIGN.md §15) — the robustness gate.
+
+Under sustained overload an unbounded queue is a latency bomb: every
+admitted request's queue wait grows without bound, so the engine spends its
+whole capacity serving requests whose callers gave up long ago — goodput
+(requests finished *within their SLO*) collapses even though raw
+throughput looks healthy. The hardened loop bounds admission, sheds stale
+work, cancels past-deadline streams, and steps down the degradation ladder
+— all over already-warmed dispatch keys.
+
+This bench writes ``BENCH_overload.json`` for ``scripts/bench_check.py``:
+
+* **calibrate**: an unloaded stream measures the engine's service rate and
+  unloaded latency; the SLO and the overload arrival rate (``rate_factor``
+  × service rate, >= the issue's 2× floor) derive from it.
+* **baseline**: the same overloaded arrivals through the unbounded,
+  un-hardened loop — goodput is requests that happened to finish within
+  the SLO.
+* **hardened**: bounded admission (drop-oldest) + queue TTL + per-request
+  decode deadlines + the degradation ladder. Gates: goodput >= 2× the
+  baseline, admitted-request p95 within the SLO (bounded by construction:
+  past-deadline streams are cancelled, not served late), at least one
+  ladder step down *and* one recovery back up, zero post-warmup compiles
+  across every transition.
+* **identity**: the hardened driver with every knob at its default must be
+  *bitwise* the pre-§15 engine — same greedy token streams as
+  ``run_paged_stream`` on the same engine.
+* **chaos**: one deterministic ``FaultPlan`` spanning all five sites; every
+  injected site must be detected and contained, with zero blast radius
+  (every request not explicitly shed/cancelled/failed finishes) and zero
+  post-warmup compiles. The full {dense,paged} × {sync,async} × {spec
+  on,off} matrix lives in ``tests/test_faults.py``; the bench keeps one
+  armed configuration honest end to end.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.core.faults import Fault, FaultPlan
+from repro.runtime.scheduler import poisson_arrivals
+from repro.runtime.serve import (
+    Engine,
+    EngineConfig,
+    run_overload_stream,
+    run_paged_stream,
+)
+
+
+def _traffic(n, rate, *, seed, vocab, tokens_mean=8.0, max_new=24,
+             slo_s=None):
+    reqs = poisson_arrivals(
+        n, rate, seed=seed, tokens_mean=tokens_mean, tokens_max=max_new,
+        sample_frac=0.25, vocab=vocab,
+    )
+    if slo_s is not None:
+        for r in reqs:
+            r.ttl_s = slo_s  # queue-wait half of the deadline
+            r.deadline_s = r.arrival_s + slo_s  # decode half
+    return reqs
+
+
+def _goodput(report, finished_reqs, slo_s) -> float:
+    good = sum(
+        1
+        for r in finished_reqs
+        if r.t_done is not None and r.t_done - r.arrival_s <= slo_s
+    )
+    span = report.get("span_s") or 0.0
+    return good / span if span > 0 else 0.0
+
+
+def _greedy_tokens(reqs) -> dict:
+    return {r.rid: list(r.tokens) for r in reqs if r.greedy and r.done}
+
+
+def overload_comparison(
+    n_requests: int = 40,
+    *,
+    slots: int = 4,
+    rate_factor: float = 3.0,
+    seed: int = 0,
+    fast: bool = False,
+) -> dict:
+    reset_entry_points()
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    ecfg = dict(
+        max_len=64, batch_quantum=2, max_batch=slots, page_size=8,
+        num_pages=48, prefill_chunk=8, spec_k=2, draft_layers=1,
+    )
+
+    # ---------------------------------------------- calibrate + baseline
+    eng = Engine(cfg, params, EngineConfig(**ecfg))
+    # Unloaded latency: sparse arrivals (the virtual clock jumps the idle
+    # gaps) — the p95 an admitted request should see with no queueing.
+    unloaded_reqs = _traffic(8, 2.0, seed=seed, vocab=cfg.vocab_size)
+    unloaded = run_paged_stream(eng, unloaded_reqs, slots=slots)
+    # Service rate: a saturated stream (everything due at once) measures
+    # the engine's capacity in requests/s.
+    cal_reqs = _traffic(24, 1000.0, seed=seed + 9, vocab=cfg.vocab_size)
+    cal = run_paged_stream(eng, cal_reqs, slots=slots)
+    service_rate = cal["finished"] / cal["span_s"] if cal["span_s"] else 1.0
+    # SLO: generous against the *unloaded* engine (1.5x its p95 plus a few
+    # service intervals of queueing headroom), hopeless against an
+    # unbounded overload queue whose wait grows with every arrival.
+    slo_s = 1.5 * unloaded["p95_ms"] / 1e3 + 3.0 / max(service_rate, 1e-9)
+    offered_rate = rate_factor * service_rate
+    # Size the trace so the unbounded queue's terminal wait provably blows
+    # through the SLO: backlog grows at (1 - 1/factor) of arrivals, so
+    # n * (1 - 1/factor) / service_rate >= 2.5 * SLO forces the contrast.
+    n_requests = int(
+        min(
+            max(
+                n_requests,
+                2.5 * slo_s * service_rate / max(1.0 - 1.0 / rate_factor,
+                                                 0.1),
+            ),
+            160 if fast else 320,
+        )
+    )
+
+    base_reqs = _traffic(
+        n_requests, offered_rate, seed=seed + 1, vocab=cfg.vocab_size
+    )
+    baseline = run_paged_stream(eng, base_reqs, slots=slots)
+    baseline_goodput = _goodput(baseline, base_reqs, slo_s)
+
+    # ------------------------------------------------- identity (inert)
+    ident_a = _traffic(
+        n_requests, offered_rate, seed=seed + 2, vocab=cfg.vocab_size
+    )
+    rep_a = run_paged_stream(eng, ident_a, slots=slots)
+    ident_b = _traffic(
+        n_requests, offered_rate, seed=seed + 2, vocab=cfg.vocab_size
+    )
+    rep_b = run_overload_stream(eng, ident_b, slots=slots)
+    identical = _greedy_tokens(ident_a) == _greedy_tokens(ident_b)
+    eng.close()
+
+    # ------------------------------------------------------- hardened
+    reset_entry_points()
+    eng2 = Engine(
+        cfg, params, EngineConfig(**ecfg, kv_dtypes=("int8",))
+    )
+    hard_reqs = _traffic(
+        n_requests, offered_rate, seed=seed + 1, vocab=cfg.vocab_size,
+        slo_s=slo_s,
+    )
+    hardened = run_overload_stream(
+        eng2, hard_reqs, slots=slots,
+        capacity=2 * slots, shed_policy="drop-oldest",
+        queue_ttl_s=slo_s, degrade=True,
+    )
+    hardened_goodput = _goodput(
+        hardened,
+        [r for r in hard_reqs if r.done and not r.cancelled],
+        slo_s,
+    )
+    downs = sum(
+        1 for t in hardened["degrade_transitions"] if t["why"] != "recovered"
+    )
+    ups = sum(
+        1 for t in hardened["degrade_transitions"] if t["why"] == "recovered"
+    )
+    eng2.close()
+
+    # --------------------------------------------------------- chaos
+    reset_entry_points()
+    eng3 = Engine(cfg, params, EngineConfig(**ecfg))
+    plan = FaultPlan([
+        Fault(site="build", at=2),
+        Fault(site="step_output", at=6, slot=1),
+        Fault(site="step_output", at=14, slot=0),
+        Fault(site="pool_alloc", at=12),
+        Fault(site="d2h_stall", at=40, stall_s=0.3),
+        Fault(site="heartbeat", at=10, span=6),
+    ])
+    chaos_reqs = _traffic(
+        n_requests // 2, offered_rate, seed=seed + 3, vocab=cfg.vocab_size
+    )
+    chaos = run_overload_stream(
+        eng3, chaos_reqs, slots=slots, degrade=True, faults=plan,
+        heartbeat_timeout_steps=2.0,
+    )
+    fr = chaos["faults"]
+    sites_ok = {
+        site: (fr["detected"].get(site, 0) > 0
+               and fr["contained"].get(site, 0) > 0)
+        for site in fr["injected"]
+    }
+    eng3.close()
+
+    acceptance = {
+        "offered_over_service": round(rate_factor, 2),
+        "slo_ms": round(slo_s * 1e3, 1),
+        "baseline_goodput_rps": round(baseline_goodput, 3),
+        "hardened_goodput_rps": round(hardened_goodput, 3),
+        "goodput_ratio": round(
+            hardened_goodput / baseline_goodput, 3
+        ) if baseline_goodput > 0 else float("inf"),
+        "goodput_ok": (
+            baseline_goodput == 0.0
+            or hardened_goodput >= 2.0 * baseline_goodput
+        ),
+        "hardened_p95_ms": round(hardened.get("p95_ms", 0.0), 1),
+        "p95_bounded": hardened.get("p95_ms", 0.0) <= slo_s * 1e3,
+        "ladder_down_transitions": downs,
+        "ladder_up_transitions": ups,
+        "ladder_exercised": downs >= 1 and ups >= 1,
+        "greedy_bitwise_identical": identical,
+        "chaos_sites_ok": sites_ok,
+        "chaos_all_contained": all(sites_ok.values()) and bool(sites_ok),
+        "chaos_unserved": chaos["unserved"],
+        "chaos_zero_blast_radius": chaos["unserved"] == 0,
+        "zero_post_warmup_compiles": (
+            baseline.get("compiles_after_warmup") == 0
+            and hardened.get("compiles_after_warmup") == 0
+            and chaos.get("compiles_after_warmup") == 0
+            and rep_b.get("compiles_after_warmup") == 0
+        ),
+    }
+    return {
+        "meta": {
+            "arch": cfg.name,
+            "n_requests": n_requests,
+            "slots": slots,
+            "rate_factor": rate_factor,
+            "service_rate_rps": round(service_rate, 3),
+            "offered_rate_rps": round(offered_rate, 3),
+            "seed": seed,
+        },
+        "unloaded": unloaded,
+        "calibrate": cal,
+        "baseline": baseline,
+        "hardened": hardened,
+        "identity": {"paged": rep_a, "overload_inert": rep_b},
+        "chaos": chaos,
+        "acceptance": acceptance,
+    }

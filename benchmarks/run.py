@@ -198,6 +198,39 @@ def _telemetry_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _overload_suite(fast: bool, json_path: str) -> list[str]:
+    from . import overload_bench
+
+    res = overload_bench.overload_comparison(fast=fast)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("baseline", "hardened"):
+        r = res[kind]
+        rows.append(
+            f"overload/{kind}/finished,{r.get('finished', 0)},"
+            f"p95_ms={r.get('p95_ms', 0.0):.1f};"
+            f"shed={r.get('shed', 'n/a')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    a = res["acceptance"]
+    rows.append(
+        f"overload/goodput_ratio,{a['goodput_ratio']},"
+        f"baseline_rps={a['baseline_goodput_rps']};"
+        f"hardened_rps={a['hardened_goodput_rps']};"
+        f"slo_ms={a['slo_ms']}"
+    )
+    rows.append(
+        f"overload/ladder,{a['ladder_down_transitions']},"
+        f"up={a['ladder_up_transitions']};"
+        f"identical={a['greedy_bitwise_identical']};"
+        f"chaos_contained={a['chaos_all_contained']};"
+        f"unserved={a['chaos_unserved']}"
+    )
+    rows.append(f"overload/json,0.0,written={json_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -208,6 +241,7 @@ def main() -> None:
     ap.add_argument("--specdec-json", default="BENCH_specdec.json")
     ap.add_argument("--quantkv-json", default="BENCH_quantkv.json")
     ap.add_argument("--telemetry-json", default="BENCH_telemetry.json")
+    ap.add_argument("--overload-json", default="BENCH_overload.json")
     args = ap.parse_args()
 
     from . import (
@@ -239,6 +273,7 @@ def main() -> None:
         "specdec": lambda: _specdec_suite(args.fast, args.specdec_json),
         "quantkv": lambda: _quantkv_suite(args.fast, args.quantkv_json),
         "telemetry": lambda: _telemetry_suite(args.fast, args.telemetry_json),
+        "overload": lambda: _overload_suite(args.fast, args.overload_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

@@ -268,6 +268,58 @@ def check_telemetry(data: dict) -> list[str]:
     return errors
 
 
+def check_overload(data: dict) -> list[str]:
+    errors = []
+    a = data.get("acceptance", {})
+    factor = data.get("meta", {}).get("rate_factor", 0)
+    if not factor >= 2.0:
+        errors.append(
+            f"overload: offered rate is {factor}x service rate; the gate "
+            f"requires >= 2x capacity (ISSUE 8)"
+        )
+    if a.get("goodput_ok") is not True:
+        errors.append(
+            f"overload: hardened goodput "
+            f"{a.get('hardened_goodput_rps')} rps must be >= 2x the "
+            f"unbounded baseline {a.get('baseline_goodput_rps')} rps"
+        )
+    if a.get("p95_bounded") is not True:
+        errors.append(
+            f"overload: admitted-request p95 "
+            f"{a.get('hardened_p95_ms')}ms exceeds the SLO "
+            f"{a.get('slo_ms')}ms — deadlines must bound served latency"
+        )
+    if a.get("ladder_exercised") is not True:
+        errors.append(
+            f"overload: degradation ladder must step down and recover "
+            f"(down={a.get('ladder_down_transitions')}, "
+            f"up={a.get('ladder_up_transitions')})"
+        )
+    if a.get("greedy_bitwise_identical") is not True:
+        errors.append(
+            "overload: with no faults and no shedding the hardened loop "
+            "must emit bitwise-identical greedy streams to the pre-§15 "
+            "engine"
+        )
+    if a.get("chaos_all_contained") is not True:
+        errors.append(
+            f"overload: every injected fault site must be detected and "
+            f"contained; got {a.get('chaos_sites_ok')}"
+        )
+    if a.get("chaos_zero_blast_radius") is not True:
+        errors.append(
+            f"overload: chaos run left {a.get('chaos_unserved')} requests "
+            f"unserved — containment must not kill co-batched requests"
+        )
+    if a.get("zero_post_warmup_compiles") is not True:
+        errors.append(
+            "overload: post-warmup compiles must stay 0 across every "
+            "degradation/recovery and fault transition (semi-static "
+            "actuations rebind, never compile)"
+        )
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
@@ -275,6 +327,7 @@ CHECKS = {
     "BENCH_specdec.json": check_specdec,
     "BENCH_quantkv.json": check_quantkv,
     "BENCH_telemetry.json": check_telemetry,
+    "BENCH_overload.json": check_overload,
 }
 
 

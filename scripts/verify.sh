@@ -54,3 +54,18 @@ python -m repro.launch.serve --smoke --requests 12 --rate 200 \
   --page-size 8 --num-pages 20 --prefix-len 8 \
   --trace-out trace_smoke.json --metrics-out metrics_smoke.prom
 python scripts/check_trace.py trace_smoke.json metrics_smoke.prom
+
+echo "== overload hardening + chaos smoke matrix (CPU) =="
+# {sync,async} x {spec on,off} through the hardened driver with bounded
+# admission, deadlines, the degradation ladder, and a seeded fault plan
+# (DESIGN.md §15). The dense arms of the chaos matrix run in tier-1 via
+# tests/test_faults.py.
+for async_flag in "" "--async-steps"; do
+  for speck in 0 2; do
+    python -m repro.launch.serve --smoke --requests 10 --rate 500 \
+      --tokens-mean 5 --max-len 64 --engine overload \
+      --page-size 8 --num-pages 28 --spec-k "$speck" --sample-frac 0 \
+      --capacity 12 --shed-policy drop-oldest --deadline 2.0 --degrade \
+      --chaos-seed 0 $async_flag
+  done
+done

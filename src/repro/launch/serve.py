@@ -11,13 +11,16 @@ latency percentiles, throughput, and cold-path activity (compiles, rebinds).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 
 import jax
 
 from repro import models
 from repro.configs import get_config
+from repro.core.faults import FaultPlan
 from repro.core.telemetry import Telemetry
+from repro.runtime.admission import SHED_POLICIES
 from repro.runtime.scheduler import (
     attach_distinct_prompts,
     poisson_arrivals,
@@ -28,6 +31,7 @@ from repro.runtime.serve import (
     EngineConfig,
     run_burst_stream,
     run_continuous_stream,
+    run_overload_stream,
     run_paged_stream,
 )
 from repro.runtime.tracing import write_trace
@@ -112,6 +116,36 @@ def _print_report(rep: dict) -> None:
             if k in rep
         }
         print(f"[serve/paged] kvcache: {paged}", flush=True)
+    if rep.get("engine") == "overload":  # hardening surfaces (DESIGN.md §15)
+        hard = {
+            k: rep[k]
+            for k in (
+                "capacity",
+                "shed_policy",
+                "shed",
+                "cancelled",
+                "failed",
+                "deadline_missed",
+                "stragglers",
+                "preemptions",
+                "unserved",
+                "degrade_rung",
+            )
+            if rep.get(k) is not None
+        }
+        print(f"[serve/overload] hardening: {hard}", flush=True)
+        if rep.get("degrade_transitions"):
+            print(
+                f"[serve/overload] ladder: {rep['degrade_transitions']}",
+                flush=True,
+            )
+        if rep.get("faults"):
+            print(f"[serve/overload] faults: {rep['faults']}", flush=True)
+    if rep.get("robustness"):  # registry-derived accounting (DESIGN.md §15)
+        print(
+            f"[serve/{rep['engine']}] robustness: {rep['robustness']}",
+            flush=True,
+        )
 
 
 def main(argv: list[str] | None = None) -> dict:
@@ -129,7 +163,8 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--slots", type=int, default=0,
                     help="continuous-batching slots (0 = engine max_batch)")
     ap.add_argument("--engine",
-                    choices=("continuous", "burst", "paged", "both", "all"),
+                    choices=("continuous", "burst", "paged", "overload",
+                             "both", "all"),
                     default="both")
     ap.add_argument("--page-size", type=int, default=8,
                     help="paged engine: tokens per KV page")
@@ -164,6 +199,31 @@ def main(argv: list[str] | None = None) -> dict:
                          "on device; d2h syncs land at token-emit "
                          "boundaries only. Greedy streams are bitwise "
                          "identical to the synchronous loop")
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="overload engine: bounded admission-queue "
+                         "capacity (0 = unbounded; DESIGN.md §15)")
+    ap.add_argument("--shed-policy", choices=SHED_POLICIES,
+                    default="reject-new",
+                    help="overload engine: what to drop when the bounded "
+                         "queue is full")
+    ap.add_argument("--queue-ttl", type=float, default=0.0,
+                    help="overload engine: shed requests that waited in "
+                         "queue longer than this many seconds (0 = off)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="overload engine: per-request SLO in seconds — "
+                         "bounds queue wait (ttl) and sets the absolute "
+                         "decode deadline past which a seated request is "
+                         "cancelled (0 = off)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="overload engine: enable the semi-static "
+                         "degradation ladder (spec off -> chunk-min -> "
+                         "budget-trim -> int8 pool), hysteresis-guarded "
+                         "rebinds over warmed keys, never a compile")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="overload engine: arm FaultPlan.random(SEED) — "
+                         "deterministic fault injection across the five "
+                         "sites, with detection/containment accounting "
+                         "in the report")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true",
                     help="emit the reports as one JSON object on stdout")
@@ -196,10 +256,18 @@ def main(argv: list[str] | None = None) -> dict:
             "--spec-k requires --engine continuous or paged "
             "(the burst driver has no draft/verify lanes)"
         )
-    if args.kv_dtype != "fp32" and args.engine != "paged":
+    if args.kv_dtype != "fp32" and args.engine not in ("paged", "overload"):
         ap.error(
-            "--kv-dtype requires --engine paged (the dense cache has no "
-            "page pool to quantise)"
+            "--kv-dtype requires --engine paged or overload (the dense "
+            "cache has no page pool to quantise)"
+        )
+    if args.engine != "overload" and (
+        args.capacity or args.queue_ttl or args.deadline or args.degrade
+        or args.chaos_seed is not None
+    ):
+        ap.error(
+            "--capacity/--queue-ttl/--deadline/--degrade/--chaos-seed "
+            "require --engine overload (the hardened serving loop)"
         )
     if args.async_steps and args.engine in ("burst", "both", "all"):
         ap.error(
@@ -267,61 +335,121 @@ def main(argv: list[str] | None = None) -> dict:
         compile_analysis=args.compile_report is not None,
     )
 
+    # Every engine run is close-guarded and the whole sweep is
+    # interrupt-guarded: a Ctrl-C mid-stream keeps the reports of every
+    # completed engine and still flushes the telemetry artifacts
+    # (--trace-out/--metrics-out/--compile-report) on the way out.
     reports = {}
-    if args.engine in ("continuous", "both", "all"):
-        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
-        reports["continuous"] = run_continuous_stream(
-            eng,
-            traffic(args.seed),
-            slots=args.slots or None,
-            async_steps=args.async_steps,
-        )
-        eng.close()
-    if args.engine in ("burst", "both", "all"):
-        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
-        reports["burst"] = run_burst_stream(eng, traffic(args.seed))
-        eng.close()
-    if args.engine in ("paged", "all"):
-        eng = Engine(cfg, params, ecfg, telemetry=telemetry)
-        # --prompt-len switches the paged stream from the shared-prefix
-        # workload (DESIGN.md §9) to long distinct prompts (DESIGN.md §10)
-        paged_reqs = (
-            traffic(args.seed) if args.prompt_len > 0
-            else prefix_traffic(args.seed)
-        )
-        reports["paged"] = run_paged_stream(
-            eng,
-            paged_reqs,
-            slots=args.slots or None,
-            async_steps=args.async_steps,
-        )
-        eng.close()
-
-    if args.trace_out:
-        trace = write_trace(args.trace_out, telemetry.recorder)
+    interrupted = False
+    try:
+        if args.engine in ("continuous", "both", "all"):
+            eng = Engine(cfg, params, ecfg, telemetry=telemetry)
+            try:
+                reports["continuous"] = run_continuous_stream(
+                    eng,
+                    traffic(args.seed),
+                    slots=args.slots or None,
+                    async_steps=args.async_steps,
+                )
+            finally:
+                eng.close()
+        if args.engine in ("burst", "both", "all"):
+            eng = Engine(cfg, params, ecfg, telemetry=telemetry)
+            try:
+                reports["burst"] = run_burst_stream(eng, traffic(args.seed))
+            finally:
+                eng.close()
+        if args.engine in ("paged", "all"):
+            eng = Engine(cfg, params, ecfg, telemetry=telemetry)
+            try:
+                # --prompt-len switches the paged stream from the
+                # shared-prefix workload (DESIGN.md §9) to long distinct
+                # prompts (DESIGN.md §10)
+                paged_reqs = (
+                    traffic(args.seed) if args.prompt_len > 0
+                    else prefix_traffic(args.seed)
+                )
+                reports["paged"] = run_paged_stream(
+                    eng,
+                    paged_reqs,
+                    slots=args.slots or None,
+                    async_steps=args.async_steps,
+                )
+            finally:
+                eng.close()
+        if args.engine == "overload":
+            over_cfg = ecfg
+            if args.degrade and "int8" not in (
+                ecfg.kv_dtype, *ecfg.kv_dtypes
+            ):
+                # warm the int8 standby pool so the ladder's bottom rung
+                # (admission-routed pool flip) is expressible
+                over_cfg = dataclasses.replace(
+                    ecfg, kv_dtypes=(*ecfg.kv_dtypes, "int8")
+                )
+            eng = Engine(cfg, params, over_cfg, telemetry=telemetry)
+            try:
+                reqs = traffic(args.seed)
+                if args.deadline > 0:
+                    for r in reqs:
+                        r.ttl_s = args.deadline
+                        r.deadline_s = r.arrival_s + args.deadline
+                plan = (
+                    FaultPlan.random(args.chaos_seed)
+                    if args.chaos_seed is not None else None
+                )
+                reports["overload"] = run_overload_stream(
+                    eng,
+                    reqs,
+                    slots=args.slots or None,
+                    async_steps=args.async_steps,
+                    kv_dtype=args.kv_dtype,
+                    capacity=args.capacity or None,
+                    shed_policy=args.shed_policy,
+                    queue_ttl_s=args.queue_ttl or None,
+                    degrade=args.degrade,
+                    faults=plan,
+                )
+            finally:
+                eng.close()
+    except KeyboardInterrupt:
+        interrupted = True
         print(
-            f"[serve] trace: {args.trace_out} "
-            f"({len(trace['traceEvents'])} events, "
-            f"{telemetry.recorder.dropped} dropped) — open in "
-            f"ui.perfetto.dev",
+            "[serve] interrupted — engines drained; writing telemetry "
+            "artifacts before exit",
             flush=True,
         )
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as fh:
-            if args.metrics_out.endswith(".prom"):
-                fh.write(telemetry.registry.to_prometheus())
-            else:
-                fh.write(telemetry.metrics_json())
-        print(f"[serve] metrics: {args.metrics_out}", flush=True)
-    if args.compile_report:
-        with open(args.compile_report, "w") as fh:
-            json.dump(telemetry.compile_reports, fh, indent=2)
+    finally:
+        if args.trace_out:
+            trace = write_trace(args.trace_out, telemetry.recorder)
+            print(
+                f"[serve] trace: {args.trace_out} "
+                f"({len(trace['traceEvents'])} events, "
+                f"{telemetry.recorder.dropped} dropped) — open in "
+                f"ui.perfetto.dev",
+                flush=True,
+            )
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as fh:
+                if args.metrics_out.endswith(".prom"):
+                    fh.write(telemetry.registry.to_prometheus())
+                else:
+                    fh.write(telemetry.metrics_json())
+            print(f"[serve] metrics: {args.metrics_out}", flush=True)
+        if args.compile_report:
+            with open(args.compile_report, "w") as fh:
+                json.dump(telemetry.compile_reports, fh, indent=2)
+            print(
+                f"[serve] compile report: {args.compile_report} "
+                f"({len(telemetry.compile_reports)} keys)",
+                flush=True,
+            )
+
+    if interrupted:
         print(
-            f"[serve] compile report: {args.compile_report} "
-            f"({len(telemetry.compile_reports)} keys)",
+            f"[serve] partial results: {sorted(reports)} completed",
             flush=True,
         )
-
     if args.json:
         print(json.dumps(reports, indent=2))
     else:

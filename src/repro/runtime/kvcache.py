@@ -140,6 +140,15 @@ class PagePool:
         # path pays one compare when telemetry is off.
         self.telemetry = telemetry
         self._trace = telemetry.trace_or_none() if telemetry else None
+        self._faults = None  # core.faults.FaultPlan ("pool_alloc" site)
+
+    def attach_faults(self, plan) -> None:
+        """Arm a ``core.faults.FaultPlan`` at the ``pool_alloc`` site: an
+        injected fault makes one allocation report the pool dry. No caller
+        can tell injected exhaustion from real exhaustion, by construction
+        — containment is the pre-existing evict -> preempt -> defer
+        admission machinery, exercised verbatim."""
+        self._faults = plan
 
     def _occupancy_sample(self, rec) -> None:
         rec.counter(
@@ -188,6 +197,17 @@ class PagePool:
     def alloc(self) -> Optional[int]:
         """Pop a free page with ref=1, or None when the pool is dry."""
         rec = self._trace
+        if self._faults is not None:
+            f = self._faults.fire("pool_alloc")
+            if f is not None:
+                # injected transient exhaustion: indistinguishable from a
+                # genuinely dry pool, so callers' recovery paths apply
+                self.stats.alloc_failures += 1
+                self._faults.note_detected("pool_alloc")
+                if rec is not None:
+                    rec.emit("alloc_failure", "page-pool",
+                             args={"injected": True})
+                return None
         if not self._free:
             self.stats.alloc_failures += 1
             if rec is not None:

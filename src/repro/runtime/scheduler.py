@@ -148,6 +148,14 @@ class Request:
     arrival_s: float = 0.0
     prompt: tuple = ()
     priority: int = 0
+    # Deadlines (DESIGN.md §15). ``ttl_s`` bounds *queue wait*: a request
+    # still queued ttl_s after arrival is shed before admission
+    # (runtime.admission). ``deadline_s`` is the absolute virtual-clock
+    # completion deadline: a seated request past it is cancelled mid-stream,
+    # its slot/pages released. None = no deadline (the default keeps
+    # un-hardened streams byte-identical to the pre-§15 engine).
+    ttl_s: float | None = None
+    deadline_s: float | None = None
     # Filled by the runtime:
     tokens: list = field(default_factory=list)
     t_admit: float | None = None
@@ -155,6 +163,10 @@ class Request:
     t_last: float | None = None  # last emit (inter-token histogram anchor)
     t_done: float | None = None
     preemptions: int = 0
+    shed_reason: str | None = None  # why admission dropped it (§15)
+    cancelled: bool = False  # cancelled mid-stream (deadline or explicit)
+    error: str | None = None  # failed after fault containment gave up
+    faults: int = 0  # times this request's slot was quarantined
 
     def __post_init__(self) -> None:
         if self.prompt:
@@ -431,6 +443,16 @@ class BatcherStats:
     accepted_tokens: int = 0
     spec_tokens: int = 0
     k_bucket_crossings: int = 0
+    # Robustness accounting (DESIGN.md §15): mid-stream cancellations (by
+    # deadline or explicit cancel), step-time stragglers flagged by an
+    # attached watchdog, and fault-containment outcomes (quarantined slots
+    # whose requests were re-admitted vs failed).
+    cancelled: int = 0
+    deadline_missed: int = 0
+    stragglers: int = 0
+    faults_detected: int = 0
+    faults_contained: int = 0
+    faults_failed: int = 0
     # The metrics registry (core.telemetry, DESIGN.md §14) this batcher's
     # per-lane counters and latency histograms live in. ``lane_calls`` is
     # *derived* from it — the registry's lane-label namespace ("cb"/"cbp"/
@@ -636,6 +658,24 @@ class _MultiLaneMixin:
         self._k_bucket: int | None = None  # unset until the first spec step
         self._chunk_slots: set[int] = set()
         self._flip_slots: set[int] = set()
+        # Overload/fault hardening (DESIGN.md §15). All inert by default:
+        # un-attached, each costs one None-check (or, for deadlines, one
+        # bool check) per step — clean streams stay bitwise identical.
+        self._watchdog = None  # ft.failover.StepTimeWatchdog
+        self._on_straggler: Callable[[float], None] | None = None
+        self._faults = None  # core.faults.FaultPlan
+        self._stall_pending = False  # an injected d2h stall awaits detection
+        self._has_deadlines = False  # any seated request carries deadline_s
+        self._fault_retry_limit = 1  # re-admissions before a request fails
+        self.cancelled_requests: list[Request] = []
+        self.failed_requests: list[Request] = []
+        self.requeued: list[Request] = []  # quarantined, to be re-admitted
+        # Launch-time knob ceilings: ``set_knobs`` (the degradation ladder's
+        # actuation surface) may move spec_k/prefill_chunk/token_budget only
+        # within the ranges whose dispatch keys warmup actually compiled.
+        self._spec_max = self.spec_k
+        self._chunk_max = self.prefill_chunk
+        self._budget_max = self.token_budget
         # per-slot, per-verify a/k acceptance samples; bounded so a long
         # serving loop doesn't grow host memory (recent window is what the
         # report's percentiles should reflect anyway)
@@ -652,6 +692,11 @@ class _MultiLaneMixin:
         exactly how long the host sat blocked on the device,
         ``d2h_transfers`` counts every transfer the step loop actually
         paid for, and (when recording) each pull lands as a "d2h" span."""
+        if self._faults is not None:
+            f = self._faults.fire("d2h_stall")
+            if f is not None:
+                time.sleep(f.stall_s)  # simulated interconnect stall
+                self._stall_pending = True  # the watchdog should flag it
         out, dt_ns = pull_host(dev, self._trace)
         self.stats.device_wait_ms += dt_ns / 1e6
         self.stats.d2h_transfers += 1
@@ -674,22 +719,25 @@ class _MultiLaneMixin:
         """
         t0 = time.perf_counter()
         dw0 = self.stats.device_wait_ms
+        if self._has_deadlines:
+            self._cancel_overdue(now)
         finished = self._backlog
         self._backlog = []
+        ran_ahead = False
         if self.async_steps and self._pending is not None:
             if self._can_run_ahead():
                 finished.extend(self._run_ahead(now))
-                self.stats.host_plan_ms += (
-                    (time.perf_counter() - t0) * 1e3
-                    - (self.stats.device_wait_ms - dw0)
-                )
-                return finished
-            finished.extend(self._commit_pending(now))
-        finished.extend(self._step_impl(now))
+                ran_ahead = True
+            else:
+                finished.extend(self._commit_pending(now))
+        if not ran_ahead:
+            finished.extend(self._step_impl(now))
         self.stats.host_plan_ms += (
             (time.perf_counter() - t0) * 1e3
             - (self.stats.device_wait_ms - dw0)
         )
+        if self._watchdog is not None:
+            self._watchdog_tick(time.perf_counter() - t0)
         return finished
 
     def flush(self, now: float = 0.0) -> list[Request]:
@@ -996,6 +1044,8 @@ class _MultiLaneMixin:
         next committed write (paged storage additionally trims pages the
         shrinking tail can no longer reach), never branched on."""
         finished: list[Request] = []
+        if self._faults is not None:
+            nxt0, rows = self._inject_step_output(nxt0, rows)
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
                 self.stats.idle_slot_steps += 1
@@ -1035,6 +1085,12 @@ class _MultiLaneMixin:
                         "lane:" + self._verify_lane,
                         args={"slot": s, "accepted": a, "k": k_s},
                     )
+            if min(emitted) < 0:
+                # NaN guard (§15): a poisoned sample surfaced as an invalid
+                # token id. Quarantine exactly this slot — pos is not
+                # advanced, nothing is appended, co-batched rows untouched.
+                self._quarantine_slot(s, now)
+                continue
             self._pos[s] += len(emitted)
             self._tok[s, 0] = emitted[-1]
             req.tokens.extend(emitted)
@@ -1063,6 +1119,212 @@ class _MultiLaneMixin:
         """The slot's request finished inside the verify lane."""
         self._slots[s] = None
         self._active[s] = False
+
+    # ------------------------------------- robustness surface (DESIGN.md §15)
+    def _release_slot(self, s: int) -> None:
+        """Storage-release hook for cancel/quarantine: clear the slot's
+        host state so the next step masks it out (paged storage overrides
+        to release the block table's pages too). The slot's input token is
+        zeroed so a poisoned id never feeds a later gather."""
+        self._slots[s] = None
+        self._active[s] = False
+        self._prefilling[s] = False
+        self._tok[s, 0] = 0
+        self._mirror.touch("tok", "active")
+
+    def attach_watchdog(self, watchdog, on_straggler=None) -> None:
+        """Wire a ``ft.failover.StepTimeWatchdog`` into the step loop:
+        every ``step()`` observes its wall time; a flagged straggler emits
+        a flight-recorder event, counts in the registry, and calls
+        ``on_straggler(dt_s)`` (the degradation controller's hook)."""
+        self._watchdog = watchdog
+        self._on_straggler = on_straggler
+
+    def attach_faults(self, plan) -> None:
+        """Arm a ``core.faults.FaultPlan`` at this batcher's injection
+        sites (``step_output`` at the commit boundaries, ``d2h_stall`` in
+        ``_pull``). Detection/containment report back through the plan."""
+        self._faults = plan
+
+    def _watchdog_tick(self, dt_s: float) -> None:
+        wd = self._watchdog
+        straggler = wd.observe(self.stats.steps, dt_s)
+        if straggler:
+            self.stats.stragglers += 1
+            self.telemetry.registry.inc("step_stragglers_total")
+            tr = self._trace
+            if tr is not None:
+                tr.emit(
+                    "straggler", "scheduler",
+                    args={"step": self.stats.steps,
+                          "ms": round(dt_s * 1e3, 3)},
+                )
+            if self._stall_pending and self._faults is not None:
+                # an injected d2h stall was caught by the watchdog: the
+                # detection mechanism worked; containment is that the step
+                # still committed (a latency fault kills no request)
+                self._faults.note_detected("d2h_stall")
+                self._faults.note_contained("d2h_stall")
+            if self._on_straggler is not None:
+                self._on_straggler(dt_s)
+        self._stall_pending = False
+
+    def set_knobs(
+        self,
+        *,
+        spec_k: int | None = None,
+        prefill_chunk: int | None = None,
+        token_budget: int | None = None,
+    ) -> dict:
+        """Cold-path actuation surface for the degradation ladder (§15).
+
+        Every knob is pure host data consumed by the per-step plan: the
+        next step simply dispatches different *already-warmed* keys
+        (smaller chunk buckets, smaller or no k-buckets), so an actuation
+        is at most a hysteresis-guarded rebind — never a compile. Values
+        are clamped into the launch-time ranges warmup actually compiled;
+        restoring the launch values is the symmetric recovery path."""
+        if spec_k is not None:
+            k = int(spec_k)
+            k = 0 if k <= 0 else min(k, self._spec_max)
+            if self._draft_dispatch is None or self._verify_dispatch is None:
+                k = 0
+            self.spec_k = k
+            self._lane_policy.spec_k = k
+        if prefill_chunk is not None and self._chunk_max > 0:
+            c = bucket_pow2(
+                max(CHUNK_BUCKET_MIN,
+                    min(int(prefill_chunk), self._chunk_max)),
+                CHUNK_BUCKET_MIN,
+                self._chunk_max,
+            )
+            self.prefill_chunk = c
+            self._lane_policy.prefill_chunk = c
+        if token_budget is not None:
+            b = min(self._budget_max,
+                    max(int(token_budget), self.num_slots + 1))
+            self.token_budget = b
+            self._lane_policy.token_budget = b
+        return {
+            "spec_k": self.spec_k,
+            "prefill_chunk": self.prefill_chunk,
+            "token_budget": self.token_budget,
+        }
+
+    def cancel(self, rid: int, now: float = 0.0,
+               reason: str = "cancel") -> bool:
+        """First-class mid-stream cancellation: release the request's slot
+        (and, paged, its pages), mark it cancelled, and account it. A
+        parked in-flight step commits first and its outcome is honoured —
+        a request that finished inside that commit is *not* cancelled
+        (commit-then-discard). Returns True when a seated request with
+        ``rid`` was actually cancelled."""
+        for s, req in enumerate(self._slots):
+            if req is not None and req.rid == rid:
+                return self._cancel_slot(s, now, reason) is not None
+        return False
+
+    def _cancel_slot(self, s: int, now: float, reason: str):
+        target = self._slots[s]
+        if self._pending is not None:
+            # the parked step may be about to emit into this slot: commit
+            # it, then discard whatever landed (commit-then-discard)
+            self._backlog.extend(self._commit_pending(now))
+        req = self._slots[s]
+        if req is None or req is not target:
+            return None  # the committed step finished (or replaced) it
+        req.cancelled = True
+        req.shed_reason = reason
+        self._release_slot(s)
+        self.cancelled_requests.append(req)
+        self.stats.cancelled += 1
+        if reason == "deadline":
+            self.stats.deadline_missed += 1
+        self.telemetry.registry.inc(
+            "requests_cancelled_total", reason=reason
+        )
+        tr = self._trace
+        if tr is not None:
+            tr.emit("cancel", "scheduler",
+                    args={"rid": req.rid, "slot": s, "reason": reason})
+        return req
+
+    def _cancel_overdue(self, now: float) -> None:
+        """Deadline enforcement: cancel every seated request whose
+        ``deadline_s`` has passed (runs once per step, only while some
+        seated request actually carries a deadline)."""
+        for s in range(self.num_slots):
+            req = self._slots[s]
+            if (
+                req is not None
+                and req.deadline_s is not None
+                and now > req.deadline_s
+            ):
+                self._cancel_slot(s, now, "deadline")
+
+    def _quarantine_slot(self, s: int, now: float,
+                         site: str = "step_output") -> None:
+        """Fault containment (§15): a poisoned emission was detected on
+        slot ``s``. Quarantine exactly that slot — release it (paged
+        storage frees its pages) and either re-admit its request from
+        scratch (first offence) or fail it (retry limit reached). The
+        co-batched slots' state is untouched: per-row masking means the
+        released row simply stops participating."""
+        req = self._slots[s]
+        self._release_slot(s)
+        req.faults += 1
+        self.stats.faults_detected += 1
+        plan = self._faults
+        if plan is not None:
+            plan.note_detected(site)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("quarantine", "scheduler",
+                    args={"rid": req.rid, "slot": s, "site": site})
+        if req.faults <= self._fault_retry_limit:
+            # restart from scratch: poisoned progress is discarded, like a
+            # preemption (the driver re-submits ``requeued``)
+            req.tokens = []
+            req.t_admit = None
+            req.t_first = None
+            req.t_last = None
+            self.requeued.append(req)
+            self.stats.faults_contained += 1
+            if plan is not None:
+                plan.note_contained(site)
+        else:
+            req.error = site
+            self.failed_requests.append(req)
+            self.stats.faults_failed += 1
+            self.telemetry.registry.inc("requests_failed_total", site=site)
+
+    def _inject_step_output(self, nxt_host, rows=None):
+        """``step_output`` fault site: one commit boundary. When armed,
+        replace the victim slot's emission with ``POISON_TOKEN`` (the
+        int32 image of a NaN-poisoned sample). The arrays are copied —
+        the device-side step outputs are never mutated."""
+        f = self._faults.fire("step_output")
+        if f is None:
+            return nxt_host, rows
+        cands = [
+            s for s, r in enumerate(self._slots)
+            if r is not None and self._active[s] and not self._prefilling[s]
+        ]
+        if not cands:
+            return nxt_host, rows
+        from repro.core.faults import POISON_TOKEN
+
+        s = cands[f.slot % len(cands)]
+        nxt_host = np.array(nxt_host)
+        nxt_host[s] = POISON_TOKEN
+        if rows is not None:
+            rows = np.array(rows)
+            rows[s, :] = POISON_TOKEN
+        tr = self._trace
+        if tr is not None:
+            tr.emit("fault_inject", "scheduler",
+                    args={"site": "step_output", "slot": s})
+        return nxt_host, rows
 
     # ------------------------------------------------------------ occupancy
     def _count_prefilling_slot_steps(self) -> None:
@@ -1232,6 +1494,8 @@ class ContinuousBatcher(_MultiLaneMixin):
                 0, 2**32, size=2, dtype=np.uint32
             )
             req.t_admit = now
+            if req.deadline_s is not None:
+                self._has_deadlines = True
             self._note_admit(req, now)
             admitted += 1
         if admitted:
@@ -1406,6 +1670,8 @@ class ContinuousBatcher(_MultiLaneMixin):
         already-pulled outputs (``pos_host`` is unused here — dense slots
         carry no storage that tracks positions; the paged twin needs it)."""
         finished: list[Request] = []
+        if self._faults is not None:
+            nxt_host, _ = self._inject_step_output(nxt_host)
         self._tok = np.asarray(nxt_host)[:, None].astype(np.int32)
         self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
@@ -1423,6 +1689,10 @@ class ContinuousBatcher(_MultiLaneMixin):
                 self._tok[s, 0] = prompt[self._cursor[s]]
                 self._mirror.touch("tok")
                 self.stats.prompt_tokens += 1
+                continue
+            if int(nxt_host[s]) < 0:
+                # NaN guard (§15): invalid token id — quarantine this slot
+                self._quarantine_slot(s, now)
                 continue
             req.tokens.append(int(nxt_host[s]))
             self._note_tokens(req, now)
@@ -1733,6 +2003,8 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             )
             self._prompt_cached[s] = False
             req.t_admit = now
+            if req.deadline_s is not None:
+                self._has_deadlines = True
             self._note_admit(req, now)
             self._mirror.touch(
                 "tok", "pos", "active", "temps", "greedy", "keys"
@@ -2021,6 +2293,8 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         ``self._pos`` is already one step further, so tables sync to the
         record's own positions, never the live array."""
         finished: list[Request] = []
+        if self._faults is not None:
+            nxt_host, _ = self._inject_step_output(nxt_host)
         self._tok = np.asarray(nxt_host)[:, None].astype(np.int32)
         self._count_prefilling_slot_steps()
         for s, req in enumerate(self._slots):
@@ -2047,6 +2321,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 if full > 0:
                     self.prefix.insert(prompt, table.pages[:full])
                 self._prompt_cached[s] = True
+            if int(nxt_host[s]) < 0:
+                # NaN guard (§15): invalid token id — quarantine this slot
+                self._quarantine_slot(s, now)
+                continue
             req.tokens.append(int(nxt_host[s]))
             self._note_tokens(req, now)
             self.stats.tokens += 1
@@ -2131,6 +2409,16 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         self._active[s] = False
         self._tables_changed()
 
+    def _release_slot(self, s: int) -> None:
+        """Cancel/quarantine release for paged storage: the slot's block
+        table returns its pages to the pool before the host state clears
+        (the §15 'release pages, trim block tables' contract)."""
+        if self._tables[s] is not None:
+            self._tables[s].release()
+            self._tables[s] = None
+        super()._release_slot(s)
+        self._tables_changed()
+
 
 # ------------------------------------------------------------------ reports
 def latency_report(
@@ -2196,6 +2484,40 @@ def latency_report(
                 lanes["spec"]["acceptance_p99"] = float(
                     np.percentile(acc, 99)
                 )
+    # Robustness block (DESIGN.md §15): shed/cancel/fault/degradation
+    # accounting, derived from the registry the hardened loop feeds. A
+    # clean un-hardened run has every family empty, so the block is
+    # omitted and pre-§15 reports are byte-identical.
+    reg = registry
+    if reg is None and batcher is not None:
+        reg = batcher.telemetry.registry
+    if reg is not None:
+        robust: dict = {}
+        for key, family, label in (
+            ("shed", "admission_shed_total", "reason"),
+            ("cancelled", "requests_cancelled_total", "reason"),
+            ("failed", "requests_failed_total", "site"),
+            ("faults_injected", "faults_injected_total", "site"),
+            ("faults_detected", "faults_detected_total", "site"),
+            ("faults_contained", "faults_contained_total", "site"),
+            ("rung_dwell_s", "degrade_rung_dwell_s", "rung"),
+            ("degrade_transitions", "degrade_transitions_total",
+             "direction"),
+        ):
+            vals = reg.labeled_values(family, label)
+            if vals:
+                robust[key] = (
+                    {k: round(v, 3) for k, v in vals.items()}
+                    if key == "rung_dwell_s" else
+                    {k: int(v) for k, v in vals.items()}
+                )
+        stragglers = reg.value("step_stragglers_total")
+        if stragglers:
+            robust["stragglers"] = int(stragglers)
+        if batcher is not None and batcher.stats.deadline_missed:
+            robust["deadline_missed"] = batcher.stats.deadline_missed
+        if robust:
+            lanes["robustness"] = robust
     if not done:
         return {"finished": 0, **lanes}
     lat = np.array([r.latency_s for r in done])

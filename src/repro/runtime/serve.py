@@ -754,6 +754,12 @@ class Engine:
         base = (self._warm_marks or {}).get("rebinds", 0)
         return self._decode.stats.rebinds - base
 
+    def attach_faults(self, plan) -> None:
+        """Arm a ``core.faults.FaultPlan`` at the engine's ``build`` site
+        (the dispatcher's cold path). Batcher- and pool-side sites are
+        armed on those objects directly."""
+        self._decode.attach_faults(plan)
+
     def _warm_d2h_packs(self, slots: int) -> None:
         """Warm the packed-d2h helpers (``steps.pack_step_d2h`` /
         ``pack_verify_d2h``) for this slot bucket: they are plain ``jax.jit``
@@ -1417,6 +1423,273 @@ def run_paged_stream(
         cow_copies=cb.pool.stats.cow_copies,
         prefix_evictions=cb.pool.stats.prefix_evictions,
         unserved=len(requests) - len(finished),
+        compiles_total=eng._decode.stats.misses,
+        compiles_after_warmup=eng.post_warmup_compiles,
+        rebinds=eng.post_warmup_rebinds,
+    )
+    return report
+
+
+def run_overload_stream(
+    eng: Engine,
+    requests: list[Request],
+    *,
+    slots: int | None = None,
+    seed: int = 0,
+    clock: Clock | None = None,
+    kv_dtype: str | None = None,
+    async_steps: bool = False,
+    capacity: int | None = None,
+    shed_policy: str = "reject-new",
+    queue_ttl_s: float | None = None,
+    controller: "DegradeController | None" = None,
+    degrade: bool = False,
+    faults=None,
+    watchdog: bool = True,
+    heartbeat_timeout_steps: float = 2.0,
+    max_steps: int | None = None,
+) -> dict:
+    """The overload-hardened paged stream driver (DESIGN.md §15).
+
+    Everything ``run_paged_stream`` does, plus the hardening surfaces:
+
+    * **bounded admission** — an :class:`~repro.runtime.admission.
+      AdmissionQueue` with ``capacity``/``shed_policy``/``queue_ttl_s``;
+    * **deadlines** — per-request ``ttl_s`` sheds in queue, ``deadline_s``
+      cancels mid-stream (the batcher's ``_cancel_overdue``);
+    * **degradation ladder** — a :class:`~repro.runtime.degrade.
+      DegradeController` observed once per iteration; its rung changes
+      actuate ``set_knobs`` over already-warmed keys, and an ``int8-pool``
+      rung routes *new admissions* to a pre-warmed int8 standby batcher
+      while the fp32 one drains (pools flip at the admission boundary —
+      a live cache is never requantised);
+    * **fault injection** — an armed ``core.faults.FaultPlan`` is attached
+      to the dispatcher (``build``), pool (``pool_alloc``), and batchers
+      (``step_output``/``d2h_stall``); ``heartbeat`` is driven here: each
+      iteration beats a :class:`~repro.ft.failover.HeartbeatMonitor` on a
+      *step-count* time axis (deterministic under the virtual clock), a
+      fired fault suppresses the beat, and a lost heartbeat forces the
+      controller to the bottom rung until beats resume;
+    * **watchdog** — ``ft.failover.StepTimeWatchdog`` wired into the step
+      loop; stragglers feed the controller.
+
+    With every knob at its default (no capacity, no TTL, no controller, no
+    faults) this is behaviourally ``run_paged_stream`` — the hardened loop
+    is inert until configured.
+    """
+    from repro.ft.failover import HeartbeatMonitor, StepTimeWatchdog
+    from repro.runtime.admission import AdmissionQueue
+    from repro.runtime.degrade import (
+        DegradeController, Rung, apply_rung, default_ladder,
+    )
+
+    registry = eng.telemetry.registry
+    trace = eng.telemetry.trace_or_none()
+    if faults is not None and faults.registry is None:
+        faults.registry = registry
+    if faults is not None:
+        eng.attach_faults(faults)
+
+    cb = eng.paged_continuous(  # warmup compile first
+        slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps
+    )
+    base = Rung(
+        "base",
+        spec_k=cb.spec_k,
+        prefill_chunk=cb.prefill_chunk,
+        token_budget=cb.token_budget,
+        kv_dtype=cb.pool.kv_dtype,
+    )
+    ctrl = controller
+    if ctrl is None and degrade:
+        ctrl = DegradeController(
+            default_ladder(
+                spec_k=cb.spec_k,
+                prefill_chunk=cb.prefill_chunk,
+                token_budget=cb.token_budget,
+                int8_pool=(
+                    "int8" in eng._warm_kv_dtypes()
+                    and cb.pool.kv_dtype != "int8"
+                ),
+            ),
+            registry=registry,
+            trace=trace,
+            queue_high=max(2 * cb.num_slots, 8),
+            queue_low=max(cb.num_slots // 2, 1),
+        )
+    # int8 standby: pre-warm the flip target *before* the warm boundary
+    # settles, so an int8-pool rung crossing is pure admission routing.
+    cb8 = None
+    if ctrl is not None and any(
+        r.kv_dtype == "int8" for r in ctrl.rungs
+    ) and base.kv_dtype != "int8":
+        cb8 = eng.paged_continuous(
+            slots=slots, seed=seed, kv_dtype="int8",
+            async_steps=async_steps,
+        )
+    batchers = [b for b in (cb, cb8) if b is not None]
+    if faults is not None:
+        for b in batchers:
+            b.attach_faults(faults)
+            b.pool.attach_faults(faults)
+    if watchdog:
+        straggled = {"now": False}
+
+        def _on_straggler(dt_s: float) -> None:
+            straggled["now"] = True
+
+        for b in batchers:
+            b.attach_watchdog(StepTimeWatchdog(), _on_straggler)
+    monitor = HeartbeatMonitor(
+        ["engine"], timeout_s=heartbeat_timeout_steps
+    )
+    hb_lost = False
+
+    clock = clock or Clock()
+    # Open-loop traffic model: ``pending`` holds requests that have not
+    # *arrived* yet; the bounded AdmissionQueue only ever sees arrived
+    # requests, so capacity/TTL/shedding act on actual queue wait, never
+    # on the future tail of the trace.
+    pending = RequestQueue(requests)
+    q = AdmissionQueue(
+        (),
+        capacity=capacity,
+        shed_policy=shed_policy,
+        queue_ttl_s=queue_ttl_s,
+        registry=registry,
+        trace=trace,
+    )
+    active = cb  # admission target; rung crossings may re-route it
+    finished: list[Request] = []
+    stall_steps = 0
+    steps = 0
+
+    def _has_work() -> bool:
+        return any(b.has_work for b in batchers)
+
+    while pending or q or _has_work():
+        if max_steps is not None and steps >= max_steps:
+            break
+        steps += 1
+        now = clock.now()
+        for r in pending.pop_due(now):
+            q.submit(r)  # arrival: the shed policy applies here
+        # --- heartbeat (step-count time axis: deterministic) -------------
+        beat = True
+        if faults is not None and faults.fire("heartbeat") is not None:
+            beat = False
+        if beat:
+            monitor.beat("engine", t=float(steps))
+        healthy = not monitor.failed(now=float(steps))
+        if not healthy and not hb_lost:
+            hb_lost = True
+            if faults is not None:
+                faults.note_detected("heartbeat")
+        elif healthy and hb_lost:
+            hb_lost = False
+            if faults is not None:
+                # beats resumed and the stream kept serving: contained
+                faults.note_contained("heartbeat")
+        # --- controller ---------------------------------------------------
+        if ctrl is not None:
+            rung = ctrl.observe(
+                now,
+                queue_depth=len(q),
+                pool_frac=(
+                    active.pool.pages_in_use / active.pool.num_pages
+                ),
+                straggler=(
+                    watchdog and straggled["now"]
+                ),
+                healthy=healthy,
+            )
+            if watchdog:
+                straggled["now"] = False
+            if rung is not None:
+                for b in batchers:
+                    apply_rung(b, rung, base)
+                active = (
+                    cb8
+                    if (rung.kv_dtype == "int8" and cb8 is not None)
+                    else cb
+                )
+        # --- admission ----------------------------------------------------
+        due = q.pop_due(now, limit=active.free_slots)
+        if due:
+            for r in active.admit(due, now=now):
+                q.submit(r)  # deferred for pages: retried, never rejected
+        # --- step every batcher that holds work ---------------------------
+        stepped = False
+        for b in batchers:
+            if not b.has_work:
+                continue
+            stepped = True
+            finished.extend(b.step(now=clock.now()))
+            for r in b.preempted:
+                q.submit(r)
+            b.preempted.clear()
+            for r in b.requeued:  # quarantined: restart from scratch
+                q.submit(r)
+            b.requeued.clear()
+        if stepped:
+            stall_steps = 0
+            continue
+        if q:
+            # arrived work but nothing admitted: reclaim prefix pages,
+            # then declare a stall (pool too small for anything queued)
+            if active.prefix.evict(active.pool.num_pages) == 0:
+                stall_steps += 1
+                if stall_steps > 2:
+                    break
+            continue
+        nxt = pending.next_arrival()
+        if nxt is None:
+            break
+        clock.jump_to(nxt)  # idle: fast-forward to the next arrival
+    now = clock.now()
+    for b in batchers:
+        finished.extend(b.flush(now))
+    if ctrl is not None:
+        ctrl.finalize(now)
+    # pool_alloc containment is the pre-existing evict/preempt/defer
+    # machinery; if the stream drained (no injected exhaustion wedged it),
+    # every injected alloc failure was absorbed.
+    if faults is not None and not q and not pending:
+        n_pa = sum(1 for site, _ in faults.injected if site == "pool_alloc")
+        for _ in range(n_pa - faults.contained.get("pool_alloc", 0)):
+            faults.note_contained("pool_alloc")
+
+    cancelled = [r for b in batchers for r in b.cancelled_requests]
+    failed = [r for b in batchers for r in b.failed_requests]
+    report = latency_report(finished, batcher=cb, registry=registry)
+    report.update(
+        engine="overload",
+        async_steps=cb.async_steps,
+        slots=cb.num_slots,
+        steps=sum(b.stats.steps for b in batchers),
+        kv_dtype=active.pool.kv_dtype,
+        capacity=capacity,
+        shed_policy=shed_policy,
+        shed=len(q.shed),
+        cancelled=len(cancelled),
+        failed=len(failed),
+        deadline_missed=sum(b.stats.deadline_missed for b in batchers),
+        stragglers=sum(b.stats.stragglers for b in batchers),
+        preemptions=sum(
+            getattr(b.stats, "preemptions", 0) for b in batchers
+        ),
+        unserved=len(requests)
+        - len(finished) - len(q.shed) - len(cancelled) - len(failed),
+        degrade_rung=(ctrl.rung.name if ctrl is not None else None),
+        degrade_transitions=(
+            [
+                {"t": round(t, 4), "from": a, "to": b_, "why": w}
+                for t, a, b_, w in ctrl.transitions
+            ]
+            if ctrl is not None
+            else []
+        ),
+        faults=(faults.report() if faults is not None else None),
         compiles_total=eng._decode.stats.misses,
         compiles_after_warmup=eng.post_warmup_compiles,
         rebinds=eng.post_warmup_rebinds,

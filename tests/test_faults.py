@@ -1,0 +1,301 @@
+"""Deterministic fault injection (DESIGN.md §15, core.faults): FaultPlan
+semantics (windows, ordinals, accounting), the chaos matrix
+{dense,paged} x {sync,async} x {spec on,off} with per-site detection and
+containment, build-fault containment through the single-flight compile
+cache, pool-alloc faults absorbed by the eviction machinery, d2h stalls
+caught by the step-time watchdog, retry-limit exhaustion failing exactly
+the victim, and an *armed-but-empty* plan leaving greedy streams bitwise
+identical (the inert-by-default invariant)."""
+
+import itertools
+
+import jax
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.core.faults import (
+    POISON_TOKEN,
+    SITES,
+    Fault,
+    FaultError,
+    FaultPlan,
+)
+from repro.ft.failover import StepTimeWatchdog
+from repro.runtime.scheduler import Request
+from repro.runtime.serve import Engine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **over):
+    reset_entry_points()
+    kw = dict(
+        max_len=32,
+        batch_quantum=2,
+        max_batch=4,
+        page_size=8,
+        num_pages=20,
+        prefill_chunk=8,
+        spec_k=2,
+        draft_layers=1,
+    )
+    kw.update(over)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+def _reqs(n=4, new_tokens=8, first=3):
+    return [
+        Request(rid=i, new_tokens=new_tokens, greedy=True,
+                first_token=first + i)
+        for i in range(n)
+    ]
+
+
+def _drive(cb, reqs, *, max_iters=600):
+    """Step a batcher to completion, re-submitting preempted and
+    quarantined (``requeued``) requests like the serving drivers do."""
+    pending = list(reqs)
+    done = []
+    it = 0
+    while pending or cb.has_work:
+        assert it < max_iters, "stream wedged"
+        it += 1
+        if pending:
+            take, rest = pending[:cb.free_slots], pending[cb.free_slots:]
+            out = cb.admit(take, now=float(it)) if take else []
+            # paged admit returns deferred requests; dense returns a count
+            pending = (out if isinstance(out, list) else []) + rest
+        done.extend(cb.step(now=float(it)))
+        if getattr(cb, "preempted", None):
+            pending.extend(cb.preempted)
+            cb.preempted.clear()
+        if cb.requeued:
+            pending.extend(cb.requeued)
+            cb.requeued.clear()
+    done.extend(cb.flush(float(it + 1)))
+    return done
+
+
+# ------------------------------------------------------------- plan units
+def test_fault_validation():
+    with pytest.raises(FaultError):
+        Fault(site="gamma-ray", at=0)
+    with pytest.raises(FaultError):
+        Fault(site="build", at=-1)
+    with pytest.raises(FaultError):
+        Fault(site="build", at=0, span=0)
+    with pytest.raises(FaultError):
+        FaultPlan(["not a fault"])
+    with pytest.raises(FaultError):
+        FaultPlan().fire("not-a-site")
+
+
+def test_fire_window_is_per_site_ordinal():
+    plan = FaultPlan([
+        Fault(site="step_output", at=2, span=2),
+        Fault(site="build", at=0),
+    ])
+    # build ordinals do not advance step_output's counter
+    assert plan.fire("build") is not None
+    hits = [plan.fire("step_output") is not None for _ in range(6)]
+    assert hits == [False, False, True, True, False, False]
+    assert plan.total_injected == 3
+    rep = plan.report()
+    assert rep["injected"] == {"build": 1, "step_output": 2}
+    assert rep["opportunities"] == {"build": 1, "step_output": 6}
+
+
+def test_plan_accounting_roundtrip():
+    plan = FaultPlan([Fault(site="pool_alloc", at=0)])
+    assert plan.fire("pool_alloc") is not None
+    plan.note_detected("pool_alloc")
+    plan.note_contained("pool_alloc")
+    assert plan.total_detected == plan.total_contained == 1
+    rep = plan.report()
+    assert rep["detected"] == rep["contained"] == {"pool_alloc": 1}
+
+
+def test_random_plan_is_seed_deterministic():
+    a = FaultPlan.random(seed=7)
+    b = FaultPlan.random(seed=7)
+    fa = sorted((f.site, f.at, f.slot) for fs in a._by_site.values()
+                for f in fs)
+    fb = sorted((f.site, f.at, f.slot) for fs in b._by_site.values()
+                for f in fs)
+    assert fa == fb
+    for f in (f for fs in a._by_site.values() for f in fs):
+        assert f.site in SITES
+
+
+# ---------------------------------------------------------- chaos matrix
+MATRIX = list(itertools.product(("dense", "paged"), (False, True),
+                                (True, False)))
+
+
+@pytest.mark.parametrize("kind,async_steps,spec_on", MATRIX)
+def test_chaos_matrix_step_output_contained(smoke_setup, kind,
+                                            async_steps, spec_on):
+    """The full {dense,paged} x {sync,async} x {spec on,off} matrix: a
+    poisoned emission is detected by the token guard, exactly the victim
+    slot is quarantined and retried, every request still finishes with
+    clean tokens, and no transition compiles anything post-warmup."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params)
+    cb = (eng.paged_continuous(slots=4, async_steps=async_steps)
+          if kind == "paged"
+          else eng.continuous(slots=4, async_steps=async_steps))
+    if not spec_on:
+        assert cb.set_knobs(spec_k=0)["spec_k"] == 0
+    plan = FaultPlan([
+        Fault(site="step_output", at=2, slot=0),
+        Fault(site="step_output", at=5, slot=1),
+    ])
+    cb.attach_faults(plan)
+    reqs = _reqs(4, new_tokens=8)
+    done = _drive(cb, reqs)
+    rep = plan.report()
+    inj = rep["injected"].get("step_output", 0)
+    assert inj >= 1, "workload never reached the armed ordinals"
+    # every poison was caught by the emitted-token guard and contained by
+    # quarantine+retry (retry limit 1: distinct victims per fault here)
+    assert rep["detected"].get("step_output", 0) == inj
+    assert (rep["contained"].get("step_output", 0)
+            + cb.stats.faults_failed) == inj
+    assert cb.stats.faults_detected == inj
+    # zero blast radius: everything not explicitly failed finished clean
+    failed = {r.rid for r in cb.failed_requests}
+    assert len(done) == len(reqs) - len(failed)
+    for r in done:
+        assert r.done and len(r.tokens) == r.new_tokens
+        assert all(t >= 0 for t in r.tokens), "poison leaked into a stream"
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_retry_limit_fails_only_the_victim(smoke_setup):
+    """span=3 over two requests guarantees (pigeonhole) some request is
+    quarantined past the retry limit: it fails with ``error`` set; the
+    others finish untouched."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, spec_k=0)
+    cb = eng.paged_continuous(slots=4)
+    plan = FaultPlan([Fault(site="step_output", at=2, slot=0, span=3)])
+    cb.attach_faults(plan)
+    reqs = _reqs(2, new_tokens=6)
+    done = _drive(cb, reqs)
+    assert cb.stats.faults_failed >= 1
+    assert len(cb.failed_requests) == cb.stats.faults_failed
+    for r in cb.failed_requests:
+        assert r.error == "step_output" and not r.done
+    assert len(done) == len(reqs) - len(cb.failed_requests)
+    assert all(r.done for r in done)
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_build_fault_contained_by_rebuild_retry(smoke_setup):
+    """An injected build failure inside the single-flight leader is caught,
+    retried once, and warmup completes — the CompileCache error path end
+    to end, with the fault accounted detected+contained."""
+    cfg, params = smoke_setup
+    reset_entry_points()
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=32, batch_quantum=2, max_batch=4, page_size=8,
+        num_pages=20, prefill_chunk=8, spec_k=0,
+    ))
+    plan = FaultPlan([Fault(site="build", at=0)])
+    eng.attach_faults(plan)
+    cb = eng.paged_continuous(slots=4)  # first cold build fires the fault
+    rep = plan.report()
+    assert rep["injected"].get("build", 0) == 1
+    assert rep["detected"].get("build", 0) == 1
+    assert rep["contained"].get("build", 0) == 1
+    done = _drive(cb, _reqs(2, new_tokens=4))
+    assert len(done) == 2 and all(r.done for r in done)
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_pool_alloc_fault_absorbed_by_eviction(smoke_setup):
+    """An injected allocation failure is indistinguishable from real
+    exhaustion: the evict/preempt/defer machinery absorbs it and the
+    stream drains (containment is noted by the driver; here we assert
+    detection plus a clean drain)."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, spec_k=0)
+    cb = eng.paged_continuous(slots=4)
+    plan = FaultPlan([Fault(site="pool_alloc", at=2)])
+    cb.attach_faults(plan)
+    cb.pool.attach_faults(plan)
+    reqs = _reqs(4, new_tokens=8)
+    done = _drive(cb, reqs)
+    rep = plan.report()
+    assert rep["injected"].get("pool_alloc", 0) == 1
+    assert rep["detected"].get("pool_alloc", 0) == 1
+    assert cb.pool.stats.alloc_failures >= 1
+    assert len(done) == 4 and all(r.done for r in done)
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_d2h_stall_detected_by_watchdog(smoke_setup):
+    """A simulated interconnect stall in the device pull trips the
+    step-time watchdog (detection) while the step still commits
+    (containment): a latency fault kills no request."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, spec_k=0)
+    cb = eng.paged_continuous(slots=4)
+    # ~3 pulls per step: ordinal 30 lands near step 10, past the
+    # watchdog's 5-step EMA warmup
+    plan = FaultPlan([Fault(site="d2h_stall", at=30, stall_s=0.25)])
+    cb.attach_faults(plan)
+    cb.attach_watchdog(StepTimeWatchdog())
+    reqs = _reqs(4, new_tokens=16)
+    done = _drive(cb, reqs)
+    rep = plan.report()
+    assert rep["injected"].get("d2h_stall", 0) == 1
+    assert rep["detected"].get("d2h_stall", 0) == 1
+    assert rep["contained"].get("d2h_stall", 0) == 1
+    assert cb.stats.stragglers >= 1
+    assert len(done) == 4 and all(r.done for r in done)
+    eng.close()
+
+
+def test_armed_empty_plan_is_bitwise_inert(smoke_setup):
+    """A FaultPlan with no faults attached everywhere must not perturb a
+    single token: the None-check/empty-lookup cost is observability-free."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params)
+
+    clean = _reqs(4, new_tokens=8)
+    cb = eng.paged_continuous(slots=4, seed=0)
+    _drive(cb, clean)
+
+    armed = _reqs(4, new_tokens=8)
+    cb2 = eng.paged_continuous(slots=4, seed=0)
+    plan = FaultPlan()
+    eng.attach_faults(plan)
+    cb2.attach_faults(plan)
+    cb2.pool.attach_faults(plan)
+    cb2.attach_watchdog(StepTimeWatchdog())
+    _drive(cb2, armed)
+
+    for a, b in zip(clean, armed):
+        assert a.tokens == b.tokens, (a.rid, a.tokens, b.tokens)
+    assert plan.total_injected == 0
+    assert eng.post_warmup_compiles == 0
+    eng.attach_faults(None)
+    eng.close()
+
+
+def test_poison_token_is_negative_out_of_vocab(smoke_setup):
+    cfg, _ = smoke_setup
+    assert POISON_TOKEN < 0
+    assert abs(POISON_TOKEN) > cfg.vocab_size

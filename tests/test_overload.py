@@ -1,0 +1,380 @@
+"""Overload hardening (DESIGN.md §15): bounded admission shed policies and
+queue-wait TTLs, the hysteresis-guarded degradation ladder, the batcher's
+cold-path actuation surface (``set_knobs`` clamping into warmed ranges),
+first-class cancellation and decode deadlines (dense+paged, sync+async,
+commit-then-discard), watchdog wiring, and the hardened stream driver's
+inert-by-default bitwise identity with ``run_paged_stream``."""
+
+import jax
+import pytest
+
+from repro import models
+from repro.configs import get_config
+from repro.core import reset_entry_points
+from repro.core.telemetry import MetricsRegistry
+from repro.runtime.admission import SHED_POLICIES, AdmissionQueue
+from repro.runtime.degrade import (
+    DegradeController,
+    Rung,
+    apply_rung,
+    default_ladder,
+)
+from repro.runtime.scheduler import Request, poisson_arrivals
+from repro.runtime.serve import (
+    Engine,
+    EngineConfig,
+    run_overload_stream,
+    run_paged_stream,
+)
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **over):
+    reset_entry_points()
+    kw = dict(
+        max_len=32,
+        batch_quantum=2,
+        max_batch=4,
+        page_size=8,
+        num_pages=20,
+        prefill_chunk=8,
+        spec_k=2,
+        draft_layers=1,
+    )
+    kw.update(over)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+def _req(rid, arrival_s=0.0, priority=0, ttl_s=None, new_tokens=4):
+    return Request(rid=rid, new_tokens=new_tokens, greedy=True,
+                   first_token=3 + rid, arrival_s=arrival_s,
+                   priority=priority, ttl_s=ttl_s)
+
+
+# --------------------------------------------------------- AdmissionQueue
+def test_admission_unbounded_is_passthrough():
+    q = AdmissionQueue([_req(i, arrival_s=float(i)) for i in range(5)])
+    assert len(q) == 5 and not q.shed
+    got = q.pop_due(10.0)
+    assert [r.rid for r in got] == [0, 1, 2, 3, 4]
+
+
+def test_admission_invalid_config_raises():
+    with pytest.raises(ValueError):
+        AdmissionQueue(capacity=0)
+    with pytest.raises(ValueError):
+        AdmissionQueue(shed_policy="fifo")
+    with pytest.raises(ValueError):
+        AdmissionQueue(queue_ttl_s=0.0)
+
+
+def test_admission_reject_new():
+    reg = MetricsRegistry()
+    q = AdmissionQueue(capacity=2, shed_policy="reject-new", registry=reg)
+    for i in range(4):
+        q.submit(_req(i, arrival_s=float(i)))
+    assert len(q) == 2
+    assert [r.rid for r in q.shed] == [2, 3]
+    assert all(r.shed_reason == "reject-new" for r in q.shed)
+    assert [r.rid for r in q.pop_due(10.0)] == [0, 1]
+    assert reg.labeled_values("admission_shed_total",
+                              "reason") == {"reject-new": 2}
+
+
+def test_admission_drop_oldest():
+    q = AdmissionQueue(capacity=2, shed_policy="drop-oldest")
+    for i in range(4):
+        q.submit(_req(i, arrival_s=float(i)))
+    # back-pressure lands on the stalest queued work, not the arrival
+    assert [r.rid for r in q.shed] == [0, 1]
+    assert all(r.shed_reason == "drop-oldest" for r in q.shed)
+    assert [r.rid for r in q.pop_due(10.0)] == [2, 3]
+
+
+def test_admission_priority_sheds_cheapest_queued():
+    q = AdmissionQueue(capacity=2, shed_policy="priority")
+    q.submit(_req(0, arrival_s=0.0, priority=1))
+    q.submit(_req(1, arrival_s=1.0, priority=5))
+    q.submit(_req(2, arrival_s=2.0, priority=3))  # evicts rid 0 (prio 1)
+    assert [r.rid for r in q.shed] == [0]
+    # nothing queued is strictly cheaper than prio 2: the arrival is shed
+    q.submit(_req(3, arrival_s=3.0, priority=2))
+    assert [r.rid for r in q.shed] == [0, 3]
+    assert sorted(r.rid for r in q.pop_due(10.0)) == [1, 2]
+
+
+def test_admission_queue_ttl_and_per_request_override():
+    q = AdmissionQueue(capacity=None, queue_ttl_s=1.0)
+    q.submit(_req(0, arrival_s=0.0))
+    q.submit(_req(1, arrival_s=0.0, ttl_s=5.0))  # per-request override
+    q.submit(_req(2, arrival_s=2.5))
+    got = q.pop_due(3.0)
+    # rid 0 waited 3.0 > 1.0 -> shed; rid 1's own ttl keeps it; rid 2 fresh
+    assert [r.rid for r in got] == [1, 2]
+    assert [r.rid for r in q.shed] == [0]
+    assert q.shed[0].shed_reason == "ttl"
+
+
+def test_shed_policy_surface_is_closed():
+    assert set(SHED_POLICIES) == {"reject-new", "drop-oldest", "priority"}
+
+
+# ------------------------------------------------------ DegradeController
+def test_default_ladder_skips_inexpressible_rungs():
+    full = default_ladder(spec_k=2, prefill_chunk=32, token_budget=64,
+                          int8_pool=True)
+    assert [r.name for r in full] == [
+        "healthy", "spec-off", "chunk-min", "budget-trim", "int8-pool",
+    ]
+    # rungs are cumulative: the bottom rung carries every restriction
+    bottom = full[-1]
+    assert (bottom.spec_k, bottom.prefill_chunk, bottom.token_budget,
+            bottom.kv_dtype) == (0, 8, 32, "int8")
+    nospec = default_ladder(spec_k=0, prefill_chunk=8, token_budget=0)
+    assert [r.name for r in nospec] == ["healthy"]
+
+
+def test_controller_hysteresis_and_recovery():
+    rungs = default_ladder(spec_k=2, prefill_chunk=32, token_budget=64)
+    c = DegradeController(rungs, queue_high=8, queue_low=2, hysteresis=3)
+    # two overloaded observations then a between-thresholds one: no move
+    assert c.observe(0.0, queue_depth=9) is None
+    assert c.observe(1.0, queue_depth=9) is None
+    assert c.observe(2.0, queue_depth=5) is None  # resets the streak
+    for t in (3.0, 4.0):
+        assert c.observe(t, queue_depth=9) is None
+    moved = c.observe(5.0, queue_depth=9)
+    assert moved is not None and moved.name == "spec-off"
+    # symmetric recovery under the same hysteresis
+    assert c.observe(6.0, queue_depth=0) is None
+    assert c.observe(7.0, queue_depth=0) is None
+    back = c.observe(8.0, queue_depth=0)
+    assert back is not None and back.name == "healthy"
+    assert [(a, b, w) for _, a, b, w in c.transitions] == [
+        ("healthy", "spec-off", "overload"),
+        ("spec-off", "healthy", "recovered"),
+    ]
+
+
+def test_controller_straggler_counts_as_overload():
+    rungs = default_ladder(spec_k=2, prefill_chunk=32, token_budget=64)
+    c = DegradeController(rungs, hysteresis=2)
+    assert c.observe(0.0, straggler=True) is None
+    moved = c.observe(1.0, straggler=True)
+    assert moved is not None and moved.name == "spec-off"
+
+
+def test_controller_heartbeat_loss_forces_bottom_rung():
+    reg = MetricsRegistry()
+    rungs = default_ladder(spec_k=2, prefill_chunk=32, token_budget=64,
+                           int8_pool=True)
+    c = DegradeController(rungs, registry=reg, hysteresis=2)
+    moved = c.observe(1.0, healthy=False)  # no hysteresis on component loss
+    assert moved is not None and moved.name == "int8-pool"
+    assert c.transitions[-1][3] == "heartbeat"
+    assert c.observe(2.0, healthy=False) is None  # already at the bottom
+    # recovery walks back up one rung at a time under hysteresis
+    assert c.observe(3.0, queue_depth=0) is None
+    up = c.observe(4.0, queue_depth=0)
+    assert up is not None and up.name == "budget-trim"
+    assert reg.value("degrade_rung", -1.0) == float(rungs.index(up))
+    c.finalize(5.0)
+    dwell = reg.labeled_values("degrade_rung_dwell_s", "rung")
+    # dwell clock starts at the first observe (t=1.0), flushed at t=5.0
+    assert sum(dwell.values()) == pytest.approx(4.0)
+
+
+def test_controller_validation():
+    with pytest.raises(ValueError):
+        DegradeController(())
+    with pytest.raises(ValueError):
+        DegradeController(default_ladder(spec_k=2), hysteresis=0)
+
+
+# ------------------------------------------------- set_knobs / apply_rung
+def test_set_knobs_clamps_into_warmed_ranges(smoke_setup):
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, token_budget=24)
+    cb = eng.paged_continuous(slots=4)
+    launch = dict(spec_k=cb.spec_k, prefill_chunk=cb.prefill_chunk,
+                  token_budget=cb.token_budget)
+    # over-asking clamps to the launch ceiling warmup actually compiled
+    got = cb.set_knobs(spec_k=99, prefill_chunk=4096, token_budget=10**6)
+    assert got == launch
+    # degradation values: spec off, chunk to a warmed pow2 bucket, budget
+    # floored at slots+1 so a step can always make progress
+    got = cb.set_knobs(spec_k=-3, prefill_chunk=1, token_budget=0)
+    assert got["spec_k"] == 0
+    assert got["prefill_chunk"] >= 1
+    assert got["prefill_chunk"] & (got["prefill_chunk"] - 1) == 0
+    assert got["token_budget"] == cb.num_slots + 1
+    # symmetric recovery restores the launch values exactly
+    assert cb.set_knobs(**launch) == launch
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_apply_rung_uses_base_for_unset_knobs(smoke_setup):
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, token_budget=24)
+    cb = eng.paged_continuous(slots=4)
+    base = Rung("base", spec_k=cb.spec_k, prefill_chunk=cb.prefill_chunk,
+                token_budget=cb.token_budget)
+    got = apply_rung(cb, Rung("spec-off", spec_k=0), base)
+    assert got["spec_k"] == 0
+    assert got["prefill_chunk"] == base.prefill_chunk
+    assert got["token_budget"] == base.token_budget
+    got = apply_rung(cb, Rung("healthy"), base)
+    assert got == {"spec_k": base.spec_k,
+                   "prefill_chunk": base.prefill_chunk,
+                   "token_budget": base.token_budget}
+    eng.close()
+
+
+# ---------------------------------------------------- cancel / deadlines
+@pytest.mark.parametrize("kind,async_steps",
+                         [("dense", False), ("dense", True),
+                          ("paged", False), ("paged", True)])
+def test_cancel_releases_slot_and_pages(smoke_setup, kind, async_steps):
+    """Explicit mid-stream cancel frees the slot (paged: and its pages);
+    the co-batched stream is untouched and matches a solo run. With
+    ``async_steps`` the parked in-flight step commits first
+    (commit-then-discard)."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, spec_k=0)
+    cb = (eng.paged_continuous(slots=4, async_steps=async_steps)
+          if kind == "paged"
+          else eng.continuous(slots=4, async_steps=async_steps))
+    survivor = _req(0, new_tokens=8)
+    victim = _req(1, new_tokens=20)
+    cb.admit([survivor, victim], now=0.0)
+    for i in range(3):
+        cb.step(now=float(i))
+    assert cb.cancel(victim.rid, now=3.0) is True
+    assert cb.cancel(victim.rid, now=3.0) is False  # no longer seated
+    assert victim.cancelled and victim.shed_reason == "cancel"
+    assert cb.free_slots == 3
+    while cb.has_work:
+        cb.step(now=4.0)
+    cb.flush(5.0)
+    assert survivor.done and len(survivor.tokens) == 8
+    assert cb.stats.cancelled == 1
+    assert victim in cb.cancelled_requests
+    if kind == "paged":
+        cb.pool.check()
+        # the victim's pages went back to the pool
+        assert cb.pool.pages_in_use <= (8 // cb.pool.page_size + 2)
+    # the survivor's stream matches a solo run: cancellation leaked nothing
+    solo = _req(0, new_tokens=8)
+    cb2 = (eng.paged_continuous(slots=4, async_steps=async_steps)
+           if kind == "paged"
+           else eng.continuous(slots=4, async_steps=async_steps))
+    cb2.admit([solo], now=0.0)
+    while cb2.has_work:
+        cb2.step(now=1.0)
+    cb2.flush(2.0)
+    assert solo.tokens == survivor.tokens
+    assert eng.post_warmup_compiles == 0
+    eng.close()
+
+
+def test_deadline_cancels_mid_stream(smoke_setup):
+    """A seated request past ``deadline_s`` is cancelled on the next step
+    boundary and accounted as a deadline miss."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, spec_k=0)
+    cb = eng.paged_continuous(slots=4)
+    doomed = _req(0, new_tokens=20)
+    doomed.deadline_s = 2.0
+    free = _req(1, new_tokens=6)
+    cb.admit([doomed, free], now=0.0)
+    cb.step(now=1.0)
+    assert not doomed.cancelled  # deadline not passed yet
+    cb.step(now=5.0)
+    assert doomed.cancelled and doomed.shed_reason == "deadline"
+    assert cb.stats.deadline_missed == 1
+    while cb.has_work:
+        cb.step(now=6.0)
+    cb.flush(7.0)
+    assert free.done and len(free.tokens) == 6
+    eng.close()
+
+
+# --------------------------------------------------- hardened stream driver
+def test_overload_stream_inert_matches_paged(smoke_setup):
+    """Every hardening knob at its default: run_overload_stream must be
+    behaviourally run_paged_stream — same finished count, same greedy
+    tokens, zero post-warmup compiles, empty robustness accounting."""
+    cfg, params = smoke_setup
+
+    def _traffic():
+        return poisson_arrivals(10, 200.0, seed=11, tokens_mean=5,
+                                tokens_max=12, sample_frac=0.25,
+                                vocab=cfg.vocab_size)
+
+    eng = _engine(cfg, params)
+    a = _traffic()
+    rep_a = run_paged_stream(eng, a, slots=4)
+    b = _traffic()
+    rep_b = run_overload_stream(eng, b, slots=4)
+    assert rep_b["engine"] == "overload"
+    assert rep_b["finished"] == rep_a["finished"] == 10
+    tok_a = {r.rid: r.tokens for r in a if r.greedy}
+    tok_b = {r.rid: r.tokens for r in b if r.greedy}
+    assert tok_a == tok_b
+    assert rep_b["shed"] == rep_b["cancelled"] == rep_b["failed"] == 0
+    assert rep_b["unserved"] == 0
+    assert rep_b["degrade_transitions"] == []
+    assert rep_b["compiles_after_warmup"] == 0
+    eng.close()
+
+
+def test_overload_stream_hardened_sheds_and_degrades(smoke_setup):
+    """Sustained overload against a bounded queue: sheds are exact, the
+    ladder steps down over warmed keys, every request is accounted
+    exactly once, and nothing compiles post-warmup."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, num_pages=16)
+    n = 28
+    reqs = poisson_arrivals(n, 5000.0, seed=5, tokens_mean=8,
+                            tokens_max=16, sample_frac=0.0,
+                            vocab=cfg.vocab_size)
+    for r in reqs:
+        r.ttl_s = 0.5
+    # capacity must clear the default controller's queue_high
+    # (max(2*slots, 8)) or the ladder could never see overload
+    rep = run_overload_stream(
+        eng, reqs, slots=2, capacity=12, shed_policy="drop-oldest",
+        queue_ttl_s=0.5, degrade=True,
+    )
+    assert rep["shed"] > 0, "a 2-slot engine at 5000 rps must shed"
+    # exact accounting: every request is finished, shed, cancelled,
+    # failed, or unserved — and unserved means the driver lost one
+    assert (rep["finished"] + rep["shed"] + rep["cancelled"]
+            + rep["failed"] + rep["unserved"]) == n
+    assert rep["unserved"] == 0
+    downs = [t for t in rep["degrade_transitions"]
+             if t["why"] != "recovered"]
+    assert downs, "the ladder never engaged under 2x+ overload"
+    assert rep["compiles_after_warmup"] == 0
+    assert rep["stragglers"] >= 0  # watchdog wired (counter exists)
+    eng.close()
+
+
+def test_overload_stream_async_inert(smoke_setup):
+    """The hardened driver composes with the async step pipeline."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params)
+    reqs = poisson_arrivals(8, 300.0, seed=3, tokens_mean=4,
+                            tokens_max=8, sample_frac=0.25,
+                            vocab=cfg.vocab_size)
+    rep = run_overload_stream(eng, reqs, slots=4, async_steps=True)
+    assert rep["finished"] == 8 and rep["unserved"] == 0
+    assert rep["compiles_after_warmup"] == 0
+    eng.close()

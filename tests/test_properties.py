@@ -160,3 +160,103 @@ def test_decode_position_masking():
     l1, _ = models.decode_step(cfg, params, cache, tok, jnp.int32(5))
     l2, _ = models.decode_step(cfg, params, poisoned, tok, jnp.int32(5))
     np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+# ------------------------------------------------- page-pool conservation
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.integers(0, 2), min_size=1, max_size=200),
+)
+@settings(max_examples=50, deadline=None)
+def test_page_pool_refcount_algebra(seed, ops):
+    """Any alloc/incref/decref interleaving keeps every page exactly free
+    xor referenced — ``check()`` never trips and page counts conserve."""
+    from repro.runtime.kvcache import PagePool
+
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=8, page_size=4)
+    live: list[int] = []
+    for op in ops:
+        if op == 0:
+            pid = pool.alloc()
+            if pid is not None:
+                live.append(pid)
+        elif op == 1 and live:
+            pid = live[int(rng.integers(len(live)))]
+            pool.incref(pid)
+            live.append(pid)
+        elif op == 2 and live:
+            pid = live.pop(int(rng.integers(len(live))))
+            pool.decref(pid)
+        pool.check()
+        assert pool.pages_free + pool.pages_in_use == pool.num_pages
+    for pid in live:
+        pool.decref(pid)
+    pool.check()
+    assert pool.pages_in_use == 0
+
+
+@_pytest.mark.parametrize("seed", [0, 1, 2])
+def test_page_pool_balances_under_serving_interleavings(seed):
+    """§15 containment invariant at the batcher level: a random
+    interleaving of admit / cancel / budget trim / injected faults
+    (poisoned emissions quarantining slots, allocation failures forcing
+    evict/preempt) leaves the pool exactly consistent after every step,
+    and a drained batcher holds only prefix-cache pages."""
+    from repro.core import reset_entry_points
+    from repro.core.faults import FaultPlan
+    from repro.runtime.scheduler import Request
+    from repro.runtime.serve import Engine, EngineConfig
+
+    cfg = get_config("olmo-1b").smoke()
+    params = models.init_params(cfg, KEY)
+    reset_entry_points()
+    eng = Engine(cfg, params, EngineConfig(
+        max_len=32, batch_quantum=2, max_batch=4, page_size=8,
+        num_pages=12, prefill_chunk=8, spec_k=0,
+    ))
+    cb = eng.paged_continuous(slots=4)
+    plan = FaultPlan.random(
+        seed, sites=("step_output", "pool_alloc"), n=3, horizon=30
+    )
+    cb.attach_faults(plan)
+    cb.pool.attach_faults(plan)
+    rng = np.random.default_rng(seed)
+    prompts = [tuple(int(x) for x in rng.integers(0, cfg.vocab_size, 10))
+               for _ in range(3)]
+    pending = [
+        Request(rid=i, new_tokens=int(rng.integers(2, 10)), greedy=True,
+                prompt=prompts[int(rng.integers(len(prompts)))])
+        for i in range(10)
+    ]
+    for it in range(300):
+        op = int(rng.integers(4))
+        if op == 0 and pending and cb.free_slots:
+            take = pending[:cb.free_slots]
+            pending = list(cb.admit(take, now=float(it))) \
+                + pending[len(take):]
+        elif op == 1:
+            seated = [r.rid for r in cb._slots if r is not None]
+            if seated:
+                cb.cancel(int(rng.choice(seated)), now=float(it))
+        elif op == 2:
+            cb.set_knobs(token_budget=int(rng.integers(5, 25)))
+        cb.step(now=float(it))
+        pending.extend(cb.requeued)
+        cb.requeued.clear()
+        pending.extend(cb.preempted)
+        cb.preempted.clear()
+        cb.pool.check()
+        assert cb.pool.pages_free + cb.pool.pages_in_use == cb.pool.num_pages
+        if not pending and not cb.has_work:
+            break
+    else:
+        raise AssertionError("interleaving never drained")
+    cb.flush(1000.0)
+    cb.pool.check()
+    # every slot released: the only pages still referenced belong to the
+    # prefix cache, and evicting it returns the pool to empty
+    cb.prefix.evict(cb.pool.num_pages)
+    cb.pool.check()
+    assert cb.pool.pages_in_use == 0
+    eng.close()
