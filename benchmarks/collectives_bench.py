@@ -27,6 +27,12 @@ import jax, jax.numpy as jnp, re
 from jax.sharding import PartitionSpec as P
 from repro.distributed.collectives import compressed_psum
 
+# jax moved shard_map out of jax.experimental at some versions; take
+# whichever this jax provides (mirrors repro.distributed.pipeline)
+shard_map = getattr(jax, 'shard_map', None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
+
 mesh = jax.make_mesh((2,), ('pod',))  # the production pod axis
 x = jax.ShapeDtypeStruct((2, 4096), jnp.float32)
 
@@ -46,10 +52,10 @@ def wire_bytes(fn):
                 break
     return total
 
-plain = lambda x: jax.shard_map(lambda s: jax.lax.psum(s, 'pod'), mesh=mesh,
-                                in_specs=P('pod'), out_specs=P('pod'))(x)
-comp = lambda x: jax.shard_map(lambda s: compressed_psum(s, 'pod'), mesh=mesh,
-                               in_specs=P('pod'), out_specs=P('pod'))(x)
+plain = lambda x: shard_map(lambda s: jax.lax.psum(s, 'pod'), mesh=mesh,
+                            in_specs=P('pod'), out_specs=P('pod'))(x)
+comp = lambda x: shard_map(lambda s: compressed_psum(s, 'pod'), mesh=mesh,
+                           in_specs=P('pod'), out_specs=P('pod'))(x)
 print('PLAIN', wire_bytes(plain))
 print('COMP', wire_bytes(comp))
 """

@@ -231,6 +231,42 @@ def _overload_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _sharding_suite(fast: bool, json_path: str) -> list[str]:
+    from . import sharding_bench
+
+    res = sharding_bench.sharding_comparison(fast=fast)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for m, r in res["meshes"].items():
+        rows.append(
+            f"sharding/mesh-{m}/proc_tok_per_s,"
+            f"{r.get('proc_tok_per_s', 0.0):.1f},"
+            f"devices={r.get('devices')};"
+            f"per_device={r.get('per_device_proc_tok_per_s', 0.0):.1f};"
+            f"p95_ms={r.get('p95_ms', 0.0):.1f};"
+            f"pool_shards={r.get('pool_shards')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    rb = res["rebind"]
+    rows.append(
+        f"sharding/rebind,{rb['mesh_rebinds']},"
+        f"finished={rb['finished']}/{rb['expected']};"
+        f"compiles_after_warmup={rb['compiles_after_warmup']}"
+    )
+    for name, d in res.get("collectives", {}).items():
+        rows.append(
+            f"sharding/collectives/{name},{d['median_us']:.3f},"
+            f"p99={d['p99_us']:.3f}"
+        )
+    rows.append(
+        f"sharding/acceptance,0.0,"
+        f"{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"sharding/json,0.0,written={json_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -242,6 +278,7 @@ def main() -> None:
     ap.add_argument("--quantkv-json", default="BENCH_quantkv.json")
     ap.add_argument("--telemetry-json", default="BENCH_telemetry.json")
     ap.add_argument("--overload-json", default="BENCH_overload.json")
+    ap.add_argument("--sharding-json", default="BENCH_sharding.json")
     args = ap.parse_args()
 
     from . import (
@@ -274,6 +311,7 @@ def main() -> None:
         "quantkv": lambda: _quantkv_suite(args.fast, args.quantkv_json),
         "telemetry": lambda: _telemetry_suite(args.fast, args.telemetry_json),
         "overload": lambda: _overload_suite(args.fast, args.overload_json),
+        "sharding": lambda: _sharding_suite(args.fast, args.sharding_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

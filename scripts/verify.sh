@@ -10,7 +10,6 @@ echo "== tier-1 tests =="
 # this repo's code paths; see .claude/skills/verify/SKILL.md). Everything
 # else must pass.
 python -m pytest -x -q \
-  --deselect tests/test_distributed.py::test_compressed_psum_int8_wire \
   --deselect tests/test_distributed.py::test_dryrun_cell_end_to_end_small_arch \
   --deselect tests/test_hlo_analysis.py::test_scan_flops_match_unrolled \
   --deselect tests/test_hlo_analysis.py::test_xla_reported_undercounts_scan
@@ -54,6 +53,16 @@ python -m repro.launch.serve --smoke --requests 12 --rate 200 \
   --page-size 8 --num-pages 20 --prefix-len 8 \
   --trace-out trace_smoke.json --metrics-out metrics_smoke.prom
 python scripts/check_trace.py trace_smoke.json metrics_smoke.prom
+
+echo "== sharded serving smoke (CPU, 2 fake devices) =="
+# Active 1x2 (model-parallel) with the 1x1 standby warmed (DESIGN.md §16):
+# the mesh is a dispatch coordinate, so serving at 1x2 must report zero
+# post-warmup compiles like any other lane.
+XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+python -m repro.launch.serve --smoke --requests 8 --rate 200 \
+  --tokens-mean 4 --max-len 32 --engine paged \
+  --page-size 8 --num-pages 20 --prefix-len 8 \
+  --mesh 1x2 --meshes "1x1"
 
 echo "== overload hardening + chaos smoke matrix (CPU) =="
 # {sync,async} x {spec on,off} through the hardened driver with bounded

@@ -238,6 +238,15 @@ _PAGES = LaneAxis("pages_bucket", "_pages_buckets")
 _CHUNK = LaneAxis("chunk_bucket", "_chunk_buckets")
 _KBUCKET = LaneAxis("k_bucket", "_k_buckets")
 _KVDTYPE = LaneAxis("kv_dtype", "_warm_kv_dtypes")
+# Draft lanes carry their own storage-dtype ladder: an int8 draft cache can
+# pair with an fp32 verify pool (DESIGN.md §16) without multiplying the
+# verify lanes' fan-out. The axis *name* is distinct from the pool lanes'
+# "kv_dtype" so a warmup pin on the pool dtype never pins the draft's.
+_DRAFT_KVDTYPE = LaneAxis("draft_kv_dtype", "_warm_draft_kv_dtypes")
+# The device topology as a trailing coordinate on every continuous lane
+# (DESIGN.md §16): "DPxMP" mesh names, warmed like any bucket ladder, so a
+# topology change is a rebind over compiled keys — never a compile.
+_MESH = LaneAxis("mesh", "_warm_meshes")
 
 BURST = LANES.register(LaneSpec(
     name="burst", role="decode",
@@ -251,7 +260,7 @@ BURST = LANES.register(LaneSpec(
 
 CB = LANES.register(LaneSpec(
     name="cb", role="decode",
-    axes=(_SLOTS,),
+    axes=(_SLOTS, _MESH),
     builder="_build_slot_decode", warmer="_warm_cb",
     engines=frozenset({"dense"}),
     doc="Dense continuous decode: one executable per slot count, sampling "
@@ -260,7 +269,7 @@ CB = LANES.register(LaneSpec(
 
 CBP = LANES.register(LaneSpec(
     name="cbp", role="decode",
-    axes=(_SLOTS, _PAGES, _KVDTYPE),
+    axes=(_SLOTS, _PAGES, _KVDTYPE, _MESH),
     builder="_build_paged_slot_decode", warmer="_warm_cbp",
     engines=frozenset({"paged"}),
     doc="Paged continuous decode: capacity bucket + page dtype as "
@@ -269,7 +278,7 @@ CBP = LANES.register(LaneSpec(
 
 PF = LANES.register(LaneSpec(
     name="pf", role="prefill",
-    axes=(_SLOTS, _CHUNK, _KVDTYPE),
+    axes=(_SLOTS, _CHUNK, _KVDTYPE, _MESH),
     builder="_build_paged_prefill", warmer="_warm_pf",
     engines=frozenset({"paged"}), enabled="_supports_chunked_prefill",
     doc="Paged chunked prefill, batched: every prefilling slot the budget "
@@ -278,7 +287,7 @@ PF = LANES.register(LaneSpec(
 
 PFD = LANES.register(LaneSpec(
     name="pfd", role="prefill",
-    axes=(_SLOTS, _CHUNK),
+    axes=(_SLOTS, _CHUNK, _MESH),
     builder="_build_slot_prefill", warmer="_warm_pfd",
     engines=frozenset({"dense"}), enabled="_supports_chunked_prefill",
     doc="Dense chunked prefill, batched (DESIGN.md §10).",
@@ -286,7 +295,7 @@ PFD = LANES.register(LaneSpec(
 
 VF = LANES.register(LaneSpec(
     name="vf", role="verify",
-    axes=(_SLOTS, _KBUCKET, _KVDTYPE),
+    axes=(_SLOTS, _KBUCKET, _KVDTYPE, _MESH),
     builder="_build_paged_verify", warmer="_warm_vf",
     engines=frozenset({"paged"}), enabled="_spec_lanes_enabled",
     doc="Paged verify: K+1 window through the chunk path (DESIGN.md §11).",
@@ -294,7 +303,7 @@ VF = LANES.register(LaneSpec(
 
 VFD = LANES.register(LaneSpec(
     name="vfd", role="verify",
-    axes=(_SLOTS, _KBUCKET),
+    axes=(_SLOTS, _KBUCKET, _MESH),
     builder="_build_slot_verify", warmer="_warm_vfd",
     engines=frozenset({"dense"}), enabled="_spec_lanes_enabled",
     doc="Dense verify (DESIGN.md §11).",
@@ -302,7 +311,7 @@ VFD = LANES.register(LaneSpec(
 
 DR = LANES.register(LaneSpec(
     name="dr", role="draft",
-    axes=(_SLOTS, _KBUCKET),
+    axes=(_SLOTS, _KBUCKET, _DRAFT_KVDTYPE, _MESH),
     builder="_build_draft", warmer="_warm_dr",
     engines=frozenset({"dense", "paged"}), enabled="_spec_lanes_enabled",
     doc="Draft lane: K scanned decode steps of the truncated-layer view "
@@ -311,7 +320,7 @@ DR = LANES.register(LaneSpec(
 
 DRP = LANES.register(LaneSpec(
     name="drp", role="draft",
-    axes=(_SLOTS, _CHUNK),
+    axes=(_SLOTS, _CHUNK, _DRAFT_KVDTYPE, _MESH),
     builder="_build_draft_prefill", warmer="_warm_drp",
     engines=frozenset({"dense", "paged"}), enabled="_spec_lanes_enabled",
     doc="Draft prompt mirror: chunked dense ingestion over the draft view "

@@ -275,3 +275,150 @@ def to_named(tree_of_pspecs: Any, mesh: Mesh) -> Any:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ------------------------------------------------------- serving mesh plans
+# The serving engine treats the device topology as a dispatch coordinate
+# (DESIGN.md §16): every lane executable is AOT-compiled per mesh *name*
+# ("1x1", "1x2", "2x2", ... = data x model) and a topology change at run
+# time is a hot-slot flip plus a device_put of the live cache — never a
+# compile. A MeshPlan owns the NamedSharding trees for one such name.
+
+SERVING_AXES = ("data", "model")
+
+
+def parse_mesh_name(name: str) -> tuple[int, int]:
+    """"2x2" / "2,2" -> (dp, mp). dp shards slots/pages, mp shards params."""
+    parts = re.split(r"[x,]", str(name).strip().lower())
+    if len(parts) != 2:
+        raise ValueError(
+            f"mesh name must be 'DPxMP' (e.g. '1x2'), got {name!r}"
+        )
+    try:
+        dp, mp = int(parts[0]), int(parts[1])
+    except ValueError as e:
+        raise ValueError(f"mesh name must be 'DPxMP', got {name!r}") from e
+    if dp < 1 or mp < 1:
+        raise ValueError(f"mesh sizes must be >= 1, got {name!r}")
+    return dp, mp
+
+
+def mesh_name(dp: int, mp: int) -> str:
+    return f"{dp}x{mp}"
+
+
+class MeshPlan:
+    """Sharding plan for one serving-mesh coordinate.
+
+    ``single`` plans ("1x1") carry no jax Mesh at all: builders take the
+    exact unsharded code path, which is what makes the 1x1 lane bitwise
+    identical to the pre-mesh engine. Non-single plans lazily build a
+    ``Mesh((dp, mp), ("data", "model"))`` over the first dp*mp devices
+    (redco-style dp/mp) and hand out NamedSharding trees for params,
+    caches, and per-slot row arrays.
+    """
+
+    def __init__(self, name: str):
+        self.dp, self.mp = parse_mesh_name(name)
+        self.name = mesh_name(self.dp, self.mp)
+        self._mesh: Mesh | None = None
+
+    @property
+    def single(self) -> bool:
+        return self.dp == 1 and self.mp == 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.dp * self.mp
+
+    @property
+    def mesh(self) -> Mesh:
+        if self._mesh is None:
+            avail = len(jax.devices())
+            if self.num_devices > avail:
+                raise ValueError(
+                    f"mesh {self.name!r} needs {self.num_devices} devices, "
+                    f"only {avail} visible (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N for CPU runs)"
+                )
+            self._mesh = jax.make_mesh((self.dp, self.mp), SERVING_AXES)
+        return self._mesh
+
+    # --- spec builders (all return NamedSharding trees / values) ---
+    def _named(self, spec_tree: Any) -> Any:
+        return to_named(spec_tree, self.mesh)
+
+    def param_shardings(self, params_shape: Any) -> Any:
+        """TP-only param shardings: PARAM_RULES with the FSDP ('data')
+        assignments stripped — serving replicates weights across the data
+        axis; only the 'model' axis splits them."""
+        specs = param_pspec_tree(params_shape, self.mesh)
+        return self._named(
+            jax.tree.map(
+                lambda s: _strip_axes(s, ("data", "pod")),
+                specs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
+        )
+
+    def row_sharding(self, shape: tuple[int, ...]) -> NamedSharding:
+        """Per-slot arrays (tok [S,1], pos [S], bt [S,PB], keys [S,2], ...):
+        slots over 'data' when divisible, else replicated."""
+        parts: list = [None] * len(shape)
+        if shape and shape[0] % self.dp == 0:
+            parts[0] = "data"
+        return NamedSharding(self.mesh, P(*parts))
+
+    def row_shardings(self, avals: Sequence[Any]) -> tuple:
+        return tuple(self.row_sharding(tuple(a.shape)) for a in avals)
+
+    def dense_cache_shardings(self, cache_shape: Any) -> Any:
+        """Dense per-slot caches (leaves stacked [m, S, ...]): slots over
+        'data'; attention KV [m,S,L,KH,dh] also takes heads over 'model'
+        when divisible (falling back to the seq dim, flash-decode style)."""
+
+        def one(path, leaf):
+            shape = tuple(leaf.shape)
+            parts: list = [None] * len(shape)
+            if len(shape) >= 2 and shape[1] % self.dp == 0:
+                parts[1] = "data"
+            pstr = _path_str(path)
+            if pstr.endswith("/k") or pstr.endswith("/v"):
+                if len(shape) == 5 and shape[3] % self.mp == 0:
+                    parts[3] = "model"
+                elif len(shape) == 5 and shape[2] % self.mp == 0:
+                    parts[2] = "model"
+            return P(*parts)
+
+        return self._named(
+            jax.tree_util.tree_map_with_path(one, cache_shape)
+        )
+
+    def paged_cache_shardings(self, cache_shape: Any) -> Any:
+        """Paged pools (kv leaves [m, P, ps, KH, dh], int8 scale leaves
+        [m, P, ps]): the physical page axis over 'data' (the host-side
+        pool hands each shard a contiguous page block, kvcache.py), heads
+        over 'model' when divisible."""
+
+        def one(leaf):
+            shape = tuple(leaf.shape)
+            parts: list = [None] * len(shape)
+            if len(shape) >= 2 and shape[1] % self.dp == 0:
+                parts[1] = "data"
+            if len(shape) == 5 and shape[3] % self.mp == 0:
+                parts[3] = "model"
+            return P(*parts)
+
+        return self._named(jax.tree.map(one, cache_shape))
+
+    def __repr__(self) -> str:
+        return f"MeshPlan({self.name!r})"
+
+
+def _strip_axes(spec: P, drop: tuple[str, ...]) -> P:
+    parts: list = []
+    for p in tuple(spec):
+        names = (p,) if isinstance(p, str) else tuple(p or ())
+        keep = tuple(n for n in names if n not in drop)
+        parts.append(keep[0] if len(keep) == 1 else (keep or None))
+    return P(*parts)

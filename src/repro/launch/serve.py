@@ -67,6 +67,8 @@ def _print_report(rep: dict) -> None:
             "prefill_chunks",
             "chunk_bucket_crossings",
             "h2d_uploads",
+            "mesh",
+            "pool_shards",
         )
         if k in rep
     }
@@ -193,6 +195,18 @@ def main(argv: list[str] | None = None) -> dict:
                          "~1/4 the bytes; the dtype is a warmed dispatch "
                          "coordinate, so serving either pool never "
                          "compiles mid-stream")
+    ap.add_argument("--mesh", default="1x1",
+                    help="serving device mesh 'DPxMP' — data x model "
+                         "parallel (also accepts 'dp,mp'). Meshes over one "
+                         "device need that many JAX devices (on CPU: "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=N). The mesh is an AOT-warmed dispatch "
+                         "coordinate (DESIGN.md §16)")
+    ap.add_argument("--meshes", default="",
+                    help="space-separated standby mesh names to AOT-warm "
+                         "alongside --mesh (e.g. '1x2 2x2'): a mid-stream "
+                         "rebind onto any of them — scale-out or failover "
+                         "shrink — is a hot-slot flip, never a compile")
     ap.add_argument("--async-steps", action="store_true",
                     help="software-pipelined step loop (DESIGN.md §13): "
                          "host plans step N+1 while step N's outputs stay "
@@ -295,6 +309,8 @@ def main(argv: list[str] | None = None) -> dict:
         spec_k=args.spec_k,
         draft_layers=args.draft_layers,
         kv_dtype=args.kv_dtype,
+        mesh=args.mesh,
+        meshes=tuple(args.meshes.split()),
     )
 
     def traffic(seed: int):

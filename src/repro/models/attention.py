@@ -235,9 +235,25 @@ def _decode_sdpa_rows(
     return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
 
 
-def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
-    dt = dtype_of(cfg)
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, kv_dtype: str = "fp32"
+) -> dict:
+    """Dense per-slot KV cache. ``kv_dtype="int8"`` stores quantised rows
+    plus per-(row, position) scales — the draft lanes' storage coordinate
+    (DESIGN.md §16); decode paths detect the dtype from the cache leaves,
+    so one semi-static executable exists per storage format."""
     shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    if kv_dtype == "int8":
+        sc = (batch, max_len)
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "ks": jnp.zeros(sc, jnp.float32),
+            "vs": jnp.zeros(sc, jnp.float32),
+        }
+    if kv_dtype != "fp32":
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
+    dt = dtype_of(cfg)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
@@ -298,6 +314,27 @@ def decode_attention(
     q, k, v = _qkv(cfg, p, x, positions)
     q = hint(q, "batch", None, None, None)
     ki = jnp.arange(cache["k"].shape[1])
+    if cache["k"].dtype == jnp.int8:
+        # Quantised dense rows (draft lanes, DESIGN.md §16): scatter the new
+        # row as int8 + its scale, dequantise the whole view for the shared
+        # SDPA tail. Per-row form only — the scalar-pos burst engine has no
+        # int8 coordinate.
+        if not per_row:
+            raise ValueError("int8 dense KV caches require per-row pos [B]")
+        qk, ksc = quantise_kv_rows(k[:, 0])  # [B,KH,dh] -> int8 + [B]
+        qv, vsc = quantise_kv_rows(v[:, 0])
+        sel = ki[None, :] == pos[:, None]  # [B,S]
+        sel4 = sel[:, :, None, None]
+        ckq = jnp.where(sel4, qk[:, None], cache["k"])
+        cvq = jnp.where(sel4, qv[:, None], cache["v"])
+        cks = jnp.where(sel, ksc[:, None], cache["ks"])
+        cvs = jnp.where(sel, vsc[:, None], cache["vs"])
+        ck = dequantise_kv_rows(ckq, cks)
+        cv = dequantise_kv_rows(cvq, cvs)
+        return (
+            _decode_sdpa_rows(cfg, p, q, ck, cv, pos, local=local),
+            {"k": ckq, "v": cvq, "ks": cks, "vs": cvs},
+        )
     if per_row:
         sel = (ki[None, :] == pos[:, None])[:, :, None, None]  # [B,S,1,1]
         ck = jnp.where(sel, k, cache["k"])
@@ -589,6 +626,23 @@ def chunked_decode_attention(
     idx = jnp.clip(ki[None, :] - start[:, None], 0, c - 1)  # [B,Smax]
     sel4 = sel[:, :, None, None]
     idx4 = idx[:, :, None, None]
+    if cache["k"].dtype == jnp.int8:
+        # int8 chunk ingestion (draft prompt mirror, DESIGN.md §16): the
+        # chunk's rows quantise once, then insert exactly like the fp32
+        # path — bitwise equal to C iterations of the int8 per-row decode
+        # because the per-row scales are position-local.
+        qk, ksc = quantise_kv_rows(k)  # [B,C,KH,dh] -> int8 + [B,C]
+        qv, vsc = quantise_kv_rows(v)
+        ckq = jnp.where(sel4, jnp.take_along_axis(qk, idx4, axis=1), cache["k"])
+        cvq = jnp.where(sel4, jnp.take_along_axis(qv, idx4, axis=1), cache["v"])
+        cks = jnp.where(sel, jnp.take_along_axis(ksc, idx, axis=1), cache["ks"])
+        cvs = jnp.where(sel, jnp.take_along_axis(vsc, idx, axis=1), cache["vs"])
+        ck = dequantise_kv_rows(ckq, cks)
+        cv = dequantise_kv_rows(cvq, cvs)
+        return (
+            _decode_sdpa_rows(cfg, p, q, ck, cv, positions, local=local),
+            {"k": ckq, "v": cvq, "ks": cks, "vs": cvs},
+        )
     ck = jnp.where(sel4, jnp.take_along_axis(k, idx4, axis=1), cache["k"])
     cv = jnp.where(sel4, jnp.take_along_axis(v, idx4, axis=1), cache["v"])
     return (

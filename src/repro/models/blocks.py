@@ -84,11 +84,17 @@ def block_apply(
 
 
 def block_cache_init(
-    cfg: ArchConfig, slot: int, batch: int, max_len: int
+    cfg: ArchConfig, slot: int, batch: int, max_len: int,
+    kv_dtype: str = "fp32",
 ) -> dict:
     mixer = cfg.mixer_at(slot)
     if mixer.startswith("attn"):
-        return attn.init_kv_cache(cfg, batch, max_len)
+        return attn.init_kv_cache(cfg, batch, max_len, kv_dtype)
+    if kv_dtype != "fp32":
+        raise ValueError(
+            f"{cfg.name}: slot {slot} mixer {mixer!r} has recurrent state; "
+            f"quantised dense KV is attention-only."
+        )
     return ssm_mod.init_ssm_cache(cfg, batch)
 
 

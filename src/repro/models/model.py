@@ -137,12 +137,14 @@ def loss_fn(
 
 
 # ------------------------------------------------------------------- serving
-def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> list:
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, kv_dtype: str = "fp32"
+) -> list:
     p = cfg.period
     m = cfg.num_layers // p
     caches = []
     for slot in range(p):
-        one = block_cache_init(cfg, slot, batch, max_len)
+        one = block_cache_init(cfg, slot, batch, max_len, kv_dtype)
         caches.append(jax.tree.map(lambda t: jnp.stack([t] * m), one))
     return caches
 

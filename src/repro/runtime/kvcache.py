@@ -102,9 +102,19 @@ class PoolStats:
 class PagePool:
     """Fixed-size page allocator with reference counts.
 
-    ``num_pages`` counts *allocatable* pages; the device cache holds
-    ``num_pages + 1`` physical pages because page 0 is the reserved null page
-    (never allocated, target of inactive-slot writes).
+    ``num_pages`` counts *allocatable* pages; with the default single shard
+    the device cache holds ``num_pages + 1`` physical pages because page 0
+    is the reserved null page (never allocated, target of inactive-slot
+    writes).
+
+    ``shards`` partitions the pool for data-parallel serving (DESIGN.md
+    §16): shard ``s`` owns the contiguous physical block
+    ``[s*(per_shard+1), (s+1)*(per_shard+1))`` with its *own* null page at
+    the block's first id, so the device page axis splits evenly over the
+    mesh's ``data`` axis and a slot's gathers/scatters never leave its
+    shard. Page ids are physical-layout global; ``shard_of``/``is_null``
+    decode them. ``shards=1`` reproduces the classic layout bit for bit
+    (null page 0, ids 1..num_pages).
 
     ``kv_dtype`` records the pool's page storage dtype (DESIGN.md §12) —
     host-side metadata only (the device cache owns the actual arrays): it
@@ -118,6 +128,7 @@ class PagePool:
         page_size: int,
         kv_dtype: str = "fp32",
         telemetry=None,
+        shards: int = 1,
     ):
         if num_pages < 1:
             raise KVCacheError(f"num_pages must be >= 1, got {num_pages}")
@@ -127,12 +138,26 @@ class PagePool:
             raise KVCacheError(
                 f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
             )
+        if shards < 1:
+            raise KVCacheError(f"shards must be >= 1, got {shards}")
+        if num_pages % shards:
+            raise KVCacheError(
+                f"num_pages ({num_pages}) must divide evenly over "
+                f"{shards} shards"
+            )
         self.num_pages = num_pages
         self.page_size = page_size
         self.kv_dtype = kv_dtype
-        # page ids 1..num_pages are allocatable; 0 is the null page
-        self._free: deque[int] = deque(range(1, num_pages + 1))
-        self._ref = [0] * (num_pages + 1)
+        self.shards = shards
+        self.per_shard = num_pages // shards
+        self._block = self.per_shard + 1  # physical pages per shard block
+        # per-shard free lists over physical-layout global ids; each
+        # shard's first physical page is its null page, never allocated
+        self._free: list[deque[int]] = [
+            deque(range(s * self._block + 1, (s + 1) * self._block))
+            for s in range(shards)
+        ]
+        self._ref = [0] * (shards * self._block)
         self.stats = PoolStats()
         # Flight-recorder hookup (core.telemetry, DESIGN.md §14): page
         # lifecycle events + occupancy counter samples on the "page-pool"
@@ -141,6 +166,29 @@ class PagePool:
         self.telemetry = telemetry
         self._trace = telemetry.trace_or_none() if telemetry else None
         self._faults = None  # core.faults.FaultPlan ("pool_alloc" site)
+
+    # ------------------------------------------------------- shard geometry
+    @property
+    def num_physical(self) -> int:
+        """Physical pages the device cache must hold (incl. null pages)."""
+        return self.shards * self._block
+
+    def shard_of(self, pid: int) -> int:
+        self._check_pid(pid)
+        return pid // self._block
+
+    def is_null(self, pid: int) -> bool:
+        return pid % self._block == 0
+
+    def null_page(self, shard: int = 0) -> int:
+        self._check_shard(shard)
+        return shard * self._block
+
+    def _check_shard(self, shard: int) -> None:
+        if not 0 <= shard < self.shards:
+            raise KVCacheError(
+                f"shard {shard} outside pool [0, {self.shards})"
+            )
 
     def attach_faults(self, plan) -> None:
         """Arm a ``core.faults.FaultPlan`` at the ``pool_alloc`` site: an
@@ -155,15 +203,30 @@ class PagePool:
             "pool_occupancy", "page-pool",
             pages_in_use=self.pages_in_use, pages_free=self.pages_free,
         )
+        # Per-shard occupancy rides the always-on metrics registry with a
+        # shard label (DESIGN.md §16) so a topology rebind's imbalance is
+        # visible; single-shard pools keep the historical label-free gauge.
+        if self.telemetry is not None and self.shards > 1:
+            reg = self.telemetry.registry
+            for s in range(self.shards):
+                reg.set(
+                    "pool_occupancy",
+                    self.per_shard - len(self._free[s]),
+                    shard=str(s),
+                )
 
     # ------------------------------------------------------------ accounting
     @property
     def pages_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
     @property
     def pages_in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.num_pages - self.pages_free
+
+    def pages_free_in(self, shard: int) -> int:
+        self._check_shard(shard)
+        return len(self._free[shard])
 
     @property
     def total_tokens(self) -> int:
@@ -176,26 +239,39 @@ class PagePool:
 
     def check(self) -> None:
         """Invariant: every page is exactly free or ref'd, never both/neither."""
-        free = set(self._free)
-        if len(free) != len(self._free):
+        free: set[int] = set()
+        for s, fl in enumerate(self._free):
+            for pid in fl:
+                if self.shard_of(pid) != s:
+                    raise KVCacheError(
+                        f"page {pid} on shard {s}'s free list belongs to "
+                        f"shard {self.shard_of(pid)}"
+                    )
+                free.add(pid)
+        if len(free) != self.pages_free:
             raise KVCacheError("free list contains duplicates")
-        for pid in range(1, self.num_pages + 1):
+        for pid in range(self.num_physical):
+            if self.is_null(pid):
+                if self._ref[pid] != 0:
+                    raise KVCacheError(
+                        f"null page {pid} acquired a refcount"
+                    )
+                continue
             if pid in free and self._ref[pid] != 0:
                 raise KVCacheError(f"page {pid} free but ref={self._ref[pid]}")
             if pid not in free and self._ref[pid] == 0:
                 raise KVCacheError(f"page {pid} leaked (ref=0, not free)")
-        if self._ref[NULL_PAGE] != 0:
-            raise KVCacheError("null page acquired a refcount")
 
     def _check_pid(self, pid: int) -> None:
-        if not 0 <= pid <= self.num_pages:
+        if not 0 <= pid < self.num_physical:
             raise KVCacheError(
-                f"page id {pid} outside pool [0, {self.num_pages}]"
+                f"page id {pid} outside pool [0, {self.num_physical})"
             )
 
     # ------------------------------------------------------------- alloc/free
-    def alloc(self) -> Optional[int]:
-        """Pop a free page with ref=1, or None when the pool is dry."""
+    def alloc(self, shard: int = 0) -> Optional[int]:
+        """Pop a free page (from ``shard``) with ref=1, or None when dry."""
+        self._check_shard(shard)
         rec = self._trace
         if self._faults is not None:
             f = self._faults.fire("pool_alloc")
@@ -208,12 +284,13 @@ class PagePool:
                     rec.emit("alloc_failure", "page-pool",
                              args={"injected": True})
                 return None
-        if not self._free:
+        if not self._free[shard]:
             self.stats.alloc_failures += 1
             if rec is not None:
-                rec.emit("alloc_failure", "page-pool")
+                rec.emit("alloc_failure", "page-pool",
+                         args={"shard": shard} if self.shards > 1 else None)
             return None
-        pid = self._free.popleft()
+        pid = self._free[shard].popleft()
         self._ref[pid] = 1
         self.stats.allocs += 1
         self.stats.peak_in_use = max(self.stats.peak_in_use, self.pages_in_use)
@@ -224,7 +301,7 @@ class PagePool:
 
     def incref(self, pid: int) -> None:
         self._check_pid(pid)
-        if pid == NULL_PAGE:
+        if self.is_null(pid):
             raise KVCacheError("cannot take a reference on the null page")
         if self._ref[pid] == 0:
             raise KVCacheError(f"incref on free page {pid}")
@@ -233,13 +310,13 @@ class PagePool:
     def decref(self, pid: int) -> bool:
         """Drop one reference; returns True when the page was freed."""
         self._check_pid(pid)
-        if pid == NULL_PAGE:
+        if self.is_null(pid):
             raise KVCacheError("cannot release the null page")
         if self._ref[pid] == 0:
             raise KVCacheError(f"double free of page {pid}")
         self._ref[pid] -= 1
         if self._ref[pid] == 0:
-            self._free.append(pid)
+            self._free[self.shard_of(pid)].append(pid)
             self.stats.frees += 1
             rec = self._trace
             if rec is not None:
@@ -254,11 +331,19 @@ class PagePool:
 class BlockTable:
     """One request's page mapping: ``pages[i]`` holds logical tokens
     ``[i*page_size, (i+1)*page_size)``; ``num_tokens`` is the logical length
-    (== the request's next write position)."""
+    (== the request's next write position).
+
+    ``shard`` is the table's pool-shard coordinate (DESIGN.md §16): every
+    page it allocates or adopts comes from that shard's block, which is the
+    host-side invariant that keeps device gathers shard-local under a
+    data-parallel mesh. The default shard 0 is the whole pool when
+    ``pool.shards == 1``.
+    """
 
     pool: PagePool
     pages: list[int] = field(default_factory=list)
     num_tokens: int = 0
+    shard: int = 0
 
     @property
     def capacity(self) -> int:
@@ -271,9 +356,20 @@ class BlockTable:
     def page_index(self, pos: int) -> int:
         return pos // self.pool.page_size
 
+    def adopt(self, pages: Sequence[int]) -> None:
+        """Take ownership of already-incref'd pages (prefix attach); the
+        pages must live in this table's shard."""
+        for pid in pages:
+            if self.pool.shard_of(pid) != self.shard:
+                raise KVCacheError(
+                    f"page {pid} (shard {self.pool.shard_of(pid)}) adopted "
+                    f"into a shard-{self.shard} table"
+                )
+        self.pages.extend(pages)
+
     def append_page(self) -> bool:
         """Grow capacity by one freshly-allocated page. False on OOM."""
-        pid = self.pool.alloc()
+        pid = self.pool.alloc(self.shard)
         if pid is None:
             return False
         self.pages.append(pid)
@@ -301,7 +397,7 @@ class BlockTable:
         pid = self.pages[idx]
         if self.pool.refcount(pid) == 1:
             return True
-        new = self.pool.alloc()
+        new = self.pool.alloc(self.shard)
         if new is None:
             return False
         if copy_page is not None:
@@ -335,7 +431,8 @@ class BlockTable:
         for pid in self.pages:
             self.pool.incref(pid)
         return BlockTable(
-            pool=self.pool, pages=list(self.pages), num_tokens=self.num_tokens
+            pool=self.pool, pages=list(self.pages),
+            num_tokens=self.num_tokens, shard=self.shard,
         )
 
     def release(self) -> None:
@@ -375,11 +472,20 @@ class PrefixCache:
     written by its owner and can never be safely shared (this is what makes
     writes COW-free on the prompt path — shared pages are read-only by
     construction).
+
+    With a sharded pool (DESIGN.md §16) the cache keeps one trie per shard:
+    a request seated on shard ``s`` can only adopt pages that physically
+    live on shard ``s``, so ``match``/``insert`` take the shard coordinate
+    and sharing never crosses the data axis (the honest cost of keeping
+    gathers shard-local — the same prompt may be cached once per shard).
     """
 
     def __init__(self, pool: PagePool):
         self.pool = pool
-        self._root = _TrieNode(None, NULL_PAGE, None)
+        self._roots = [
+            _TrieNode(None, pool.null_page(s), None)
+            for s in range(pool.shards)
+        ]
         self._clock = 0
         self._nodes = 0
 
@@ -390,6 +496,10 @@ class PrefixCache:
     def cached_pages(self) -> int:
         return self._nodes
 
+    @property
+    def _root(self) -> _TrieNode:  # single-shard convenience (tests, repr)
+        return self._roots[0]
+
     def _chunks(self, tokens: Sequence[int]) -> list[tuple[int, ...]]:
         ps = self.pool.page_size
         n_full = len(tokens) // ps
@@ -398,15 +508,17 @@ class PrefixCache:
         ]
 
     # ----------------------------------------------------------------- match
-    def match(self, tokens: Sequence[int]) -> tuple[list[int], int]:
-        """Longest full-page prefix of ``tokens`` already cached.
+    def match(
+        self, tokens: Sequence[int], shard: int = 0
+    ) -> tuple[list[int], int]:
+        """Longest full-page prefix of ``tokens`` cached *on ``shard``*.
 
         Returns ``(page_ids, matched_tokens)``; every returned page has been
         incref'd for the caller (release via ``BlockTable.release`` once the
         pages are adopted into a table, or ``pool.decref`` directly).
         """
         self._clock += 1
-        node = self._root
+        node = self._roots[shard]
         pages: list[int] = []
         for chunk in self._chunks(tokens):
             child = node.children.get(chunk)
@@ -432,12 +544,18 @@ class PrefixCache:
             raise KVCacheError(
                 f"insert: {len(chunks)} full chunks but {len(pages)} pages"
             )
-        node = self._root
+        shard = self.pool.shard_of(pages[0]) if pages else 0
+        node = self._roots[shard]
         inserted = 0
         for chunk, pid in zip(chunks, pages):
+            if self.pool.shard_of(pid) != shard:
+                raise KVCacheError(
+                    f"insert: page {pid} not on shard {shard}; a cached "
+                    f"prefix cannot straddle pool shards"
+                )
             child = node.children.get(chunk)
             if child is None:
-                if pid == NULL_PAGE:
+                if self.pool.is_null(pid):
                     raise KVCacheError("cannot cache the null page")
                 self.pool.incref(pid)  # the trie's own pin
                 child = _TrieNode(chunk, pid, node)
@@ -450,11 +568,13 @@ class PrefixCache:
         return inserted
 
     # ----------------------------------------------------------------- evict
-    def evict(self, want_pages: int = 1) -> int:
+    def evict(self, want_pages: int = 1, shard: int | None = None) -> int:
         """Drop up to ``want_pages`` *idle* cached pages (LRU leaves first).
 
         A node is evictable when it has no children and its page's only
         remaining reference is the trie's pin (no live request shares it).
+        ``shard`` restricts eviction to one shard's trie (a dry shard can
+        only be refilled from its own cached pages); None sweeps all.
         Returns the number of pages actually freed back to the pool.
 
         One trie walk total: candidates are heaped up front, and evicting a
@@ -468,7 +588,9 @@ class PrefixCache:
             return not n.children and self.pool.refcount(n.page) == 1
 
         heap = [
-            (n.last_used, id(n), n) for n in self._iter_nodes() if evictable(n)
+            (n.last_used, id(n), n)
+            for n in self._iter_nodes(shard)
+            if evictable(n)
         ]
         heapq.heapify(heap)
         freed = 0
@@ -487,12 +609,13 @@ class PrefixCache:
                 rec.emit("prefix_evict", "page-pool",
                          args={"page": victim.page})
             freed += 1
-            if parent is not self._root and evictable(parent):
+            if parent not in self._roots and evictable(parent):
                 heapq.heappush(heap, (parent.last_used, id(parent), parent))
         return freed
 
-    def _iter_nodes(self):
-        stack = list(self._root.children.values())
+    def _iter_nodes(self, shard: int | None = None):
+        roots = self._roots if shard is None else [self._roots[shard]]
+        stack = [c for r in roots for c in r.children.values()]
         while stack:
             n = stack.pop()
             yield n

@@ -425,6 +425,7 @@ class BatcherStats:
     prefill_calls: int = 0  # prefill-lane executable calls
     chunk_bucket_crossings: int = 0
     h2d_uploads: int = 0  # host->device coordinate uploads (see _DeviceMirror)
+    h2d_overlapped: int = 0  # uploads issued while a step was in flight
     # Step-pipeline telemetry (DESIGN.md §13): host-side planning/bookkeeping
     # time vs time spent blocked on device pulls, the peak number of issued-
     # but-uncommitted steps, and how many d2h transfers actually happened
@@ -529,6 +530,27 @@ class _DeviceMirror:
         """Adopt a device array the step returned (no upload needed)."""
         self._dev[name] = dev
 
+    def preload(self, name: str, host: Any) -> None:
+        """Double-buffered upload (DESIGN.md §13): stage a touched array
+        while the device is busy with an in-flight step, so the copy
+        overlaps device execution and the next ``get`` is a hit instead
+        of an issue-time stall. A later ``touch`` still invalidates the
+        staged copy, so correctness never depends on the overlap — on an
+        inline CPU backend this degrades to an early (but still counted)
+        upload and nothing else changes."""
+        if name not in self._dev:
+            self._dev[name] = jnp.asarray(host)
+            self._stats.h2d_uploads += 1
+            self._stats.h2d_overlapped += 1
+
+    def invalidate(self) -> None:
+        """Drop every device-resident copy. A mesh rebind moved the
+        serving state's placement (DESIGN.md §16): arrays committed to
+        the old mesh's devices would be rejected by the new plan's
+        executables, so the next ``get`` of each name re-uploads from
+        the (authoritative, just-committed) host copies."""
+        self._dev.clear()
+
 
 @dataclass
 class _InflightStep:
@@ -566,6 +588,10 @@ class _MultiLaneMixin:
     _decode_lane = "cb"
     _prefill_lane = "pfd"
     _verify_lane = "vfd"
+    # Active device-mesh coordinate (DESIGN.md §16); constructors override
+    # with the engine's launch mesh and ``set_mesh`` moves it mid-stream.
+    mesh = "1x1"
+    _mesh_ctl = None  # engine-wired topology-flip closure (serve.py)
 
     def _init_telemetry(self, telemetry: Telemetry | None) -> None:
         """Telemetry wiring shared by both constructors (DESIGN.md §14).
@@ -593,8 +619,15 @@ class _MultiLaneMixin:
         dt_ns = time.perf_counter_ns() - t0_ns
         h = self._lane_hist.get(lane)
         if h is None:
+            # sharded serving labels the per-lane surface with the active
+            # mesh (DESIGN.md §16) so a rebind's latency shift is visible;
+            # the classic single-device topology keeps the historical
+            # label set (handles refresh on ``set_mesh``)
+            labels = {"lane": lane}
+            if self.mesh != "1x1":
+                labels["mesh"] = self.mesh
             h = self._lane_hist[lane] = self.telemetry.registry.histogram(
-                "lane_step_ms", lane=lane
+                "lane_step_ms", **labels
             )
         h.observe(dt_ns / 1e6)
         tr = self._trace
@@ -775,6 +808,9 @@ class _MultiLaneMixin:
         decoding = self._active & ~self._prefilling
         if not decoding.any():  # _pre_issue_fast may have preempted slots
             return self._commit_rec(rec, now)
+        # the parked step is still in flight: stage any upkeep-touched
+        # coordinate arrays now so their uploads ride its execution
+        self._preload_step_inputs()
         self._decode_lane_step(now, decoding)
         if self._pending is not None:
             self.stats.inflight_depth = max(self.stats.inflight_depth, 2)
@@ -783,6 +819,23 @@ class _MultiLaneMixin:
     def _pre_issue_fast(self) -> None:
         """Cold-path upkeep that must precede an issued decode even on the
         run-ahead path (paged storage overrides with page upkeep)."""
+
+    def _preload_step_inputs(self) -> None:
+        """Double-buffered coordinate uploads (DESIGN.md §13): re-stage any
+        per-slot array whose device copy was invalidated, *off* the
+        executable-issue path — at admission time and under run-ahead while
+        the parked step still occupies the device — so the next issue pays
+        no upload stall. Steady-state decode stages nothing (every input is
+        chained via ``put``); a later host mutation still ``touch``es the
+        staged copy away, so this is a pure prefetch (the paged engine adds
+        its packed block table)."""
+        m = self._mirror
+        m.preload("tok", self._tok)
+        m.preload("pos", self._pos)
+        m.preload("active", self._active & ~self._prefilling)
+        m.preload("temps", self._temps)
+        m.preload("greedy", self._greedy)
+        m.preload("keys", self._keys)
 
     def _decode_chainable(self, decoding) -> bool:
         """True when the *next* step's plan is independent of this decode's
@@ -1211,6 +1264,48 @@ class _MultiLaneMixin:
             "token_budget": self.token_budget,
         }
 
+    def set_mesh(self, name: str, now: float = 0.0) -> str:
+        """Cold-path topology rebind (DESIGN.md §16): move the live serving
+        state onto a different *warmed* device mesh and flip the decode hot
+        slot to that mesh's executables — ``set_knobs``'s twin on the mesh
+        axis of the dispatch key. The engine's ``mesh_ctl`` validates the
+        name against the AOT-warmed ladder, ``device_put``s the caches onto
+        the new plan (pure data movement), mutates the shared mesh binding
+        every dispatch closure reads, and force-rebinds the dispatcher — by
+        construction a rebind, never a compile. The in-flight step commits
+        first so the state being moved is current; the device mirror drops
+        its copies (they were committed to the old placement) and the
+        mesh-labelled lane histograms refresh. Returns the canonical name
+        of the mesh now active. Flipping to the current mesh is a no-op."""
+        if self._mesh_ctl is None:
+            raise RuntimeError(
+                "this batcher has no mesh control surface; construct it "
+                "through Engine.continuous/paged_continuous with the "
+                "target topology in EngineConfig.mesh/meshes."
+            )
+        if self._pending is not None:
+            self._backlog.extend(self._commit_pending(now))
+        nm, self._cache, self._draft_cache = self._mesh_ctl(
+            name, self._cache, self._draft_cache, **self._mesh_hot()
+        )
+        if nm != self.mesh:
+            self.mesh = nm
+            self._mirror.invalidate()
+            self._lane_hist = {}  # new handles carry the new mesh label
+            self._rebind_step()
+        return nm
+
+    def _mesh_hot(self) -> dict:
+        """Engine hook: the batcher's current bucket state, forwarded to
+        ``mesh_ctl``'s ``hot_key`` (the paged engine adds its pages
+        bucket; the dense decode key has no bucket axis beyond slots)."""
+        return {}
+
+    def _rebind_step(self) -> None:
+        """Engine hook: re-fetch the bound hot-loop step under the new
+        mesh binding (the paged engine dispatches per step off its bucket
+        and needs no stored rebind)."""
+
     def cancel(self, rid: int, now: float = 0.0,
                reason: str = "cancel") -> bool:
         """First-class mid-stream cancellation: release the request's slot
@@ -1407,9 +1502,15 @@ class ContinuousBatcher(_MultiLaneMixin):
         spec_k: int = 0,
         async_steps: bool = False,
         telemetry: Telemetry | None = None,
+        mesh: str = "1x1",
+        mesh_ctl: Callable | None = None,
+        step_dispatch: Callable[[], Callable] | None = None,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        self.mesh = mesh  # before telemetry: lane histograms carry the label
+        self._mesh_ctl = mesh_ctl
+        self._step_dispatch = step_dispatch
         self._init_telemetry(telemetry)
         self._step = step
         self.num_slots = num_slots
@@ -1455,6 +1556,14 @@ class ContinuousBatcher(_MultiLaneMixin):
     @property
     def has_work(self) -> bool:
         return bool(self._active.any()) or self._pending is not None
+
+    def _rebind_step(self) -> None:
+        """The dense batcher holds its decode executable bound; after a
+        mesh flip the engine's dispatch closure re-fetches the hot slot
+        (``set_direction`` in ``mesh_ctl`` already flipped it — this is a
+        table read, never a compile)."""
+        if self._step_dispatch is not None:
+            self._step = self._step_dispatch()
 
     # ------------------------------------------------------------- cold path
     def admit(self, requests: Iterable[Request], now: float = 0.0) -> int:
@@ -1502,6 +1611,9 @@ class ContinuousBatcher(_MultiLaneMixin):
             self._mirror.touch(
                 "tok", "pos", "active", "temps", "greedy", "keys"
             )
+            # double-buffered uploads (DESIGN.md §13): stage the edited
+            # arrays on the admission cold path, not the next issue
+            self._preload_step_inputs()
         self.stats.admitted += admitted
         return admitted
 
@@ -1743,7 +1855,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     capacity. Slots no longer own ``[max_len]`` cache rows — each active
     request owns a ``kvcache.BlockTable`` over the shared ``PagePool``, and
     the hot-loop executable is keyed by ``("cbp", slots, pages_bucket,
-    kv_dtype)``
+    kv_dtype, mesh)``
     where ``pages_bucket`` is the (bucketed) widest block table currently
     active. The bucket moves rarely — once per ``page_size × bucket`` tokens
     — so the capacity check lives entirely on the cold path: ``dispatch_fn``
@@ -1784,9 +1896,18 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         spec_k: int = 0,
         async_steps: bool = False,
         telemetry: Telemetry | None = None,
+        mesh: str = "1x1",
+        mesh_ctl: Callable | None = None,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        if pool.shards > num_slots:
+            raise ValueError(
+                f"pool has {pool.shards} shards but only {num_slots} slots; "
+                f"every shard needs at least one slot to serve its pages."
+            )
+        self.mesh = mesh  # before telemetry: lane histograms carry the label
+        self._mesh_ctl = mesh_ctl
         self._init_telemetry(telemetry)
         self._dispatch = dispatch_fn
         self.pool = pool
@@ -1811,6 +1932,21 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         )
         self._prompt_cached = np.zeros(num_slots, bool)
         self._pages_bucket = 1
+        # Data-parallel slot partitioning (DESIGN.md §16): slot ``s`` is
+        # pinned to pool shard ``s * shards // num_slots`` — contiguous
+        # slot groups per shard, so its block table allocates, adopts and
+        # prefix-matches only shard-local pages and the device gather
+        # never crosses the mesh's data axis. One shard (the default)
+        # makes every entry 0, i.e. the classic unsharded layout.
+        self._slot_shard = [
+            s * pool.shards // num_slots for s in range(num_slots)
+        ]
+        # Packed-table padding rows: each slot pads with *its* shard's
+        # null page (all zeros when shards == 1 — the historical fill).
+        self._null_fill = np.array(
+            [pool.null_page(sh) for sh in self._slot_shard], np.int32
+        )
+        self._bt_host: np.ndarray | None = None
         # chunked prefill (DESIGN.md §10): PREFILL/DECODE state per slot
         self._prefill_dispatch = prefill_dispatch
         self.prefill_chunk = prefill_chunk if prefill_dispatch else 0
@@ -1870,27 +2006,48 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     def live_tables(self):
         return [t for t in self._tables if t is not None]
 
+    def _mesh_hot(self) -> dict:
+        """The paged decode key carries the pages bucket; forward the
+        current one so ``mesh_ctl`` flips the hot slot to the same bucket
+        under the new mesh coordinate."""
+        return {"pages_bucket": self._pages_bucket}
+
+    def _preload_step_inputs(self) -> None:
+        super()._preload_step_inputs()
+        if not self._bt_dirty and self._bt_host is not None:
+            self._mirror.preload("bt", self._bt_host)
+
     # ------------------------------------------------------------- cold path
-    def _reclaim_pages(self, want: int, requester_priority: int) -> bool:
-        """Free >= ``want`` pages: evict idle prefix pages, then preempt
-        strictly-lower-priority requests. False if pressure can't be met."""
-        if self.pool.pages_free >= want:
+    def _reclaim_pages(
+        self, want: int, requester_priority: int, shard: int = 0
+    ) -> bool:
+        """Free >= ``want`` pages *on ``shard``*: evict idle prefix pages
+        from that shard's trie, then preempt strictly-lower-priority
+        requests seated on the same shard (a victim elsewhere would free
+        pages the requester cannot use). False if pressure can't be met.
+        Single-shard pools reproduce the historical global sweep."""
+        if self.pool.pages_free_in(shard) >= want:
             return True
-        self.prefix.evict(want - self.pool.pages_free)
-        while self.pool.pages_free < want:
-            victim = self._pick_victim(requester_priority)
+        self.prefix.evict(want - self.pool.pages_free_in(shard), shard)
+        while self.pool.pages_free_in(shard) < want:
+            victim = self._pick_victim(requester_priority, shard)
             if victim is None:
                 return False
             self._preempt_slot(victim)
-            self.prefix.evict(want - self.pool.pages_free)
+            self.prefix.evict(want - self.pool.pages_free_in(shard), shard)
         return True
 
-    def _pick_victim(self, requester_priority: int) -> int | None:
-        """Lowest-priority active slot strictly below the requester; ties
-        break toward the most recently admitted (least sunk work)."""
+    def _pick_victim(
+        self, requester_priority: int, shard: int = 0
+    ) -> int | None:
+        """Lowest-priority active slot strictly below the requester *on the
+        requester's shard*; ties break toward the most recently admitted
+        (least sunk work)."""
         best, best_key = None, None
         for s, req in enumerate(self._slots):
             if req is None or not self._active[s]:
+                continue
+            if self._slot_shard[s] != shard:
                 continue
             if req.priority >= requester_priority:
                 continue
@@ -1931,6 +2088,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             # in-flight step must land first so those arrays are current
             self._backlog.extend(self._commit_pending(now))
         deferred: list[Request] = []
+        seated = False
         free = [i for i, r in enumerate(self._slots) if r is None]
         for req in requests:
             if not free:
@@ -1956,21 +2114,27 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                             args={"rid": req.rid,
                                   "need_pages": need_pages})
                 continue
+            # The request seats in the head free slot, and the slot pins
+            # the pool shard (DESIGN.md §16) — so the shard is decided
+            # *before* the prefix walk: only pages physically resident on
+            # that shard may be adopted, and reclaim pressure lands there.
+            s = free[0]
+            shard = self._slot_shard[s]
             # Prefix-cache walk: adopt already-populated full prompt pages,
             # but never the page holding the last prompt token — that token
             # is re-fed to prime generation, and keeping its page private
             # makes prompt-path writes COW-free (shared pages stay read-only
             # by construction).
-            pages, matched = self.prefix.match(prompt)
+            pages, matched = self.prefix.match(prompt, shard)
             usable = min(len(pages), (len(prompt) - 1) // self.pool.page_size)
             for pid in pages[usable:]:
                 self.pool.decref(pid)
             pages = pages[:usable]
             matched = usable * self.pool.page_size
             table = BlockTable(pool=self.pool, pages=pages,
-                               num_tokens=matched)
+                               num_tokens=matched, shard=shard)
             # first private page: the one the re-fed prompt token writes into
-            if not self._reclaim_pages(1, req.priority) or (
+            if not self._reclaim_pages(1, req.priority, shard) or (
                 not table.ensure_capacity(matched)
             ):
                 table.release()
@@ -1983,7 +2147,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                     tr.emit("admission_deferred", "scheduler",
                             args={"rid": req.rid})
                 continue
-            s = free.pop(0)
+            free.pop(0)  # == s, peeked above
             self._slots[s] = req
             self._tables[s] = table
             self._cursor[s] = matched
@@ -2012,6 +2176,11 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._tables_changed()
             self.stats.admitted += 1
             self.stats.shared_tokens += matched
+            seated = True
+        if seated:
+            # double-buffered uploads (DESIGN.md §13): stage the edited
+            # arrays on the admission cold path, not the next issue
+            self._preload_step_inputs()
         return deferred
 
     def _page_upkeep(self, k: int = 0) -> None:
@@ -2031,7 +2200,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             need = table.page_index(top) + 1 - table.num_pages
             if need > 0:
                 self._tables_changed()
-                if not self._reclaim_pages(need, req.priority) or (
+                if not self._reclaim_pages(need, req.priority, table.shard) or (
                     not table.ensure_capacity(top)
                 ):
                     # can't grow: preempt the requester itself
@@ -2059,7 +2228,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         body is the paged storage half. Every planned chunk's pages are
         reserved up front (reclaim -> preempt-self on OOM, exactly like
         decode growth), then every surviving slot rides one
-        ``("pf", slots, chunk_bucket, kv_dtype)`` call — per-row chunk
+        ``("pf", slots, chunk_bucket, kv_dtype, mesh)`` call — per-row chunk
         windows through per-row block tables, length 0 = idle row, padded
         columns writing only the null page. Rows are independent (each
         writes its own private pages), so the batched call is bitwise-equal
@@ -2080,7 +2249,9 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
             if need > 0:
                 self._tables_changed()
-                if not self._reclaim_pages(need, req.priority) or (
+                if not self._reclaim_pages(
+                    need, req.priority, table.shard
+                ) or (
                     not table.ensure_capacity(cursor + chunk - 1)
                 ):
                     self._preempt_slot(s)  # can't grow: preempt the requester
@@ -2100,7 +2271,9 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         step = self._prefill_dispatch(bucket)  # cold: slot-hit usually
         tok = np.zeros((self.num_slots, bucket), np.int32)
         length = np.zeros(self.num_slots, np.int32)
-        bt = np.zeros((self.num_slots, self.max_pages_per_req), np.int32)
+        # idle rows pad with each slot's own shard-null page so padded
+        # writes stay shard-local under a data-parallel mesh (§16)
+        bt = np.repeat(self._null_fill[:, None], self.max_pages_per_req, 1)
         for s, cursor, chunk in kept:
             prompt = self._slots[s].effective_prompt
             tok[s, :chunk] = prompt[cursor : cursor + chunk]
@@ -2250,7 +2423,9 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._tables_changed()  # table width changed
         step = self._dispatch(bucket)  # cold: slot-hit unless bucket moved
         if self._bt_dirty:
-            bt = np.zeros((self.num_slots, bucket), np.int32)  # NULL_PAGE
+            # pad with each slot's shard-null page (all zeros on a
+            # single-shard pool — the historical NULL_PAGE fill)
+            bt = np.repeat(self._null_fill[:, None], bucket, 1)
             for s, table in enumerate(self._tables):
                 if table is not None and decoding[s]:
                     bt[s, : table.num_pages] = table.pages
@@ -2351,9 +2526,10 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         draft keeps a dense cache (the truncated stack is cheap enough not
         to page)."""
         if self._bt_full_dirty:  # full-width packed tables (all live slots)
-            bt = np.zeros(
-                (self.num_slots, self.max_pages_per_req), np.int32
-            )  # NULL_PAGE
+            # per-slot shard-null padding (zeros on a single-shard pool)
+            bt = np.repeat(
+                self._null_fill[:, None], self.max_pages_per_req, 1
+            )
             for s, table in enumerate(self._tables):
                 if table is not None:
                     bt[s, : table.num_pages] = table.pages

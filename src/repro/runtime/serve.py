@@ -64,6 +64,7 @@ from repro.core import DispatchPolicy, Dispatcher, bucket_multiple
 from repro.core import lanes as lanes_mod
 from repro.core.lanes import LANES
 from repro.core.telemetry import Telemetry
+from repro.distributed import sharding as shd
 from repro.runtime import steps as steps_mod
 from repro.runtime.scheduler import (
     CHUNK_BUCKET_MIN,
@@ -118,6 +119,19 @@ class EngineConfig:
     # registry axis on every paged lane key.
     kv_dtype: str = "fp32"
     kv_dtypes: tuple = ()
+    # Quantised draft KV (DESIGN.md §16): the draft lanes' dense-cache
+    # storage dtype plus extras to keep warm — an int8 drafter pairs with a
+    # full-precision verify lane, and a precision flip across the warmed
+    # set is a rebind, never a compile.
+    draft_kv_dtype: str = "fp32"
+    draft_kv_dtypes: tuple = ()
+    # Sharded serving (DESIGN.md §16): the active device mesh "DPxMP"
+    # (data x model) plus every standby topology to AOT-warm. The mesh is
+    # a trailing coordinate on every pool-touching lane key, so a topology
+    # change at run time — scale-out 1x1->2x2 or a failover shrink — is a
+    # hot-slot flip plus a device_put of the live cache, never a compile.
+    mesh: str = "1x1"
+    meshes: tuple = ()
 
 
 @dataclass
@@ -127,15 +141,17 @@ class _WarmCtx:
     The warm methods dummy-run each executable through the exact runtime
     path (paper §4.3) and thread the donated caches forward; ``spec`` is
     the per-batcher speculation opt-in the ``_spec_lanes_enabled`` gate
-    reads. ``paged_caches`` holds one pooled cache per warmed ``kv_dtype``
-    (DESIGN.md §12) — the batcher adopts the active dtype's cache, the
-    rest exist only to warm their lanes' executables.
+    reads. Caches are keyed per mesh coordinate (and pool dtype): a warm
+    run through a sharded executable hands back a cache *committed* to
+    that mesh's NamedSharding, which a different mesh's executable would
+    reject — so every (dtype, mesh) cell warms against its own cache and
+    the batcher adopts the active cell's (DESIGN.md §12/§16).
     """
 
     spec: bool = False
-    dense_cache: Any = None
-    paged_caches: dict = None  # kv_dtype -> pooled cache
-    draft_cache: Any = None
+    dense_caches: dict = None  # mesh -> dense cache
+    paged_caches: dict = None  # (kv_dtype, mesh) -> pooled cache
+    draft_caches: dict = None  # (draft_kv_dtype, mesh) -> draft cache
 
 
 class Engine:
@@ -169,6 +185,9 @@ class Engine:
         )
         self._current: Callable | None = None  # mirror of the hot slot
         self._current_key: tuple | None = None
+        # Mesh plans (DESIGN.md §16): one MeshPlan per warmed topology
+        # name; plans own the lazy jax Mesh and the NamedSharding trees.
+        self._mesh_plans: dict[str, shd.MeshPlan] = {}
         # Speculative decoding (DESIGN.md §11): the draft model is a
         # truncated-layer *view* of the target — shared embed/head, the
         # first draft_layers periods of blocks — so it costs no extra
@@ -232,6 +251,71 @@ class Engine:
         self.telemetry.compile_reports.append(rep)
         return exe
 
+    # ------------------------------------------------------- mesh lowering
+    def _mesh_plan(self, name: str) -> shd.MeshPlan:
+        plan = self._mesh_plans.get(name)
+        if plan is None:
+            plan = self._mesh_plans[name] = shd.MeshPlan(name)
+        return plan
+
+    def _compile_step(
+        self,
+        step: Callable,
+        mesh: str,
+        params_aval: Any,
+        c_shape: Any,
+        row_avals: tuple,
+        cache_kind: str,
+    ) -> Callable:
+        """Lower + AOT-compile one lane executable under a mesh plan.
+
+        ``"1x1"`` takes the exact pre-mesh path — no Mesh, no shardings —
+        which is what keeps the 1x1 lane bitwise identical to the
+        unsharded engine. Non-single plans lower under the plan's Mesh
+        with GSPMD ``in_shardings``: TP params over 'model', per-slot rows
+        and cache slots/pages over 'data' (DESIGN.md §16); the compiler
+        propagates output shardings, so the donated cache round-trips
+        committed to the same plan.
+        """
+        plan = self._mesh_plan(mesh)
+        if plan.single:
+            return jax.jit(step, donate_argnums=(1,)).lower(
+                params_aval, c_shape, *row_avals
+            ).compile()
+        cache_sh = (
+            plan.paged_cache_shardings(c_shape)
+            if cache_kind == "paged"
+            else plan.dense_cache_shardings(c_shape)
+        )
+        in_sh = (
+            plan.param_shardings(params_aval),
+            cache_sh,
+            *plan.row_shardings(row_avals),
+        )
+        with plan.mesh, shd.use_shard_hints(plan.mesh):
+            lowered = jax.jit(
+                step, donate_argnums=(1,), in_shardings=in_sh
+            ).lower(params_aval, c_shape, *row_avals)
+        return lowered.compile()
+
+    def _reshard_cache(self, cache: Any, mesh: str, cache_kind: str) -> Any:
+        """Move a live cache to the target topology: pure data movement
+        (``jax.device_put``), no compile, no host round-trip. Shrinking to
+        "1x1" gathers onto the default device so the unsharded executables
+        accept it unchanged."""
+        plan = self._mesh_plan(mesh)
+        if plan.single:
+            return jax.device_put(cache, jax.devices()[0])
+        shape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache
+        )
+        sh = (
+            plan.paged_cache_shardings(shape)
+            if cache_kind == "paged"
+            else plan.dense_cache_shardings(shape)
+        )
+        return jax.device_put(cache, sh)
+
     def _build_burst_decode(self, batch: int, mode: int) -> Callable:
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_sampling_decode_fn(
@@ -252,15 +336,13 @@ class Engine:
         )
         return lowered.compile()
 
-    def _build_slot_decode(self, slots: int) -> Callable:
+    def _build_slot_decode(self, slots: int, mesh: str = "1x1") -> Callable:
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_slot_decode_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_cache(cfg, slots, ecfg.max_len)
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, 1), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
@@ -268,13 +350,19 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "dense"
+        )
 
     def _build_paged_slot_decode(
-        self, slots: int, pages_bucket: int, kv_dtype: str = "fp32"
+        self,
+        slots: int,
+        pages_bucket: int,
+        kv_dtype: str = "fp32",
+        mesh: str = "1x1",
     ) -> Callable:
-        """Executable for the ``("cbp", slots, pages_bucket, kv_dtype)``
-        dispatch key.
+        """Executable for the ``("cbp", slots, pages_bucket, kv_dtype,
+        mesh)`` dispatch key.
 
         Capacity is one semi-static condition here (DESIGN.md §9): the block
         table's width is baked into the shapes, so the hot loop never checks
@@ -282,7 +370,9 @@ class Engine:
         cold path exactly like a paper branch-direction change. The page
         dtype is another (DESIGN.md §12): the cache's abstract dtype bakes
         the quant/dequant into the executable, so fp32 and int8 pools are
-        two AOT branch targets, never a per-step check.
+        two AOT branch targets, never a per-step check. The mesh is a third
+        (DESIGN.md §16): the sharding plan is baked at lower time, so each
+        topology is its own AOT branch target.
         """
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_paged_slot_decode_fn(
@@ -290,12 +380,10 @@ class Engine:
         )
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
+                cfg, self.pool_physical_pages, ecfg.page_size, kv_dtype
             )
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, 1), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots, pages_bucket), jnp.int32),
@@ -304,10 +392,16 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "paged"
+        )
 
     def _build_paged_prefill(
-        self, slots: int, chunk_bucket: int, kv_dtype: str = "fp32"
+        self,
+        slots: int,
+        chunk_bucket: int,
+        kv_dtype: str = "fp32",
+        mesh: str = "1x1",
     ) -> Callable:
         """Executable for the ``("pf", slots, chunk_bucket, kv_dtype)``
         dispatch key: *batched* paged chunked prefill.
@@ -327,13 +421,11 @@ class Engine:
         step = steps_mod.make_paged_prefill_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
+                cfg, self.pool_physical_pages, ecfg.page_size, kv_dtype
             )
         )
         pb = self.max_pages_per_req
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots, pb), jnp.int32),
@@ -342,21 +434,23 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "paged"
+        )
 
-    def _build_slot_prefill(self, slots: int, chunk_bucket: int) -> Callable:
-        """Executable for the ``("pfd", slots, chunk_bucket)`` dispatch key:
-        the dense engine's chunked prompt path (DESIGN.md §10) — a slot's
-        private cache rows are a trivial identity block table, so the same
-        chunk-bucket machinery serves both engines."""
+    def _build_slot_prefill(
+        self, slots: int, chunk_bucket: int, mesh: str = "1x1"
+    ) -> Callable:
+        """Executable for the ``("pfd", slots, chunk_bucket, mesh)``
+        dispatch key: the dense engine's chunked prompt path (DESIGN.md
+        §10) — a slot's private cache rows are a trivial identity block
+        table, so the same chunk-bucket machinery serves both engines."""
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_slot_prefill_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_cache(cfg, slots, ecfg.max_len)
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
@@ -364,7 +458,9 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "dense"
+        )
 
     def _abstract_draft_params(self):
         return jax.tree.map(
@@ -372,22 +468,31 @@ class Engine:
             self.draft_params,
         )
 
-    def _build_draft(self, slots: int, k: int) -> Callable:
-        """Executable for the ``("dr", slots, k)`` dispatch key: K draft
-        decode steps scanned inside one executable (DESIGN.md §11). Draft
-        depth is the semi-static condition — k is baked into the scan
-        length, so depth variation re-dispatches on the cold path and the
-        hot loop never counts iterations."""
+    def _build_draft(
+        self,
+        slots: int,
+        k: int,
+        kv_dtype: str = "fp32",
+        mesh: str = "1x1",
+    ) -> Callable:
+        """Executable for the ``("dr", slots, k, draft_kv_dtype, mesh)``
+        dispatch key: K draft decode steps scanned inside one executable
+        (DESIGN.md §11). Draft depth is the semi-static condition — k is
+        baked into the scan length, so depth variation re-dispatches on
+        the cold path and the hot loop never counts iterations. The draft
+        cache's storage dtype is its own coordinate (DESIGN.md §16): an
+        int8 drafter pairs with a full-precision verify lane, the
+        quant/dequant baked in at trace time."""
         ecfg = self.ecfg
         step = steps_mod.make_draft_fn(
             self.draft_cfg, k=k, moe_policy=ecfg.moe_policy
         )
         c_shape = jax.eval_shape(
-            lambda: models.init_cache(self.draft_cfg, slots, ecfg.max_len)
+            lambda: models.init_cache(
+                self.draft_cfg, slots, ecfg.max_len, kv_dtype
+            )
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_draft_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, 1), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
@@ -395,14 +500,21 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_draft_params(), c_shape, rows,
+            "dense",
+        )
 
     def _build_paged_verify(
-        self, slots: int, k: int, kv_dtype: str = "fp32"
+        self,
+        slots: int,
+        k: int,
+        kv_dtype: str = "fp32",
+        mesh: str = "1x1",
     ) -> Callable:
-        """Executable for the ``("vf", slots, k, kv_dtype)`` dispatch key:
-        the target scores all K+1 window positions in one pass through the
-        paged chunk path (DESIGN.md §11). The window width k+1 is baked
+        """Executable for the ``("vf", slots, k, kv_dtype, mesh)`` dispatch
+        key: the target scores all K+1 window positions in one pass through
+        the paged chunk path (DESIGN.md §11). The window width k+1 is baked
         into the shapes; the block-table width is pinned at the per-request
         page cap (masked positions contribute exactly nothing); the page
         dtype rides as the registry's ``kv_dtype`` axis (DESIGN.md §12)."""
@@ -410,13 +522,11 @@ class Engine:
         step = steps_mod.make_paged_verify_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_paged_cache(
-                cfg, self.pool_pages + 1, ecfg.page_size, kv_dtype
+                cfg, self.pool_physical_pages, ecfg.page_size, kv_dtype
             )
         )
         pb = self.max_pages_per_req
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, k + 1), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots, pb), jnp.int32),
@@ -425,21 +535,23 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "paged"
+        )
 
-    def _build_slot_verify(self, slots: int, k: int) -> Callable:
-        """Executable for the ``("vfd", slots, k)`` dispatch key: the dense
-        engine's verify pass (DESIGN.md §11) — a slot's private cache rows
-        are a trivial identity block table, so the same k-bucket machinery
-        serves both engines."""
+    def _build_slot_verify(
+        self, slots: int, k: int, mesh: str = "1x1"
+    ) -> Callable:
+        """Executable for the ``("vfd", slots, k, mesh)`` dispatch key: the
+        dense engine's verify pass (DESIGN.md §11) — a slot's private cache
+        rows are a trivial identity block table, so the same k-bucket
+        machinery serves both engines."""
         cfg, ecfg = self.cfg, self.ecfg
         step = steps_mod.make_slot_verify_fn(cfg, moe_policy=ecfg.moe_policy)
         c_shape = jax.eval_shape(
             lambda: models.init_cache(cfg, slots, ecfg.max_len)
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, k + 1), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
@@ -447,23 +559,33 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_params(), c_shape, rows, "dense"
+        )
 
-    def _build_draft_prefill(self, slots: int, chunk_bucket: int) -> Callable:
-        """Executable for the ``("drp", slots, chunk_bucket)`` dispatch key:
-        the draft stack's prompt mirror (DESIGN.md §11) — the same chunked
-        dense ingestion as ``("pfd", ...)`` but over the truncated-layer
-        draft view, so the draft's KV tracks the committed stream."""
+    def _build_draft_prefill(
+        self,
+        slots: int,
+        chunk_bucket: int,
+        kv_dtype: str = "fp32",
+        mesh: str = "1x1",
+    ) -> Callable:
+        """Executable for the ``("drp", slots, chunk_bucket,
+        draft_kv_dtype, mesh)`` dispatch key: the draft stack's prompt
+        mirror (DESIGN.md §11) — the same chunked dense ingestion as
+        ``("pfd", ...)`` but over the truncated-layer draft view, so the
+        draft's KV tracks the committed stream in the draft's own storage
+        dtype."""
         ecfg = self.ecfg
         step = steps_mod.make_slot_prefill_fn(
             self.draft_cfg, moe_policy=ecfg.moe_policy
         )
         c_shape = jax.eval_shape(
-            lambda: models.init_cache(self.draft_cfg, slots, ecfg.max_len)
+            lambda: models.init_cache(
+                self.draft_cfg, slots, ecfg.max_len, kv_dtype
+            )
         )
-        lowered = jax.jit(step, donate_argnums=(1,)).lower(
-            self._abstract_draft_params(),
-            c_shape,
+        rows = (
             jax.ShapeDtypeStruct((slots, chunk_bucket), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
             jax.ShapeDtypeStruct((slots,), jnp.int32),
@@ -471,11 +593,14 @@ class Engine:
             jax.ShapeDtypeStruct((slots,), jnp.bool_),
             jax.ShapeDtypeStruct((slots, 2), jnp.uint32),
         )
-        return lowered.compile()
+        return self._compile_step(
+            step, mesh, self._abstract_draft_params(), c_shape, rows,
+            "dense",
+        )
 
     @property
     def pool_pages(self) -> int:
-        """Allocatable page count (excluding the null page)."""
+        """Allocatable page count (excluding the null pages)."""
         if self.ecfg.num_pages > 0:
             return self.ecfg.num_pages
         return (self.ecfg.max_batch * self.ecfg.max_len) // self.ecfg.page_size
@@ -486,6 +611,42 @@ class Engine:
         return min(
             self.pool_pages, -(-self.ecfg.max_len // self.ecfg.page_size)
         )
+
+    @property
+    def pool_shards(self) -> int:
+        """Page-pool shard count: the widest warmed data-parallel degree.
+
+        The pool's physical layout is fixed at construction (per-shard
+        contiguous page blocks, ``runtime.kvcache``), so it is laid out
+        for the *largest* warmed dp, and every other warmed mesh's dp must
+        divide it — a topology rebind then never relabels a page id, only
+        regroups whole shards per device.
+        """
+        meshes = self._warm_meshes()
+        shards = max(shd.parse_mesh_name(m)[0] for m in meshes)
+        for m in meshes:
+            dp = shd.parse_mesh_name(m)[0]
+            if shards % dp != 0:
+                raise ValueError(
+                    f"warmed mesh {m!r}: dp={dp} must divide the pool "
+                    f"shard count {shards} (the widest warmed dp) so all "
+                    f"topologies share one physical page layout."
+                )
+        return shards
+
+    @property
+    def pool_physical_pages(self) -> int:
+        """Device page-axis extent: allocatable pages plus one null page
+        per shard. ``shards == 1`` reproduces the classic
+        ``pool_pages + 1`` layout exactly."""
+        shards = self.pool_shards
+        if self.pool_pages % shards:
+            raise ValueError(
+                f"num_pages={self.pool_pages} must divide evenly across "
+                f"{shards} pool shards; pad EngineConfig.num_pages to a "
+                f"multiple."
+            )
+        return self.pool_pages + shards
 
     # ----------------------------------------------- registry axis ladders
     # Each method below is a ``core.lanes.LaneAxis`` bucket ladder: the
@@ -533,6 +694,31 @@ class Engine:
             dict.fromkeys((self.ecfg.kv_dtype,) + tuple(self.ecfg.kv_dtypes))
         )
 
+    def _warm_draft_kv_dtypes(self) -> tuple[str, ...]:
+        """The draft lanes' storage-dtype ladder (DESIGN.md §16): an int8
+        draft cache pairs a cheap quantised drafter with a full-precision
+        verify lane; extras keep a precision flip a rebind, never a
+        compile."""
+        return tuple(
+            dict.fromkeys(
+                (self.ecfg.draft_kv_dtype,)
+                + tuple(self.ecfg.draft_kv_dtypes)
+            )
+        )
+
+    def _warm_meshes(self) -> tuple[str, ...]:
+        """The mesh-axis ladder (DESIGN.md §16): the active topology plus
+        every standby shape to AOT-warm, canonicalised and deduped — a
+        crossing inside this set (scale-out ``1x1 -> 2x2`` or a failover
+        shrink ``2x2 -> 1x2``) flips warmed hot slots and ``device_put``s
+        the live cache, never compiles."""
+        names = (self.ecfg.mesh,) + tuple(self.ecfg.meshes)
+        return tuple(
+            dict.fromkeys(
+                shd.mesh_name(*shd.parse_mesh_name(n)) for n in names
+            )
+        )
+
     # ------------------------------------------------- lane enable gates
     def _supports_chunked_prefill(self, ctx: Any = None) -> bool:
         """Chunked prefill is attention-only: SSM slots carry recurrent
@@ -573,27 +759,42 @@ class Engine:
             jnp.asarray(np.zeros((s, 2), np.uint32)),
         )
 
+    def _draft_warm_cache(
+        self, ctx: _WarmCtx, s: int, dt: str, m: str
+    ) -> Any:
+        """Lazily create the ``(draft_kv_dtype, mesh)`` draft warm cache —
+        draft lanes only warm when the spec gate is on, so creation rides
+        the first draft-lane warm instead of every warmup."""
+        if ctx.draft_caches is None:
+            ctx.draft_caches = {}
+        cell = (dt, m)
+        if cell not in ctx.draft_caches:
+            ctx.draft_caches[cell] = models.init_cache(
+                self.draft_cfg, s, self.ecfg.max_len, dt
+            )
+        return ctx.draft_caches[cell]
+
     def _warm_cb(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        s = lanes_mod.CB.coord(key, "slots")
+        _, s, m = key
         warm = exe(
             self.params,
-            ctx.dense_cache,
+            ctx.dense_caches[m],
             self._warm_zeros(s, 1),
             self._warm_zeros(s),
             jnp.asarray(np.zeros(s, bool)),
             *self._warm_sampling(s),
         )
         jax.block_until_ready(warm)
-        nxt, ctx.dense_cache, pos, keys = warm[:4]
+        nxt, ctx.dense_caches[m], pos, keys = warm[:4]
         _ = nxt[:, None]  # the sync loop's device-side tok reshape
         np.asarray(warm[5])  # the async loop's packed bundle pull
         np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
 
     def _warm_cbp(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, pb, dt = key
+        _, s, pb, dt, m = key
         warm = exe(
             self.params,
-            ctx.paged_caches[dt],
+            ctx.paged_caches[(dt, m)],
             self._warm_zeros(s, 1),
             self._warm_zeros(s),
             self._warm_zeros(s, pb),
@@ -601,16 +802,16 @@ class Engine:
             *self._warm_sampling(s),
         )
         jax.block_until_ready(warm)
-        nxt, ctx.paged_caches[dt], pos, keys = warm[:4]
+        nxt, ctx.paged_caches[(dt, m)], pos, keys = warm[:4]
         _ = nxt[:, None]  # the sync loop's device-side tok reshape
         np.asarray(warm[5])  # the async loop's packed bundle pull
         np.asarray(nxt), np.array(pos, np.int32), np.array(keys, np.uint32)
 
     def _warm_pf(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, cb, dt = key
+        _, s, cb, dt, m = key
         warm = exe(
             self.params,
-            ctx.paged_caches[dt],
+            ctx.paged_caches[(dt, m)],
             self._warm_zeros(s, cb),
             self._warm_zeros(s),
             self._warm_zeros(s, self.max_pages_per_req),
@@ -619,13 +820,13 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0]), np.asarray(warm[2])
-        ctx.paged_caches[dt] = warm[1]
+        ctx.paged_caches[(dt, m)] = warm[1]
 
     def _warm_pfd(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, cb = key
+        _, s, cb, m = key
         warm = exe(
             self.params,
-            ctx.dense_cache,
+            ctx.dense_caches[m],
             self._warm_zeros(s, cb),
             self._warm_zeros(s),
             self._warm_zeros(s),
@@ -633,13 +834,13 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0]), np.asarray(warm[2])
-        ctx.dense_cache = warm[1]
+        ctx.dense_caches[m] = warm[1]
 
     def _warm_vf(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, k, dt = key
+        _, s, k, dt, m = key
         warm = exe(
             self.params,
-            ctx.paged_caches[dt],
+            ctx.paged_caches[(dt, m)],
             self._warm_zeros(s, k + 1),
             self._warm_zeros(s),
             self._warm_zeros(s, self.max_pages_per_req),
@@ -648,13 +849,13 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0]), np.asarray(warm[1])
-        ctx.paged_caches[dt] = warm[2]
+        ctx.paged_caches[(dt, m)] = warm[2]
 
     def _warm_vfd(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, k = key
+        _, s, k, m = key
         warm = exe(
             self.params,
-            ctx.dense_cache,
+            ctx.dense_caches[m],
             self._warm_zeros(s, k + 1),
             self._warm_zeros(s),
             self._warm_zeros(s),
@@ -662,17 +863,14 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0]), np.asarray(warm[1])
-        ctx.dense_cache = warm[2]
+        ctx.dense_caches[m] = warm[2]
 
     def _warm_dr(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, k = key
-        if ctx.draft_cache is None:
-            ctx.draft_cache = models.init_cache(
-                self.draft_cfg, s, self.ecfg.max_len
-            )
+        _, s, k, dt, m = key
+        dcache = self._draft_warm_cache(ctx, s, dt, m)
         warm = exe(
             self.draft_params,
-            ctx.draft_cache,
+            dcache,
             self._warm_zeros(s, 1),
             self._warm_zeros(s),
             jnp.asarray(np.zeros(s, bool)),
@@ -680,20 +878,21 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0])
-        ctx.draft_cache = warm[1]
+        ctx.draft_caches[(dt, m)] = warm[1]
 
     def _warm_drp(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
-        _, s, cb = key
+        _, s, cb, dt, m = key
+        dcache = self._draft_warm_cache(ctx, s, dt, m)
         warm = exe(
             self.draft_params,
-            ctx.draft_cache,
+            dcache,
             self._warm_zeros(s, cb),
             self._warm_zeros(s),
             self._warm_zeros(s),
             *self._warm_sampling(s),
         )
         jax.block_until_ready(warm)
-        ctx.draft_cache = warm[1]
+        ctx.draft_caches[(dt, m)] = warm[1]
 
     def _warm_lanes(
         self,
@@ -775,15 +974,27 @@ class Engine:
             np.asarray(steps_mod.pack_verify_d2h(rows, nxt, keys))
 
     def _spec_dispatchers(
-        self, slots: int, cache_is_paged: bool, kv_dtype: str = "fp32"
+        self,
+        slots: int,
+        cache_is_paged: bool,
+        kv_dtype: str = "fp32",
+        draft_kv_dtype: str = "fp32",
+        mesh_bind: dict | None = None,
     ) -> tuple[Callable, Callable, Callable]:
         """The speculative lanes' dispatch closures (DESIGN.md §11); the
         executables themselves were AOT-warmed by ``_warm_lanes``. The
-        paged verify closure pins the batcher's ``kv_dtype`` coordinate."""
+        paged verify closure pins the batcher's ``kv_dtype`` coordinate;
+        the draft lanes pin ``draft_kv_dtype``; every closure reads the
+        batcher's live mesh binding, so a topology flip re-routes the spec
+        lanes on their next dispatch with zero extra plumbing."""
         s = slots
+        ddt = draft_kv_dtype
+        mb = mesh_bind if mesh_bind is not None else {"mesh": "1x1"}
 
         def draft_dispatch(k: int) -> Callable:
-            exe = self._decode.dispatch(lanes_mod.DR.key(s, k))
+            exe = self._decode.dispatch(
+                lanes_mod.DR.key(s, k, ddt, mb["mesh"])
+            )
 
             def bound_draft(dcache, tok, pos, active, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
@@ -795,7 +1006,9 @@ class Engine:
             return bound_draft
 
         def draft_prefill_dispatch(chunk_bucket: int) -> Callable:
-            exe = self._decode.dispatch(lanes_mod.DRP.key(s, chunk_bucket))
+            exe = self._decode.dispatch(
+                lanes_mod.DRP.key(s, chunk_bucket, ddt, mb["mesh"])
+            )
 
             def bound_drp(dcache, tok, start, length, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
@@ -810,7 +1023,7 @@ class Engine:
 
             def verify_dispatch(k: int) -> Callable:
                 exe = self._decode.dispatch(
-                    lanes_mod.VF.key(s, k, kv_dtype)
+                    lanes_mod.VF.key(s, k, kv_dtype, mb["mesh"])
                 )
 
                 def bound_verify(
@@ -827,7 +1040,9 @@ class Engine:
         else:
 
             def verify_dispatch(k: int) -> Callable:
-                exe = self._decode.dispatch(lanes_mod.VFD.key(s, k))
+                exe = self._decode.dispatch(
+                    lanes_mod.VFD.key(s, k, mb["mesh"])
+                )
 
                 def bound_verify(
                     cache, tok, start, length, temps, greedy, keys
@@ -841,6 +1056,46 @@ class Engine:
                 return bound_verify
 
         return draft_dispatch, verify_dispatch, draft_prefill_dispatch
+
+    def _make_mesh_ctl(
+        self, mesh_bind: dict, cache_kind: str, hot_key: Callable
+    ) -> Callable:
+        """Build the batcher's topology-flip closure (DESIGN.md §16).
+
+        ``mesh_ctl(name, cache, draft_cache, **hot)`` validates the target
+        against the warmed ladder, ``device_put``s the live caches onto
+        the new plan (pure data movement), mutates the shared mesh binding
+        (so every dispatch closure routes to the new coordinate), and
+        force-flips the decode hot slot via ``set_direction`` — the
+        paper's patched-jmp move, a rebind and never a compile.
+        ``hot_key(**hot)`` maps the batcher's current bucket state to the
+        decode lane key under the *new* binding.
+        """
+        warm = self._warm_meshes()
+
+        def mesh_ctl(name: str, cache: Any, draft_cache: Any, **hot: Any):
+            nm = shd.mesh_name(*shd.parse_mesh_name(name))
+            if nm not in warm:
+                raise ValueError(
+                    f"mesh {nm!r} is not in the warmed set {warm}; add it "
+                    f"to EngineConfig.mesh/meshes so its lanes are AOT-"
+                    f"warmed (a cold topology would compile mid-stream)."
+                )
+            if nm != mesh_bind["mesh"]:
+                cache = self._reshard_cache(cache, nm, cache_kind)
+                if draft_cache is not None:
+                    draft_cache = self._reshard_cache(
+                        draft_cache, nm, "dense"
+                    )
+                mesh_bind["mesh"] = nm
+                self._decode.set_direction(hot_key(**hot))
+                self.telemetry.registry.inc("mesh_rebinds_total")
+                rec = self.telemetry.trace_or_none()
+                if rec is not None:
+                    rec.emit("mesh_rebind", "dispatcher", args={"mesh": nm})
+            return nm, cache, draft_cache
+
+        return mesh_ctl
 
     def set_mode(
         self, *, batch: int, sampling: int = GREEDY, warm: bool = True
@@ -951,6 +1206,8 @@ class Engine:
         seed: int = 0,
         spec_decode: bool | None = None,
         async_steps: bool = False,
+        mesh: str | None = None,
+        draft_kv_dtype: str | None = None,
     ) -> ContinuousBatcher:
         """Cold path: build+warm every lane/bucket executable, return a
         batcher.
@@ -972,27 +1229,57 @@ class Engine:
         use_spec = (
             self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
+        warm_meshes = self._warm_meshes()
+        m0 = shd.mesh_name(*shd.parse_mesh_name(mesh or self.ecfg.mesh))
+        if m0 not in warm_meshes:
+            raise ValueError(
+                f"mesh={m0!r} is not in the warmed set {warm_meshes}; add "
+                f"it to EngineConfig.mesh/meshes."
+            )
+        ddt = draft_kv_dtype or self.ecfg.draft_kv_dtype
+        if ddt not in self._warm_draft_kv_dtypes():
+            raise ValueError(
+                f"draft_kv_dtype={ddt!r} is not in the warmed set "
+                f"{self._warm_draft_kv_dtypes()}; add it to EngineConfig."
+                f"draft_kv_dtype/draft_kv_dtypes."
+            )
         # Registry-driven warmup (DESIGN.md §12): every enabled dense lane
-        # (cb, pfd, vfd, dr, drp), every bucket in its fan-out, compiled
-        # *and* dummy-run — one loop instead of per-lane warm blocks.
+        # (cb, pfd, vfd, dr, drp), every bucket in its fan-out, every
+        # warmed mesh — compiled *and* dummy-run, one loop instead of
+        # per-lane warm blocks. Each mesh warms against its own cache (a
+        # donated cache comes back committed to its plan's sharding); the
+        # batcher adopts the active mesh's cache.
         ctx = _WarmCtx(
             spec=use_spec,
-            dense_cache=models.init_cache(self.cfg, s, self.ecfg.max_len),
+            dense_caches={
+                m: models.init_cache(self.cfg, s, self.ecfg.max_len)
+                for m in warm_meshes
+            },
         )
         self._warm_lanes("dense", s, ctx)
         self._warm_d2h_packs(s)
-        cache = ctx.dense_cache
-        exe = self._decode.dispatch(lanes_mod.CB.key(s))
+        mb = {"mesh": m0}
+        cache = ctx.dense_caches[m0]
 
-        def bound_step(cache, tok, pos, active, temps, greedy, keys):
-            self.stats["hot_calls"] += 1
-            return exe(self.params, cache, tok, pos, active, temps, greedy, keys)
+        def step_dispatch() -> Callable:
+            exe = self._decode.dispatch(lanes_mod.CB.key(s, mb["mesh"]))
+
+            def bound_step(cache, tok, pos, active, temps, greedy, keys):
+                self.stats["hot_calls"] += 1
+                return exe(
+                    self.params, cache, tok, pos, active, temps, greedy,
+                    keys,
+                )
+
+            return bound_step
 
         prefill_dispatch = None
         if self._supports_chunked_prefill():
 
             def prefill_dispatch(chunk_bucket: int) -> Callable:
-                pf = self._decode.dispatch(lanes_mod.PFD.key(s, chunk_bucket))
+                pf = self._decode.dispatch(
+                    lanes_mod.PFD.key(s, chunk_bucket, mb["mesh"])
+                )
 
                 def bound_prefill(cache, tok, start, length, temps, greedy, keys):
                     self.stats["hot_calls"] += 1
@@ -1007,7 +1294,15 @@ class Engine:
         if use_spec and self._supports_spec_decode():
             (
                 draft_dispatch, verify_dispatch, draft_prefill_dispatch,
-            ) = self._spec_dispatchers(s, cache_is_paged=False)
+            ) = self._spec_dispatchers(
+                s, cache_is_paged=False, draft_kv_dtype=ddt, mesh_bind=mb
+            )
+
+        mesh_ctl = self._make_mesh_ctl(
+            mb, "dense", lambda: lanes_mod.CB.key(s, mb["mesh"])
+        )
+        bound_step = step_dispatch()  # pre-bind the hot slot before the
+        # boundary so the first real step is a pure slot hit
 
         # Warmup is complete: everything from here on is steady state
         # (DESIGN.md §14). The batcher's registry handles are created after
@@ -1025,10 +1320,17 @@ class Engine:
             draft_dispatch=draft_dispatch,
             verify_dispatch=verify_dispatch,
             draft_prefill_dispatch=draft_prefill_dispatch,
-            draft_cache=ctx.draft_cache,
+            draft_cache=(
+                ctx.draft_caches.get((ddt, m0))
+                if ctx.draft_caches
+                else None
+            ),
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
             telemetry=self.telemetry,
+            mesh=m0,
+            mesh_ctl=mesh_ctl,
+            step_dispatch=step_dispatch,
         )
 
 
@@ -1042,6 +1344,8 @@ class Engine:
         spec_decode: bool | None = None,
         kv_dtype: str | None = None,
         async_steps: bool = False,
+        mesh: str | None = None,
+        draft_kv_dtype: str | None = None,
     ) -> PagedContinuousBatcher:
         """Cold path: build the page pool + prefix cache and warm every
         paged lane through the registry; returns a paged batcher
@@ -1082,34 +1386,52 @@ class Engine:
         use_spec = (
             self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
+        warm_meshes = self._warm_meshes()
+        m0 = shd.mesh_name(*shd.parse_mesh_name(mesh or ecfg.mesh))
+        if m0 not in warm_meshes:
+            raise ValueError(
+                f"mesh={m0!r} is not in the warmed set {warm_meshes}; add "
+                f"it to EngineConfig.mesh/meshes."
+            )
+        ddt = draft_kv_dtype or ecfg.draft_kv_dtype
+        if ddt not in self._warm_draft_kv_dtypes():
+            raise ValueError(
+                f"draft_kv_dtype={ddt!r} is not in the warmed set "
+                f"{self._warm_draft_kv_dtypes()}; add it to EngineConfig."
+                f"draft_kv_dtype/draft_kv_dtypes."
+            )
         pool = PagePool(
             self.pool_pages, ecfg.page_size, kv_dtype=dt,
-            telemetry=self.telemetry,
+            telemetry=self.telemetry, shards=self.pool_shards,
         )
         prefix = PrefixCache(pool)
         max_pages_per_req = self.max_pages_per_req
         # Registry-driven warmup (DESIGN.md §12): every enabled paged lane
         # (cbp, pf, vf, dr, drp), every bucket in its fan-out, every warmed
-        # page dtype — compiled *and* dummy-run against a pooled cache of
-        # the matching dtype. The batcher adopts the active dtype's cache;
-        # the other dtypes' caches existed only to warm their executables.
+        # page dtype *and mesh* — compiled and dummy-run against a pooled
+        # cache of the matching (dtype, mesh) cell. The batcher adopts the
+        # active cell's cache; the rest existed only to warm executables.
         ctx = _WarmCtx(
             spec=use_spec,
             paged_caches={
-                d: models.init_paged_cache(
-                    self.cfg, self.pool_pages + 1, ecfg.page_size, d
+                (d, m): models.init_paged_cache(
+                    self.cfg, self.pool_physical_pages, ecfg.page_size, d
                 )
                 for d in warm_dtypes
+                for m in warm_meshes
             },
         )
-        pins = {} if warm_all_buckets else {"pages_bucket": 1, "kv_dtype": dt}
+        pins = {} if warm_all_buckets else {
+            "pages_bucket": 1, "kv_dtype": dt, "draft_kv_dtype": ddt,
+        }
         self._warm_lanes("paged", s, ctx, pins=pins)
         self._warm_d2h_packs(s)
-        cache = ctx.paged_caches[dt]
+        mb = {"mesh": m0}
+        cache = ctx.paged_caches[(dt, m0)]
 
         def dispatch(pages_bucket: int) -> Callable:
             exe = self._decode.dispatch(
-                lanes_mod.CBP.key(s, pages_bucket, dt)
+                lanes_mod.CBP.key(s, pages_bucket, dt, mb["mesh"])
             )
 
             def bound_step(cache, tok, pos, bt, active, temps, greedy, keys):
@@ -1126,7 +1448,7 @@ class Engine:
 
             def prefill_dispatch(chunk_bucket: int) -> Callable:
                 pf = self._decode.dispatch(
-                    lanes_mod.PF.key(s, chunk_bucket, dt)
+                    lanes_mod.PF.key(s, chunk_bucket, dt, mb["mesh"])
                 )
 
                 def bound_prefill(
@@ -1144,11 +1466,21 @@ class Engine:
         if use_spec and self._supports_spec_decode():
             (
                 draft_dispatch, verify_dispatch, draft_prefill_dispatch,
-            ) = self._spec_dispatchers(s, cache_is_paged=True, kv_dtype=dt)
+            ) = self._spec_dispatchers(
+                s, cache_is_paged=True, kv_dtype=dt, draft_kv_dtype=ddt,
+                mesh_bind=mb,
+            )
+
+        mesh_ctl = self._make_mesh_ctl(
+            mb, "paged",
+            lambda pages_bucket: lanes_mod.CBP.key(
+                s, pages_bucket, dt, mb["mesh"]
+            ),
+        )
 
         # Pre-bind the hot slot to the smallest bucket (cheap dispatch);
         # the registry warm already dummy-ran it.
-        self._decode.dispatch(lanes_mod.CBP.key(s, 1, dt))
+        self._decode.dispatch(lanes_mod.CBP.key(s, 1, dt, m0))
 
         # COW device half (cold path): one jitted in-place page copy; the
         # batcher threads it through the same cache its steps donate.
@@ -1174,10 +1506,16 @@ class Engine:
             draft_dispatch=draft_dispatch,
             verify_dispatch=verify_dispatch,
             draft_prefill_dispatch=draft_prefill_dispatch,
-            draft_cache=ctx.draft_cache,
+            draft_cache=(
+                ctx.draft_caches.get((ddt, m0))
+                if ctx.draft_caches
+                else None
+            ),
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
             telemetry=self.telemetry,
+            mesh=m0,
+            mesh_ctl=mesh_ctl,
         )
 
 
@@ -1190,6 +1528,7 @@ def run_continuous_stream(
     seed: int = 0,
     clock: Clock | None = None,
     async_steps: bool = False,
+    mesh: str | None = None,
 ) -> dict:
     """Drive a request stream through continuous batching; return a report.
 
@@ -1197,10 +1536,11 @@ def run_continuous_stream(
     stay 0 for any mix of greedy/sample requests once the bucket executable
     exists. ``async_steps`` pipelines host scheduling against device
     execution (DESIGN.md §13); greedy token streams are bitwise identical
-    either way.
+    either way. ``mesh`` overrides the active topology (DESIGN.md §16); it
+    must be inside the engine's warmed ladder.
     """
     cb = eng.continuous(  # warmup compile first...
-        slots=slots, seed=seed, async_steps=async_steps
+        slots=slots, seed=seed, async_steps=async_steps, mesh=mesh
     )
     clock = clock or Clock()  # ...so served latencies exclude it
     # continuous() marked the warm boundary (DESIGN.md §14); the report's
@@ -1224,6 +1564,7 @@ def run_continuous_stream(
     report.update(
         engine="continuous",
         async_steps=cb.async_steps,
+        mesh=cb.mesh,
         slots=cb.num_slots,
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),
@@ -1232,6 +1573,7 @@ def run_continuous_stream(
         prefill_chunks=cb.stats.prefill_chunks,
         chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
         h2d_uploads=cb.stats.h2d_uploads,
+        h2d_overlapped=cb.stats.h2d_overlapped,
         spec_k=cb.spec_k,
         k_bucket_crossings=cb.stats.k_bucket_crossings,
         compiles_total=eng._decode.stats.misses,
@@ -1325,6 +1667,7 @@ def run_paged_stream(
     clock: Clock | None = None,
     kv_dtype: str | None = None,
     async_steps: bool = False,
+    mesh: str | None = None,
 ) -> dict:
     """Drive a request stream through the paged KV engine; return a report.
 
@@ -1334,12 +1677,16 @@ def run_paged_stream(
     the pool's physical token capacity. ``kv_dtype`` overrides the engine
     config's active pool dtype (DESIGN.md §12) — it must be in the warmed
     set, and flipping it across streams on one engine is the dtype crossing
-    ``benchmarks/quantkv_bench.py`` gates at zero compiles.
+    ``benchmarks/quantkv_bench.py`` gates at zero compiles. ``mesh``
+    likewise overrides the active topology (DESIGN.md §16) — it must be in
+    the warmed ladder, and crossing it across streams is a rebind, never a
+    compile (``benchmarks/sharding_bench.py`` gates this).
     """
     from repro.runtime.kvcache import sharing_report
 
     cb = eng.paged_continuous(  # warmup compile first
-        slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps
+        slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps,
+        mesh=mesh,
     )
     clock = clock or Clock()  # ...so served latencies exclude it
     # paged_continuous() marked the warm boundary (DESIGN.md §14).
@@ -1385,11 +1732,13 @@ def run_paged_stream(
     report.update(
         engine="paged",
         async_steps=cb.async_steps,
+        mesh=cb.mesh,
         slots=cb.num_slots,
         steps=cb.stats.steps,
         occupancy=round(cb.stats.occupancy, 4),
         page_size=cb.pool.page_size,
         kv_dtype=cb.pool.kv_dtype,
+        pool_shards=cb.pool.shards,
         pool_pages=cb.pool.num_pages,
         pool_tokens=cb.pool.total_tokens,
         pages_in_use_peak=cb.pool.stats.peak_in_use,
@@ -1418,6 +1767,7 @@ def run_paged_stream(
         prefill_chunks=cb.stats.prefill_chunks,
         chunk_bucket_crossings=cb.stats.chunk_bucket_crossings,
         h2d_uploads=cb.stats.h2d_uploads,
+        h2d_overlapped=cb.stats.h2d_overlapped,
         spec_k=cb.spec_k,
         k_bucket_crossings=cb.stats.k_bucket_crossings,
         cow_copies=cb.pool.stats.cow_copies,

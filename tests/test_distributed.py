@@ -91,10 +91,15 @@ def test_compressed_psum_int8_wire():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import compressed_psum
 
+        # version-portable shard_map (mirrors repro.distributed.pipeline)
+        shard_map = getattr(jax, 'shard_map', None)
+        if shard_map is None:
+            from jax.experimental.shard_map import shard_map
+
         mesh = jax.make_mesh((8,), ('pod',))
         @jax.jit
         def f(x):
-            return jax.shard_map(
+            return shard_map(
                 lambda s: compressed_psum(s, 'pod'),
                 mesh=mesh, in_specs=P('pod'), out_specs=P('pod'),
             )(x)

@@ -64,22 +64,23 @@ def _prompt_reqs(cfg, n=3, prompt_len=12, new_tokens=4, seed=0):
 def test_dispatch_key_is_tuple_compatible():
     """The typed key hashes/compares exactly like the raw tuple it
     replaces: compile caches, pins, and stats keys are unchanged."""
-    key = DispatchKey("cbp", (4, 8, "int8"))
-    assert key == ("cbp", 4, 8, "int8")
-    assert hash(key) == hash(("cbp", 4, 8, "int8"))
-    assert key.lane == "cbp" and key.coords == (4, 8, "int8")
-    assert {key: 1}[("cbp", 4, 8, "int8")] == 1
+    key = DispatchKey("cbp", (4, 8, "int8", "1x1"))
+    assert key == ("cbp", 4, 8, "int8", "1x1")
+    assert hash(key) == hash(("cbp", 4, 8, "int8", "1x1"))
+    assert key.lane == "cbp" and key.coords == (4, 8, "int8", "1x1")
+    assert {key: 1}[("cbp", 4, 8, "int8", "1x1")] == 1
     assert "DispatchKey" in repr(key)
 
 
 def test_lane_spec_key_arity_and_coord_access():
     spec = LANES.get("cbp")
-    key = spec.key(4, 2, "fp32")
-    assert key == ("cbp", 4, 2, "fp32")
+    key = spec.key(4, 2, "fp32", "1x1")
+    assert key == ("cbp", 4, 2, "fp32", "1x1")
     assert spec.coord(key, "pages_bucket") == 2
     assert spec.coord(key, "kv_dtype") == "fp32"
+    assert spec.coord(key, "mesh") == "1x1"
     with pytest.raises(UnknownLaneError):
-        spec.key(4, 2)  # missing kv_dtype
+        spec.key(4, 2, "fp32")  # missing mesh
     with pytest.raises(UnknownLaneError):
         spec.coord(key, "nope")
     with pytest.raises(UnknownLaneError):
@@ -123,7 +124,7 @@ def test_unknown_lane_raises_at_build_time(smoke_setup):
     with pytest.raises(UnknownLaneError):
         eng._decode.build(("nope", 4))
     with pytest.raises(UnknownLaneError):
-        eng._decode.build(("cb", 4, 8))  # arity mismatch for "cb"
+        eng._decode.build(("cb", 4, 8, "1x1"))  # arity mismatch for "cb"
     with pytest.raises(UnknownLaneError):
         eng._decode.build((4, 0))  # the pre-registry raw burst tuple
     with pytest.raises(UnknownLaneError):
@@ -189,11 +190,11 @@ def test_warmup_completeness_kv_dtype_fanout(smoke_setup):
     assert cb8.kv_dtype == "int8"
     for dt in ("fp32", "int8"):
         for pb in eng._pages_buckets():
-            assert ("cbp", s, pb, dt) in eng._decode
+            assert ("cbp", s, pb, dt, "1x1") in eng._decode
         for c in eng._chunk_buckets():
-            assert ("pf", s, c, dt) in eng._decode
+            assert ("pf", s, c, dt, "1x1") in eng._decode
         for k in eng._k_buckets():
-            assert ("vf", s, k, dt) in eng._decode
+            assert ("vf", s, k, dt, "1x1") in eng._decode
     misses = eng._decode.stats.misses
     reqs = _prompt_reqs(cfg)
     cb8.admit(reqs, now=0.0)

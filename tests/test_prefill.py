@@ -503,6 +503,53 @@ def test_upload_dedup_steady_state():
     assert cb.stats.h2d_uploads == after_first  # zero per-step churn
 
 
+def test_admit_double_buffers_uploads_off_issue_path():
+    """Satellite: admission stages the edited coordinate arrays into the
+    device mirror immediately (overlapping host planning / the in-flight
+    step), so the next issue's ``get``s are hits — and the staged copies
+    are pure prefetch: later host edits still ``touch`` them away, so the
+    emitted stream is unchanged."""
+    mk = lambda: ContinuousBatcher(
+        step=lambda cache, tok, pos, active, temps, greedy, keys: (
+            np.asarray(tok)[:, 0] + 1,
+            cache,
+            np.asarray(pos) + np.asarray(active).astype(np.int32),
+            keys,
+        ),
+        num_slots=2,
+        max_len=64,
+        cache=None,
+    )
+    cb = mk()
+    reqs = lambda: [
+        Request(rid=0, new_tokens=3, greedy=True, first_token=1),
+        Request(rid=1, new_tokens=3, greedy=True, first_token=2),
+    ]
+    cb.admit(reqs())
+    staged = cb.stats.h2d_overlapped
+    assert staged > 0  # tok/pos/active/... staged at admission
+    assert cb.stats.h2d_uploads == staged  # no issue yet: all overlapped
+    u0 = cb.stats.h2d_uploads
+    cb.step()
+    # first issue rode the staged copies: no re-upload of a staged name
+    assert cb.stats.h2d_uploads == u0
+    done = []
+    for _ in range(5):
+        done += cb.step()
+    # the prefetch changed data movement only, never tokens
+    ref_reqs = reqs()
+    ref = mk()
+    ref._mirror.preload = lambda name, host: None  # disable the prefetch
+    ref.admit(ref_reqs)
+    ref_done = []
+    for _ in range(6):
+        ref_done += ref.step()
+    assert ref.stats.h2d_overlapped == 0
+    got = {r.rid: r.tokens for r in done}
+    want = {r.rid: r.tokens for r in ref_done}
+    assert got == want and len(got) == 2
+
+
 # ----------------------------------------------------- end-to-end (smoke)
 @pytest.fixture(scope="module")
 def smoke_setup():

@@ -351,3 +351,104 @@ def test_int8_stream_matches_fp32_tokens(smoke_setup):
     assert reports["int8"]["compiles_after_warmup"] == 0
     assert reports["int8"]["kv_dtype"] == "int8"
     assert streams["int8"] == streams["fp32"]
+
+
+# ------------------------------------------------- quantised draft views
+def test_int8_draft_logit_drift_bounded(smoke_setup):
+    """Satellite (ISSUE 9): the truncated-layer draft view served from an
+    int8 page pool drifts from its fp32 twin by less than the stated
+    bound — the draft only *proposes*; fp32 verify decides — but the
+    proposal distribution must stay close or acceptance collapses."""
+    cfg, params = smoke_setup
+    dcfg, dparams = models.draft_view(cfg, params, draft_layers=1)
+    ps, PB = 8, 4
+    bt = jnp.asarray(1 + np.arange(PB).reshape(1, PB), jnp.int32)
+    c32 = models.init_paged_cache(dcfg, 1 + PB, ps)
+    c8 = models.init_paged_cache(dcfg, 1 + PB, ps, "int8")
+    dstep = jax.jit(
+        lambda p, c, t, po, b: models.paged_decode_step(dcfg, p, c, t, po, b)
+    )
+    rng = np.random.default_rng(1)
+    drift = 0.0
+    for i, t in enumerate(rng.integers(0, cfg.vocab_size, 24)):
+        l32, c32 = dstep(
+            dparams, c32, jnp.asarray([[t]], jnp.int32),
+            jnp.asarray([i], jnp.int32), bt,
+        )
+        l8, c8 = dstep(
+            dparams, c8, jnp.asarray([[t]], jnp.int32),
+            jnp.asarray([i], jnp.int32), bt,
+        )
+        drift = max(
+            drift, float(np.abs(np.asarray(l32) - np.asarray(l8)).max())
+        )
+    assert drift < LOGIT_DRIFT_BOUND, drift
+
+
+def test_int8_draft_pairs_with_fp32_verify_stream(smoke_setup):
+    """End-to-end: spec decoding with an int8 draft pool under an fp32
+    verify pool emits the *same greedy stream* as with an fp32 draft pool
+    — the verify lane owns correctness, the quantised draft only changes
+    the proposal cost — with zero compiles after warmup, the draft lanes
+    actually exercised, and no acceptance degradation vs the fp32 draft.
+    (Greedy spec == plain greedy is test_specdec's invariant; with the
+    int8 stream equal to the fp32 stream it carries over transitively.)"""
+    from repro.runtime.serve import run_paged_stream
+
+    cfg, params = smoke_setup
+
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [
+            Request(
+                rid=i, new_tokens=6, greedy=True, arrival_s=0.0,
+                prompt=tuple(
+                    int(x) for x in rng.integers(0, cfg.vocab_size, 12)
+                ),
+            )
+            for i in range(3)
+        ]
+
+    streams, spec = {}, {}
+    for ddt in ("fp32", "int8"):
+        reset_entry_points()
+        eng = Engine(
+            cfg,
+            params,
+            EngineConfig(
+                max_len=64, batch_quantum=2, max_batch=4, page_size=8,
+                num_pages=40, prefill_chunk=8, spec_k=2, draft_layers=1,
+                draft_kv_dtype=ddt,
+            ),
+        )
+        rs = reqs()
+        rep = run_paged_stream(eng, rs, slots=4)
+        assert rep["finished"] == 3
+        assert rep["compiles_after_warmup"] == 0
+        assert rep["spec"]["drafted_tokens"] > 0  # the draft really ran
+        streams[ddt] = [r.tokens for r in rs]
+        spec[ddt] = rep["spec"]
+        eng.close()
+    assert streams["int8"] == streams["fp32"]
+    # quantising the draft pool didn't change what it proposed: same
+    # drafted/accepted counts, so same acceptance rate (no collapse)
+    assert spec["int8"]["drafted_tokens"] == spec["fp32"]["drafted_tokens"]
+    assert spec["int8"]["accepted_tokens"] == spec["fp32"]["accepted_tokens"]
+
+
+def test_int8_draft_dtype_must_be_warmed(smoke_setup):
+    """A draft pool dtype outside the warm ladder is refused up front —
+    a cold draft dtype would compile mid-stream."""
+    cfg, params = smoke_setup
+    reset_entry_points()
+    eng = Engine(
+        cfg,
+        params,
+        EngineConfig(
+            max_len=64, batch_quantum=2, max_batch=4, page_size=8,
+            num_pages=40, prefill_chunk=8, spec_k=2, draft_layers=1,
+        ),
+    )
+    with pytest.raises(ValueError, match="draft_kv_dtype"):
+        eng.paged_continuous(slots=4, draft_kv_dtype="int8")
+    eng.close()

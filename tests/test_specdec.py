@@ -273,19 +273,19 @@ def test_warmup_completeness_all_lanes(smoke_setup, engine_kind):
     if engine_kind == "paged":
         cb = eng.paged_continuous(slots=s)
         decode_keys = [
-            ("cbp", s, pb, "fp32") for pb in eng._pages_buckets()
+            ("cbp", s, pb, "fp32", "1x1") for pb in eng._pages_buckets()
         ]
         lane_dispatches = [
             lambda b=b: cb._prefill_dispatch(b) for b in eng._chunk_buckets()
         ]
-        vkey = lambda k: ("vf", s, k, "fp32")
+        vkey = lambda k: ("vf", s, k, "fp32", "1x1")
     else:
         cb = eng.continuous(slots=s)
-        decode_keys = [("cb", s)]
+        decode_keys = [("cb", s, "1x1")]
         lane_dispatches = [
             lambda b=b: cb._prefill_dispatch(b) for b in eng._chunk_buckets()
         ]
-        vkey = lambda k: ("vfd", s, k)
+        vkey = lambda k: ("vfd", s, k, "1x1")
     misses = eng._decode.stats.misses
     # every decode bucket, chunk bucket, and k bucket must already exist
     for key in decode_keys:
@@ -297,7 +297,7 @@ def test_warmup_completeness_all_lanes(smoke_setup, engine_kind):
         cb._verify_dispatch(k)
         cb._draft_prefill_dispatch(CHUNK_BUCKET := 8)
         assert vkey(k) in eng._decode
-        assert ("dr", s, k) in eng._decode
+        assert ("dr", s, k, "fp32", "1x1") in eng._decode
     assert eng._decode.stats.misses == misses, (
         f"{engine_kind}: lane/bucket dispatch compiled after warmup "
         f"(keys: {eng._decode.cache.keys()})"
