@@ -3,12 +3,14 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
 	smoke-quantkv smoke-async smoke-telemetry smoke-chaos smoke-sharding \
-	bench-serving bench-kvcache bench-prefill bench-specdec bench-quantkv \
-	bench-telemetry bench-overload bench-sharding bench-check bench examples
+	smoke-disagg bench-serving bench-kvcache bench-prefill bench-specdec \
+	bench-quantkv bench-telemetry bench-overload bench-sharding \
+	bench-disagg bench-check bench examples
 
 # The full gate: tier-1 tests + a CPU smoke of the serving stack.
 verify: tier1 smoke-serve smoke-paged smoke-prefill smoke-specdec \
-	smoke-quantkv smoke-async smoke-telemetry smoke-chaos smoke-sharding
+	smoke-quantkv smoke-async smoke-telemetry smoke-chaos smoke-sharding \
+	smoke-disagg
 
 # Pre-existing seed-era failures (jax-version drift; see
 # .claude/skills/verify/SKILL.md). scripts/verify.sh deselects the same set.
@@ -72,8 +74,10 @@ smoke-telemetry:
 	$(PY) -m repro.launch.serve --smoke --requests 12 --rate 200 \
 		--tokens-mean 5 --max-len 32 --engine paged \
 		--page-size 8 --num-pages 20 --prefix-len 8 \
-		--trace-out trace_smoke.json --metrics-out metrics_smoke.prom
-	$(PY) scripts/check_trace.py trace_smoke.json metrics_smoke.prom
+		--trace-out artifacts/trace_smoke.json \
+		--metrics-out artifacts/metrics_smoke.prom
+	$(PY) scripts/check_trace.py artifacts/trace_smoke.json \
+		artifacts/metrics_smoke.prom
 
 # CPU smoke: overload hardening + chaos (DESIGN.md §15) — bounded
 # admission, deadlines, the degradation ladder, and a seeded fault plan
@@ -99,6 +103,17 @@ smoke-sharding:
 		--tokens-mean 4 --max-len 32 --engine paged \
 		--page-size 8 --num-pages 20 --prefix-len 8 \
 		--mesh 1x2 --meshes "1x1"
+
+# CPU smoke: disaggregated prefill/decode (DESIGN.md §17) — two fake host
+# devices, prefill lanes pinned to the warmed "1x1@1" slice, KV pages
+# live-migrating decode-ward at each flip; the report must show migrations
+# and zero post-warmup compiles.
+smoke-disagg:
+	XLA_FLAGS="--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
+		$(PY) -m repro.launch.serve --smoke --requests 8 --rate 200 \
+		--tokens-mean 4 --max-len 64 --engine paged \
+		--page-size 8 --num-pages 28 --prompt-len 24 --prefill-chunk 8 \
+		--meshes "1x1@1" --disagg
 
 # Serving perf trajectory: writes BENCH_serving.json (per-burst vs
 # continuous-batching throughput/latency/cold-path counters, plus the
@@ -144,11 +159,19 @@ bench-overload:
 bench-sharding:
 	$(PY) -m benchmarks.run --only sharding --fast
 
+# Disaggregated prefill/decode: writes BENCH_disagg.json (shared vs
+# pinned-slice TTFT/throughput on the mixed stream, live KV-page
+# migration counts, split/collapse rebinds at zero compiles, bitwise
+# identity — DESIGN.md §17).
+bench-disagg:
+	$(PY) -m benchmarks.run --only disagg --fast
+
 # Regression gate over freshly written BENCH_*.json (CI runs this).
 bench-check:
 	$(PY) scripts/bench_check.py BENCH_serving.json BENCH_kvcache.json \
 		BENCH_prefill.json BENCH_specdec.json BENCH_quantkv.json \
-		BENCH_telemetry.json BENCH_overload.json BENCH_sharding.json
+		BENCH_telemetry.json BENCH_overload.json BENCH_sharding.json \
+		BENCH_disagg.json
 
 bench:
 	$(PY) -m benchmarks.run --fast

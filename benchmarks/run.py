@@ -54,7 +54,10 @@ def _prefill_suite(fast: bool, json_path: str) -> list[str]:
     with open(json_path, "w") as f:
         json.dump(res, f, indent=2, default=float)
     rows = []
-    for kind in ("chunked", "sequential", "dense_chunked", "dense_sequential"):
+    for kind in (
+        "chunked", "sequential", "async_chunked", "dense_chunked",
+        "dense_sequential",
+    ):
         r = res[kind]
         rows.append(
             f"prefill/{kind}/ttft_p95_ms,{r.get('ttft_p95_ms', 0.0):.1f},"
@@ -267,6 +270,39 @@ def _sharding_suite(fast: bool, json_path: str) -> list[str]:
     return rows
 
 
+def _disagg_suite(fast: bool, json_path: str) -> list[str]:
+    from . import disagg_bench
+
+    res = disagg_bench.disagg_comparison(fast=fast)
+    with open(json_path, "w") as f:
+        json.dump(res, f, indent=2, default=float)
+    rows = []
+    for kind in ("shared", "disagg", "disagg_async"):
+        r = res[kind]
+        rows.append(
+            f"disagg/{kind}/tok_per_s,{r.get('tok_per_s', 0.0):.1f},"
+            f"ttft_p95_ms={r.get('ttft_p95_ms', 0.0):.1f};"
+            f"p95_ms={r.get('p95_ms', 0.0):.1f};"
+            f"prefill_chunks={r.get('prefill_chunks')};"
+            f"migrations={r.get('migrations')};"
+            f"migrated_pages={r.get('migrated_pages')};"
+            f"compiles_after_warmup={r.get('compiles_after_warmup')}"
+        )
+    rb = res["rebind"]
+    rows.append(
+        f"disagg/rebind,{rb['disagg_rebinds']},"
+        f"finished={rb['finished']}/{rb['expected']};"
+        f"migrations={rb['migrations']};"
+        f"compiles_after_warmup={rb['compiles_after_warmup']}"
+    )
+    rows.append(
+        f"disagg/acceptance,0.0,"
+        f"{';'.join(f'{k}={v}' for k, v in res['acceptance'].items())}"
+    )
+    rows.append(f"disagg/json,0.0,written={json_path}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
@@ -279,6 +315,7 @@ def main() -> None:
     ap.add_argument("--telemetry-json", default="BENCH_telemetry.json")
     ap.add_argument("--overload-json", default="BENCH_overload.json")
     ap.add_argument("--sharding-json", default="BENCH_sharding.json")
+    ap.add_argument("--disagg-json", default="BENCH_disagg.json")
     args = ap.parse_args()
 
     from . import (
@@ -312,6 +349,7 @@ def main() -> None:
         "telemetry": lambda: _telemetry_suite(args.fast, args.telemetry_json),
         "overload": lambda: _overload_suite(args.fast, args.overload_json),
         "sharding": lambda: _sharding_suite(args.fast, args.sharding_json),
+        "disagg": lambda: _disagg_suite(args.fast, args.disagg_json),
     }
     only = {s for s in args.only.split(",") if s}
     print(common.header())

@@ -45,6 +45,15 @@ The serving acceptance contracts this repo cannot regress (DESIGN.md §7/§9):
   recorded with a sanity floor only — the ~85% per-chip target is a
   real-hardware claim.
 
+* BENCH_disagg.json — disaggregated prefill/decode (DESIGN.md §17): on
+  the mixed long-prompt/decode-heavy stream the pinned split must beat
+  the shared mesh on TTFT p95 AND hold tok/s (the decoupled chunk budget
+  removes scheduler contention — the honest CPU-harness claim; device-
+  parallel upside needs real hardware), with live KV-page migration
+  actually exercised, greedy streams bitwise identical across
+  shared/disagg/async arms, zero post-warmup compiles everywhere, and
+  the mid-stream split->collapse->split recorded as exactly 2 rebinds.
+
 Usage: python scripts/bench_check.py [BENCH_*.json ...]
 Missing files are skipped with a warning (suites can be run selectively);
 any present-but-failing contract exits 1.
@@ -146,6 +155,9 @@ def check_prefill(data: dict) -> list[str]:
     acc = data.get("acceptance", {})
     for key in (
         "chunked_ttft_beats_sequential",
+        # chainable chunks (DESIGN.md §13): the TTFT uplift must survive
+        # the async step pipeline (parked chunks may not delay flips)
+        "async_chunked_ttft_beats_sequential",
         "no_compiles_after_warmup",
         "all_served",
     ):
@@ -385,6 +397,56 @@ def check_sharding(data: dict) -> list[str]:
     return errors
 
 
+def check_disagg(data: dict) -> list[str]:
+    errors = []
+    for kind in ("shared", "disagg", "disagg_async"):
+        caw = data.get(kind, {}).get("compiles_after_warmup")
+        if caw != 0:
+            errors.append(
+                f"disagg: {kind} arm recompiled after warmup "
+                f"(compiles_after_warmup={caw}, must be 0 — both slices "
+                f"sit in the warm ladder)"
+            )
+    acc = data.get("acceptance", {})
+    if acc.get("ttft_p95_beats_shared") is not True:
+        errors.append(
+            f"disagg: pinned split must beat the shared mesh on TTFT p95 "
+            f"(speedup={acc.get('ttft_p95_speedup')}) — the decoupled "
+            f"chunk budget must remove scheduler contention"
+        )
+    if acc.get("tok_per_s_holds") is not True:
+        errors.append(
+            f"disagg: split throughput must hold >= the shared mesh "
+            f"(ratio={acc.get('tok_per_s_ratio')}) — migration overhead "
+            f"may not eat the contention win"
+        )
+    if acc.get("migrations_exercised") is not True:
+        errors.append(
+            "disagg: the KV-page migration path was never exercised "
+            "(every PREFILL->DECODE flip must transport pages)"
+        )
+    if acc.get("bitwise_identical") is not True:
+        errors.append(
+            "disagg: greedy streams must be bitwise identical across "
+            "shared/disagg/disagg_async (migration moves bits, never "
+            "changes them)"
+        )
+    if acc.get("zero_compiles") is not True:
+        errors.append(
+            "disagg: post-warmup compiles must stay 0 in every arm "
+            "including the split->collapse->split rebinds"
+        )
+    if acc.get("disagg_rebinds") != 2:
+        errors.append(
+            f"disagg: the mid-stream collapse + re-split must record "
+            f"exactly 2 rebinds, got {acc.get('disagg_rebinds')}"
+        )
+    for key in ("rebind_all_finished", "all_served"):
+        if not acc.get(key, False):
+            errors.append(f"disagg: acceptance flag {key!r} is not True")
+    return errors
+
+
 CHECKS = {
     "BENCH_serving.json": check_serving,
     "BENCH_kvcache.json": check_kvcache,
@@ -394,6 +456,7 @@ CHECKS = {
     "BENCH_telemetry.json": check_telemetry,
     "BENCH_overload.json": check_overload,
     "BENCH_sharding.json": check_sharding,
+    "BENCH_disagg.json": check_disagg,
 }
 
 

@@ -51,8 +51,10 @@ echo "== telemetry smoke (CPU): flight recorder + metrics registry =="
 python -m repro.launch.serve --smoke --requests 12 --rate 200 \
   --tokens-mean 5 --max-len 32 --engine paged \
   --page-size 8 --num-pages 20 --prefix-len 8 \
-  --trace-out trace_smoke.json --metrics-out metrics_smoke.prom
-python scripts/check_trace.py trace_smoke.json metrics_smoke.prom
+  --trace-out artifacts/trace_smoke.json \
+  --metrics-out artifacts/metrics_smoke.prom
+python scripts/check_trace.py artifacts/trace_smoke.json \
+  artifacts/metrics_smoke.prom
 
 echo "== sharded serving smoke (CPU, 2 fake devices) =="
 # Active 1x2 (model-parallel) with the 1x1 standby warmed (DESIGN.md §16):
@@ -63,6 +65,16 @@ python -m repro.launch.serve --smoke --requests 8 --rate 200 \
   --tokens-mean 4 --max-len 32 --engine paged \
   --page-size 8 --num-pages 20 --prefix-len 8 \
   --mesh 1x2 --meshes "1x1"
+
+echo "== disaggregated prefill/decode smoke (CPU, 2 fake devices) =="
+# Prefill lanes pinned to the warmed "1x1@1" slice, decode on "1x1"; KV
+# pages live-migrate decode-ward at each flip (DESIGN.md §17) — zero
+# post-warmup compiles like any other semi-static coordinate.
+XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+python -m repro.launch.serve --smoke --requests 8 --rate 200 \
+  --tokens-mean 4 --max-len 64 --engine paged \
+  --page-size 8 --num-pages 28 --prompt-len 24 --prefill-chunk 8 \
+  --meshes "1x1@1" --disagg
 
 echo "== overload hardening + chaos smoke matrix (CPU) =="
 # {sync,async} x {spec on,off} through the hardened driver with bounded

@@ -118,6 +118,12 @@ class LaneSpec:
     engines: frozenset[str] = field(default_factory=frozenset)
     enabled: str | None = None
     doc: str = ""
+    # Which mesh slice the lane's calls route to under disaggregated
+    # prefill/decode (DESIGN.md §17): "prefill" lanes follow the
+    # DisaggPlan's prefill slice, everything else stays on the decode
+    # (= base) mesh. With disaggregation off both resolve to the same
+    # mesh, so the field is inert outside a split.
+    slice: str = "decode"
 
     @property
     def axis_names(self) -> tuple[str, ...]:
@@ -281,6 +287,7 @@ PF = LANES.register(LaneSpec(
     axes=(_SLOTS, _CHUNK, _KVDTYPE, _MESH),
     builder="_build_paged_prefill", warmer="_warm_pf",
     engines=frozenset({"paged"}), enabled="_supports_chunked_prefill",
+    slice="prefill",
     doc="Paged chunked prefill, batched: every prefilling slot the budget "
         "covers rides one call (DESIGN.md §10/§12).",
 ))
@@ -290,6 +297,7 @@ PFD = LANES.register(LaneSpec(
     axes=(_SLOTS, _CHUNK, _MESH),
     builder="_build_slot_prefill", warmer="_warm_pfd",
     engines=frozenset({"dense"}), enabled="_supports_chunked_prefill",
+    slice="prefill",
     doc="Dense chunked prefill, batched (DESIGN.md §10).",
 ))
 
@@ -323,6 +331,18 @@ DRP = LANES.register(LaneSpec(
     axes=(_SLOTS, _CHUNK, _DRAFT_KVDTYPE, _MESH),
     builder="_build_draft_prefill", warmer="_warm_drp",
     engines=frozenset({"dense", "paged"}), enabled="_spec_lanes_enabled",
+    slice="prefill",
     doc="Draft prompt mirror: chunked dense ingestion over the draft view "
         "(DESIGN.md §11).",
+))
+
+MG = LANES.register(LaneSpec(
+    name="mg", role="migrate",
+    axes=(LaneAxis("op", "_mg_ops"), _KVDTYPE, _MESH),
+    builder="_build_migrate", warmer="_warm_mg",
+    engines=frozenset({"paged"}), enabled="_disagg_lanes_enabled",
+    doc="KV-page migration transport (DESIGN.md §17): gather pages out of "
+        "one pool's cache tree / scatter them into another's, per fixed "
+        "page-index bucket. Warmed over the mesh ladder so both slices of "
+        "a DisaggPlan carry compiled gather+scatter cells.",
 ))

@@ -18,10 +18,12 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import re
+from dataclasses import dataclass
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import ArchConfig
@@ -288,23 +290,43 @@ SERVING_AXES = ("data", "model")
 
 
 def parse_mesh_name(name: str) -> tuple[int, int]:
-    """"2x2" / "2,2" -> (dp, mp). dp shards slots/pages, mp shards params."""
-    parts = re.split(r"[x,]", str(name).strip().lower())
+    """"2x2" / "2,2" -> (dp, mp). dp shards slots/pages, mp shards params.
+
+    Offset slice names ("1x1@1", DESIGN.md §17) parse to the same (dp, mp)
+    shape — callers that only care about the mesh *shape* (pool shard
+    derivation, ladder fan-out) see slices and plain meshes uniformly; use
+    :func:`parse_slice_name` when the device offset matters."""
+    return parse_slice_name(name)[:2]
+
+
+def parse_slice_name(name: str) -> tuple[int, int, int]:
+    """"DPxMP[@OFF]" -> (dp, mp, off). A mesh *slice* (DESIGN.md §17) is an
+    ordinary DPxMP mesh placed at device offset OFF instead of device 0 —
+    the coordinate disaggregated prefill/decode pins its lane groups to.
+    Plain names carry offset 0."""
+    body, _, off_s = str(name).strip().lower().partition("@")
+    parts = re.split(r"[x,]", body)
     if len(parts) != 2:
         raise ValueError(
-            f"mesh name must be 'DPxMP' (e.g. '1x2'), got {name!r}"
+            f"mesh name must be 'DPxMP[@OFF]' (e.g. '1x2', '1x1@1'), "
+            f"got {name!r}"
         )
     try:
         dp, mp = int(parts[0]), int(parts[1])
+        off = int(off_s) if off_s else 0
     except ValueError as e:
-        raise ValueError(f"mesh name must be 'DPxMP', got {name!r}") from e
+        raise ValueError(
+            f"mesh name must be 'DPxMP[@OFF]', got {name!r}"
+        ) from e
     if dp < 1 or mp < 1:
         raise ValueError(f"mesh sizes must be >= 1, got {name!r}")
-    return dp, mp
+    if off < 0:
+        raise ValueError(f"mesh offset must be >= 0, got {name!r}")
+    return dp, mp, off
 
 
-def mesh_name(dp: int, mp: int) -> str:
-    return f"{dp}x{mp}"
+def mesh_name(dp: int, mp: int, off: int = 0) -> str:
+    return f"{dp}x{mp}" if off == 0 else f"{dp}x{mp}@{off}"
 
 
 class MeshPlan:
@@ -316,16 +338,43 @@ class MeshPlan:
     ``Mesh((dp, mp), ("data", "model"))`` over the first dp*mp devices
     (redco-style dp/mp) and hand out NamedSharding trees for params,
     caches, and per-slot row arrays.
+
+    Offset slices ("1x1@1", DESIGN.md §17) are *never* single even at
+    dp=mp=1 — they must not take the default-device path — but a
+    one-device slice is ``solo``: its executables lower through plain
+    ``jax.jit`` pinned to ``devices[off]`` via ``SingleDeviceSharding``
+    rather than under a one-device Mesh. GSPMD adds real per-call cost
+    (sharded in/out wrappers, slower D2H) that a one-device slice gets
+    nothing for; the pinned plain path keeps prefill-slice calls as cheap
+    as default-device ones.
     """
 
     def __init__(self, name: str):
-        self.dp, self.mp = parse_mesh_name(name)
-        self.name = mesh_name(self.dp, self.mp)
+        self.dp, self.mp, self.offset = parse_slice_name(name)
+        self.name = mesh_name(self.dp, self.mp, self.offset)
         self._mesh: Mesh | None = None
 
     @property
     def single(self) -> bool:
+        return self.dp == 1 and self.mp == 1 and self.offset == 0
+
+    @property
+    def solo(self) -> bool:
+        """One-device plan at any offset: no Mesh, no GSPMD — plain jit
+        pinned to ``self.device`` (``single`` plans skip even the pin)."""
         return self.dp == 1 and self.mp == 1
+
+    @property
+    def device(self):
+        """The pinned device of a solo plan."""
+        avail = len(jax.devices())
+        if self.offset >= avail:
+            raise ValueError(
+                f"mesh {self.name!r} needs device {self.offset}, only "
+                f"{avail} visible (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N for CPU runs)"
+            )
+        return jax.devices()[self.offset]
 
     @property
     def num_devices(self) -> int:
@@ -335,13 +384,20 @@ class MeshPlan:
     def mesh(self) -> Mesh:
         if self._mesh is None:
             avail = len(jax.devices())
-            if self.num_devices > avail:
+            if self.offset + self.num_devices > avail:
                 raise ValueError(
-                    f"mesh {self.name!r} needs {self.num_devices} devices, "
+                    f"mesh {self.name!r} needs devices "
+                    f"[{self.offset}, {self.offset + self.num_devices}), "
                     f"only {avail} visible (set XLA_FLAGS="
                     f"--xla_force_host_platform_device_count=N for CPU runs)"
                 )
-            self._mesh = jax.make_mesh((self.dp, self.mp), SERVING_AXES)
+            if self.offset == 0:
+                self._mesh = jax.make_mesh((self.dp, self.mp), SERVING_AXES)
+            else:
+                devs = np.asarray(
+                    jax.devices()[self.offset : self.offset + self.num_devices]
+                ).reshape(self.dp, self.mp)
+                self._mesh = Mesh(devs, SERVING_AXES)
         return self._mesh
 
     # --- spec builders (all return NamedSharding trees / values) ---
@@ -413,6 +469,54 @@ class MeshPlan:
 
     def __repr__(self) -> str:
         return f"MeshPlan({self.name!r})"
+
+
+@dataclass(frozen=True)
+class DisaggPlan:
+    """Disaggregated prefill/decode placement (DESIGN.md §17).
+
+    Two warmed mesh slices out of one device fleet: the prefill lanes
+    (``pf``/``pfd``/``drp`` — ``LaneSpec.slice == "prefill"``) pin to
+    ``prefill``, everything else (decode/draft/verify/burst) to ``decode``.
+    Both names must sit in the ``EngineConfig.meshes`` warm ladder so every
+    lane×slice cell is AOT-compiled; the split itself is then a semi-static
+    rebind (``set_disagg``) — flipping which slice the prefill dispatch
+    closures read, never a compile.
+    """
+
+    prefill: str  # slice name the prefill lanes pin to (e.g. "1x1@1")
+    decode: str  # slice name the decode/draft/verify lanes pin to
+
+    def __post_init__(self) -> None:
+        pf, dec = MeshPlan(self.prefill), MeshPlan(self.decode)
+        pf_devs = set(range(pf.offset, pf.offset + pf.num_devices))
+        dec_devs = set(range(dec.offset, dec.offset + dec.num_devices))
+        if pf_devs & dec_devs:
+            raise ValueError(
+                f"disagg slices overlap: prefill {self.prefill!r} and "
+                f"decode {self.decode!r} share devices "
+                f"{sorted(pf_devs & dec_devs)}"
+            )
+        object.__setattr__(self, "prefill", pf.name)
+        object.__setattr__(self, "decode", dec.name)
+
+    @classmethod
+    def split(cls, base: "MeshPlan | str") -> "DisaggPlan":
+        """Derive the canonical split from a base mesh: the last data-
+        parallel row becomes the prefill slice, the rest keep decoding.
+        A 2x1 base splits into decode "1x1" + prefill "1x1@1" — the
+        two-fake-device CPU harness's shape."""
+        plan = base if isinstance(base, MeshPlan) else MeshPlan(base)
+        if plan.dp < 2:
+            raise ValueError(
+                f"disagg split needs dp >= 2 on the base mesh, got "
+                f"{plan.name!r} (one data row must become the prefill slice)"
+            )
+        dec_dp = plan.dp - 1
+        return cls(
+            prefill=mesh_name(1, plan.mp, plan.offset + dec_dp * plan.mp),
+            decode=mesh_name(dec_dp, plan.mp, plan.offset),
+        )
 
 
 def _strip_axes(spec: P, drop: tuple[str, ...]) -> P:

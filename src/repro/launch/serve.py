@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 
 import jax
 
@@ -118,6 +119,14 @@ def _print_report(rep: dict) -> None:
             if k in rep
         }
         print(f"[serve/paged] kvcache: {paged}", flush=True)
+    if rep.get("disagg"):  # prefill/decode split surfaces (DESIGN.md §17)
+        print(
+            f"[serve/paged] disagg: prefill_slice={rep['disagg']} "
+            f"migrations={rep.get('migrations', 0)} "
+            f"migrated_pages={rep.get('migrated_pages', 0)} "
+            f"rebinds={rep.get('disagg_rebinds', 0)}",
+            flush=True,
+        )
     if rep.get("engine") == "overload":  # hardening surfaces (DESIGN.md §15)
         hard = {
             k: rep[k]
@@ -213,6 +222,21 @@ def main(argv: list[str] | None = None) -> dict:
                          "on device; d2h syncs land at token-emit "
                          "boundaries only. Greedy streams are bitwise "
                          "identical to the synchronous loop")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="async step pipeline: in-flight queue depth "
+                         "(issued-but-uncommitted steps; 2 = classic "
+                         "one-ahead, deeper queues suit accelerators "
+                         "whose enqueue is truly asynchronous)")
+    ap.add_argument("--disagg", nargs="?", const=True, default=None,
+                    metavar="SLICE",
+                    help="disaggregated prefill/decode (DESIGN.md §17): "
+                         "pin the prefill lanes to a mesh slice "
+                         "('DPxMP@OFF', e.g. '1x1@1') while decode stays "
+                         "on --mesh; with no value the canonical slice "
+                         "right after the decode slice's devices is "
+                         "derived. The slice must be listed in --meshes "
+                         "so its lane cells are AOT-warmed; needs "
+                         "--engine paged and --prefill-chunk > 0")
     ap.add_argument("--capacity", type=int, default=0,
                     help="overload engine: bounded admission-queue "
                          "capacity (0 = unbounded; DESIGN.md §15)")
@@ -287,6 +311,18 @@ def main(argv: list[str] | None = None) -> dict:
         ap.error(
             "--async-steps requires --engine continuous or paged (the "
             "per-burst driver has no step pipeline to overlap)"
+        )
+    if args.async_depth < 1:
+        ap.error(f"--async-depth must be >= 1, got {args.async_depth}")
+    if args.disagg is not None and args.engine != "paged":
+        ap.error(
+            "--disagg requires --engine paged (prefill/decode "
+            "disaggregation pins the paged lanes to mesh slices)"
+        )
+    if args.disagg is not None and args.prefill_chunk <= 0:
+        ap.error(
+            "--disagg requires --prefill-chunk > 0 (without the chunked "
+            "prefill lane there is nothing to pin to a prefill slice)"
         )
 
     cfg = get_config(args.arch)
@@ -366,6 +402,7 @@ def main(argv: list[str] | None = None) -> dict:
                     traffic(args.seed),
                     slots=args.slots or None,
                     async_steps=args.async_steps,
+                    async_depth=args.async_depth,
                 )
             finally:
                 eng.close()
@@ -390,6 +427,8 @@ def main(argv: list[str] | None = None) -> dict:
                     paged_reqs,
                     slots=args.slots or None,
                     async_steps=args.async_steps,
+                    async_depth=args.async_depth,
+                    disagg=args.disagg,
                 )
             finally:
                 eng.close()
@@ -436,6 +475,9 @@ def main(argv: list[str] | None = None) -> dict:
             flush=True,
         )
     finally:
+        for path in (args.trace_out, args.metrics_out, args.compile_report):
+            if path and os.path.dirname(path):
+                os.makedirs(os.path.dirname(path), exist_ok=True)
         if args.trace_out:
             trace = write_trace(args.trace_out, telemetry.recorder)
             print(

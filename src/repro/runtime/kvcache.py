@@ -97,6 +97,10 @@ class PoolStats:
     prefix_evictions: int = 0
     peak_in_use: int = 0
     alloc_failures: int = 0
+    # Cross-pool migration accounting (DESIGN.md §17): pages handed to /
+    # adopted from a sibling pool, with refcounts travelling intact.
+    exports: int = 0
+    imports: int = 0
 
 
 class PagePool:
@@ -324,6 +328,51 @@ class PagePool:
                 self._occupancy_sample(rec)
             return True
         return False
+
+    # --------------------------------------- cross-pool migration (§17)
+    def export_page(self, pid: int) -> int:
+        """Hand a live page to a sibling pool: the id returns to this
+        pool's free list and the page's refcount *travels with the caller*
+        (to be re-established via ``import_page`` on the destination).
+        The device-side contents move separately — a batched gather /
+        ``device_put`` / scatter over the cache trees (DESIGN.md §17).
+        Returns the travelling refcount."""
+        self._check_pid(pid)
+        if self.is_null(pid):
+            raise KVCacheError("cannot export the null page")
+        refs = self._ref[pid]
+        if refs == 0:
+            raise KVCacheError(f"export of free page {pid}")
+        self._ref[pid] = 0
+        self._free[self.shard_of(pid)].append(pid)
+        self.stats.exports += 1
+        rec = self._trace
+        if rec is not None:
+            rec.emit("page_export", "page-pool",
+                     args={"page": pid, "refs": refs})
+            self._occupancy_sample(rec)
+        return refs
+
+    def import_page(self, shard: int, refcount: int = 1) -> Optional[int]:
+        """Adopt a page migrated from a sibling pool: allocate an id on
+        ``shard`` carrying the traveller's ``refcount`` (conservation: the
+        references ``export_page`` removed over there reappear here, never
+        duplicated, never dropped). None when the shard is dry — the
+        caller reclaims or preempts, exactly like a plain ``alloc``."""
+        if refcount < 1:
+            raise KVCacheError(
+                f"imported refcount must be >= 1, got {refcount}"
+            )
+        pid = self.alloc(shard)
+        if pid is None:
+            return None
+        self._ref[pid] = refcount
+        self.stats.imports += 1
+        rec = self._trace
+        if rec is not None:
+            rec.emit("page_import", "page-pool",
+                     args={"page": pid, "refs": refcount})
+        return pid
 
 
 # ---------------------------------------------------------------- block table
@@ -621,6 +670,27 @@ class PrefixCache:
             yield n
             stack.extend(n.children.values())
 
+    def reroot(self, mapping: dict[int, int]) -> int:
+        """Rewrite cached page ids after a cross-pool migration.
+
+        ``mapping`` is the ``{old_pid: new_pid}`` dict ``migrate_pages``
+        returns. Nodes whose page migrated now point at the destination
+        pool's id; untouched nodes keep theirs. The serving path keeps
+        the trie rooted in the decode pool so this is usually a no-op
+        there, but a trie over a migrated pool (tests, future drafts)
+        needs its ids re-rooted or every later match hands out stale
+        pages. Returns the number of nodes rewritten.
+        """
+        if not mapping:
+            return 0
+        hits = 0
+        for n in self._iter_nodes(None):
+            new = mapping.get(n.page)
+            if new is not None:
+                n.page = new
+                hits += 1
+        return hits
+
     def clear(self) -> int:
         """Release every cached page (pool drain helper)."""
         total = 0
@@ -629,6 +699,47 @@ class PrefixCache:
             total += freed
             if freed == 0:
                 return total
+
+
+# --------------------------------------------------- cross-pool migration
+def migrate_pages(
+    src: PagePool,
+    dst: PagePool,
+    pids: Sequence[int],
+    shard: int = 0,
+) -> dict[int, int]:
+    """Move live pages from ``src`` to ``dst`` (host bookkeeping only).
+
+    Each page is exported from ``src`` (id freed, refcount captured) and
+    imported into ``dst`` on ``shard`` under a fresh id carrying the same
+    refcount — conservation holds: ``sum(refs)`` across both pools is
+    unchanged. Device-side contents move separately (gather /
+    ``device_put`` / scatter over the cache trees, DESIGN.md §17).
+    Capacity is checked up front so a dry destination fails atomically
+    (no partial export) — callers reclaim/preempt and retry.
+
+    Returns ``{old_pid_in_src: new_pid_in_dst}``.
+    """
+    if not pids:
+        return {}
+    if dst.page_size != src.page_size:
+        raise KVCacheError(
+            "cannot migrate between pools with different page sizes: "
+            f"{src.page_size} vs {dst.page_size}"
+        )
+    if dst.pages_free_in(shard) < len(pids):
+        raise KVCacheError(
+            f"destination shard {shard} has {dst.pages_free_in(shard)} free "
+            f"pages, need {len(pids)}"
+        )
+    mapping: dict[int, int] = {}
+    for pid in pids:
+        refs = src.export_page(pid)
+        new = dst.import_page(shard, refcount=refs)
+        if new is None:  # unreachable after the capacity check above
+            raise KVCacheError("destination pool ran dry mid-migration")
+        mapping[pid] = new
+    return mapping
 
 
 # ------------------------------------------------------------- share metrics

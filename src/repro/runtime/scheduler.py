@@ -60,6 +60,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -105,14 +106,20 @@ class LanePolicy:
     request's last token is pure waste), so k shrinks near stream tails and
     the crossing is a cold-path rebind, never a compile (the buckets are
     AOT-warmed) and never a hot-loop branch.
+
+    ``decoupled`` (DESIGN.md §17): under disaggregated prefill/decode the
+    two lanes run on disjoint mesh slices, so decode slots no longer eat
+    into the prefill budget — the chunk budget is the full token budget.
     """
 
     def __init__(
-        self, *, token_budget: int, prefill_chunk: int, spec_k: int = 0
+        self, *, token_budget: int, prefill_chunk: int, spec_k: int = 0,
+        decoupled: bool = False,
     ):
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
         self.spec_k = spec_k
+        self.decoupled = decoupled
 
     def plan(self, *, n_decode: int, max_remaining: int = 0) -> StepPlan:
         """``n_decode`` decoding slots this step; ``max_remaining`` is the
@@ -123,9 +130,12 @@ class LanePolicy:
             k = bucket_pow2(
                 min(self.spec_k, max_remaining - 1), 1, self.spec_k
             )
-        return StepPlan(
-            chunk_budget=self.token_budget - n_decode * (1 + k), k=k
+        budget = (
+            self.token_budget
+            if self.decoupled
+            else self.token_budget - n_decode * (1 + k)
         )
+        return StepPlan(chunk_budget=budget, k=k)
 
 
 # ------------------------------------------------------------------ requests
@@ -558,14 +568,17 @@ class _InflightStep:
 
     ``packed`` is the step's single host-bound device array — for a decode
     step the executable's own bundle output (``steps._step_bundle``,
-    ``[next_tok | new_pos | keys]``), for a spec step the host-packed
-    verify rows (``steps.pack_verify_d2h``) — the *only* d2h sync the step
-    ever costs, deferred to its token-emit boundary. A spec step keeps the
-    draft candidates and verify-window lengths so accept/rollback can be
-    *replayed* one step late against the pulled verify rows.
+    ``[next_tok | new_pos | keys]``), for a non-flip prefill chunk the
+    packed sample/keys array (``steps.pack_step_d2h`` — only the keys are
+    ever read back; the chunk's bookkeeping already ran at issue), for a
+    spec step the host-packed verify rows (``steps.pack_verify_d2h``) —
+    the *only* d2h sync the step ever costs, deferred to its token-emit
+    boundary. A spec step keeps the draft candidates and verify-window
+    lengths so accept/rollback can be *replayed* one step late against the
+    pulled verify rows.
     """
 
-    kind: str  # "decode" | "spec"
+    kind: str  # "decode" | "prefill" | "spec"
     packed: Any  # device [S, W] int32, pulled once at commit
     chainable: bool = False  # a second decode may issue on top of this one
     drafts: np.ndarray | None = None  # spec: host [S, K] candidates
@@ -592,6 +605,9 @@ class _MultiLaneMixin:
     # with the engine's launch mesh and ``set_mesh`` moves it mid-stream.
     mesh = "1x1"
     _mesh_ctl = None  # engine-wired topology-flip closure (serve.py)
+    # Disaggregated prefill/decode (DESIGN.md §17): True while the prefill
+    # lane runs on its pinned mesh slice. The dense engine never sets it.
+    disagg = False
 
     def _init_telemetry(self, telemetry: Telemetry | None) -> None:
         """Telemetry wiring shared by both constructors (DESIGN.md §14).
@@ -670,11 +686,17 @@ class _MultiLaneMixin:
         draft_cache: Any,
         spec_k: int,
         async_steps: bool = False,
+        async_depth: int = 2,
     ) -> None:
         """Lane wiring shared by both constructors. Speculation is active
-        only when the engine supplied both spec lanes."""
+        only when the engine supplied both spec lanes. ``async_depth`` is
+        the pipeline's issued-step capacity (DESIGN.md §13): at most
+        ``async_depth - 1`` steps stay parked after a ``step()`` returns,
+        so 2 (the default) reproduces the classic one-deep overlap and 1
+        degrades async mode to the synchronous commit."""
         self.async_steps = async_steps
-        self._pending: _InflightStep | None = None  # issued, uncommitted
+        self.async_depth = max(1, int(async_depth))
+        self._inflight: deque[_InflightStep] = deque()  # issued, uncommitted
         self._backlog: list[Request] = []  # finished off the step path
         self._draft_dispatch = draft_dispatch
         self._verify_dispatch = verify_dispatch
@@ -687,6 +709,7 @@ class _MultiLaneMixin:
             token_budget=self.token_budget,
             prefill_chunk=self.prefill_chunk,
             spec_k=self.spec_k,
+            decoupled=self.disagg,
         )
         self._k_bucket: int | None = None  # unset until the first spec step
         self._chunk_slots: set[int] = set()
@@ -718,6 +741,14 @@ class _MultiLaneMixin:
     def _spec_on(self) -> bool:
         return self.spec_k > 0
 
+    @property
+    def _pending(self) -> _InflightStep | None:
+        """Newest issued-but-uncommitted step (None when the pipeline is
+        drained) — the one-deep pipeline's single record, kept as a
+        read-only view now that ``_inflight`` holds a configurable-depth
+        queue."""
+        return self._inflight[-1] if self._inflight else None
+
     # ------------------------------------------------- step pipeline (§13)
     def _pull(self, dev) -> np.ndarray:
         """The emit-boundary d2h sync: every host read of a device array
@@ -740,15 +771,16 @@ class _MultiLaneMixin:
 
         The software-pipelined wrapper around the engines' ``_step_impl``
         (DESIGN.md §13). Synchronous mode is a pass-through. Async mode
-        keeps at most one issued-but-uncommitted device step: when the
-        pending step is a plain decode whose outcome cannot change what
-        the host would plan next (``chainable``), the *next* decode is
-        issued first and the pending step's tokens are emitted while the
-        device runs it — host bookkeeping for step N overlaps device
-        execution of step N+1. Any step the host must read before planning
-        (spec accept/rollback, prefill flips, finishes, teacher forcing)
-        commits first, so the device-visible call sequence — and therefore
-        every token stream — is identical to the synchronous loop.
+        keeps up to ``async_depth - 1`` issued-but-uncommitted device
+        steps: when every parked step is one whose outcome cannot change
+        what the host would plan next (``chainable`` decodes, non-flip
+        prefill chunks), the *next* step is issued first and the oldest
+        parked steps' tokens are emitted while the device runs it — host
+        bookkeeping for step N overlaps device execution of step N+1. Any
+        step the host must read before planning (spec accept/rollback,
+        prefill flips, finishes, teacher forcing) commits first, so the
+        device-visible call sequence — and therefore every token stream —
+        is identical to the synchronous loop.
         """
         t0 = time.perf_counter()
         dw0 = self.stats.device_wait_ms
@@ -757,7 +789,7 @@ class _MultiLaneMixin:
         finished = self._backlog
         self._backlog = []
         ran_ahead = False
-        if self.async_steps and self._pending is not None:
+        if self.async_steps and self._inflight:
             if self._can_run_ahead():
                 finished.extend(self._run_ahead(now))
                 ran_ahead = True
@@ -765,6 +797,12 @@ class _MultiLaneMixin:
                 finished.extend(self._commit_pending(now))
         if not ran_ahead:
             finished.extend(self._step_impl(now))
+        # depth limit: commit oldest-first until the queue fits the
+        # configured pipeline capacity (0 in synchronous mode — the lanes
+        # never park there, so this loop is a no-op)
+        limit = self.async_depth - 1 if self.async_steps else 0
+        while len(self._inflight) > limit:
+            finished.extend(self._commit_oldest(now))
         self.stats.host_plan_ms += (
             (time.perf_counter() - t0) * 1e3
             - (self.stats.device_wait_ms - dw0)
@@ -774,47 +812,91 @@ class _MultiLaneMixin:
         return finished
 
     def flush(self, now: float = 0.0) -> list[Request]:
-        """Drain the pipeline: commit the pending step (if any) and return
+        """Drain the pipeline: commit every parked step (if any) and return
         every finished request not yet handed out. Call after the last
         ``step`` of a stream; a no-op in synchronous mode."""
         finished = self._backlog
         self._backlog = []
-        if self._pending is not None:
+        if self._inflight:
             finished.extend(self._commit_pending(now))
         return finished
 
     def _can_run_ahead(self) -> bool:
-        """Issue-before-commit is legal only when the pending step cannot
-        change the next step's plan: a chainable decode with no prefilling
-        slot in flight (a chunk flip would edit the decoding mask)."""
-        rec = self._pending
-        return (
-            rec is not None
-            and rec.kind == "decode"
-            and rec.chainable
-            and not (self._prefilling & self._active).any()
-        )
+        """Issue-before-commit is legal only when the newest parked step
+        cannot change the next step's plan: a chainable decode or a parked
+        non-flip prefill chunk. Prefilling slots are compatible with
+        run-ahead only when this step's own chunk plan cannot flip one of
+        them (a flip edits the decoding mask the parked steps were issued
+        under) and no spec step is planned; disaggregated prefill always
+        commits first (its chunks are eager — they bridge two pools)."""
+        if not self._inflight:
+            return False
+        rec = self._inflight[-1]
+        if rec.kind == "spec" or not rec.chainable:
+            return False
+        if not (self._prefilling & self._active).any():
+            return True
+        if self.prefill_chunk <= 0 or self.disagg or self._spec_on:
+            return False
+        plan = self._plan_step()
+        if plan.k > 0:
+            return False
+        return not self._flip_planned(plan.chunk_budget)
+
+    def _flip_planned(self, budget: int) -> bool:
+        """Would this step's chunk plan flip some slot PREFILL->DECODE?
+        Pure planning (``_plan_chunks`` has no side effects); exact because
+        the planner already shrinks a final chunk that must defer its
+        flip-token past a dry budget."""
+        for s, cursor, chunk in self._plan_chunks(budget):
+            if cursor + chunk >= len(self._slots[s].effective_prompt):
+                return True
+        return False
 
     def _run_ahead(self, now: float) -> list[Request]:
-        """The overlap step: issue decode N+1 against the mirror's chained
+        """The overlap step: issue step N+1 against the mirror's chained
         device arrays (step N's outputs are already its inputs — no host
-        round-trip), *then* pull and emit step N's tokens while the device
-        works on N+1."""
-        rec, self._pending = self._pending, None
+        round-trip), *then* pull and emit the oldest parked steps' tokens
+        while the device works on N+1 (the depth-limit drain in ``step``).
+        Prefill chunks ride the same pipeline (DESIGN.md §13/§17): a
+        planned non-flip chunk issues and parks just like a decode."""
         tr = self._trace
         if tr is not None:
             tr.emit("async_issue", "scheduler")
         self._pre_issue_fast()
+        finished: list[Request] = []
+        self._chunk_slots = set()
+        self._flip_slots = set()
+        prefilling = (
+            self.prefill_chunk > 0
+            and bool((self._prefilling & self._active).any())
+        )
+        if prefilling:
+            # upkeep preemptions may have re-shaped the plan into a flip
+            # (or freed the whole decode set): re-validate, else fall back
+            # to the synchronous path on a drained pipeline
+            plan = self._plan_step()
+            if plan.k > 0 or self._flip_planned(plan.chunk_budget):
+                finished.extend(self._commit_pending(now))
+                finished.extend(self._step_impl(now))
+                return finished
         decoding = self._active & ~self._prefilling
-        if not decoding.any():  # _pre_issue_fast may have preempted slots
-            return self._commit_rec(rec, now)
-        # the parked step is still in flight: stage any upkeep-touched
-        # coordinate arrays now so their uploads ride its execution
+        if not decoding.any() and not prefilling:
+            # _pre_issue_fast may have preempted every slot
+            finished.extend(self._commit_pending(now))
+            return finished
+        # the parked steps are still in flight: stage any upkeep-touched
+        # coordinate arrays now so their uploads ride their execution
         self._preload_step_inputs()
-        self._decode_lane_step(now, decoding)
-        if self._pending is not None:
-            self.stats.inflight_depth = max(self.stats.inflight_depth, 2)
-        return self._commit_rec(rec, now)
+        if prefilling:
+            finished.extend(self._prefill_step(now, plan.chunk_budget))
+            decoding = self._active & ~self._prefilling
+        if decoding.any():
+            finished.extend(self._decode_lane_step(now, decoding))
+        else:
+            self.stats.steps += 1  # prefill-only step
+            self._count_slot_steps(decoding)
+        return finished
 
     def _pre_issue_fast(self) -> None:
         """Cold-path upkeep that must precede an issued decode even on the
@@ -866,20 +948,42 @@ class _MultiLaneMixin:
         new_pos = np.array(self._pos, np.int32)
         new_pos[decoding] += 1
         self._pos = new_pos
-        self._pending = _InflightStep(
+        rec = _InflightStep(
             kind="decode",
             packed=packed,
             chainable=self._decode_chainable(decoding),
         )
-        self.stats.inflight_depth = max(self.stats.inflight_depth, 1)
+        self._park(rec)
+
+    def _queue_prefill(self, packed) -> None:
+        """Park a just-issued non-flip prefill chunk (DESIGN.md §13): all
+        of its bookkeeping (cursors, positions, stats) already ran at
+        issue — commit only reads back the split keys. Always chainable:
+        a chunk that cannot flip leaves the decoding mask, the teacher-
+        forcing cursors and every emitted stream untouched."""
+        self._park(_InflightStep(kind="prefill", packed=packed,
+                                 chainable=True))
+
+    def _park(self, rec: _InflightStep) -> None:
+        self._inflight.append(rec)
+        self.stats.inflight_depth = max(
+            self.stats.inflight_depth, len(self._inflight)
+        )
         tr = self._trace
         if tr is not None:
             tr.emit("async_park", "scheduler",
-                    args={"chainable": self._pending.chainable})
+                    args={"kind": rec.kind, "chainable": rec.chainable})
+
+    def _commit_oldest(self, now: float) -> list[Request]:
+        return self._commit_rec(self._inflight.popleft(), now)
 
     def _commit_pending(self, now: float) -> list[Request]:
-        rec, self._pending = self._pending, None
-        return self._commit_rec(rec, now)
+        """Drain every parked step, oldest first (FIFO = issue order, so
+        host state converges to the device's)."""
+        out: list[Request] = []
+        while self._inflight:
+            out.extend(self._commit_oldest(now))
+        return out
 
     def _commit_rec(self, rec: _InflightStep, now: float) -> list[Request]:
         """The emit boundary: one packed pull, then exactly the bookkeeping
@@ -889,6 +993,14 @@ class _MultiLaneMixin:
             tr.emit("async_commit", "scheduler", args={"kind": rec.kind})
         if rec.kind == "spec":
             return self._commit_spec(rec, now)
+        if rec.kind == "prefill":
+            # [S,3]: sample | keys-as-int32. The sample is only meaningful
+            # at a flip (never parked); idle rows' keys pass through the
+            # chunk executable unsplit (length-0 mask, see steps.py), so
+            # wholesale adoption is exact for every slot.
+            p = self._pull(rec.packed)
+            self._keys = p[:, 1:3].astype(np.uint32)
+            return []
         p = self._pull(rec.packed)  # [S,4]: nxt | new_pos | keys-as-int32
         self._keys = p[:, 2:4].astype(np.uint32)  # bit-exact (see steps.py)
         return self._emit_decode(p[:, 0], p[:, 1], now)
@@ -1082,8 +1194,7 @@ class _MultiLaneMixin:
             # accept/rollback lags one step: the next step() commits it by
             # replaying the decision against the parked drafts — the verify
             # plan never needs the outcome, so nothing is guessed
-            self._pending = rec
-            self.stats.inflight_depth = max(self.stats.inflight_depth, 1)
+            self._park(rec)
             return []
         return self._commit_spec(rec, now)
 
@@ -1283,7 +1394,7 @@ class _MultiLaneMixin:
                 "through Engine.continuous/paged_continuous with the "
                 "target topology in EngineConfig.mesh/meshes."
             )
-        if self._pending is not None:
+        if self._inflight:
             self._backlog.extend(self._commit_pending(now))
         nm, self._cache, self._draft_cache = self._mesh_ctl(
             name, self._cache, self._draft_cache, **self._mesh_hot()
@@ -1321,9 +1432,9 @@ class _MultiLaneMixin:
 
     def _cancel_slot(self, s: int, now: float, reason: str):
         target = self._slots[s]
-        if self._pending is not None:
-            # the parked step may be about to emit into this slot: commit
-            # it, then discard whatever landed (commit-then-discard)
+        if self._inflight:
+            # a parked step may be about to emit into this slot: commit
+            # them all, then discard whatever landed (commit-then-discard)
             self._backlog.extend(self._commit_pending(now))
         req = self._slots[s]
         if req is None or req is not target:
@@ -1501,6 +1612,7 @@ class ContinuousBatcher(_MultiLaneMixin):
         draft_cache: Any = None,
         spec_k: int = 0,
         async_steps: bool = False,
+        async_depth: int = 2,
         telemetry: Telemetry | None = None,
         mesh: str = "1x1",
         mesh_ctl: Callable | None = None,
@@ -1542,6 +1654,7 @@ class ContinuousBatcher(_MultiLaneMixin):
             draft_cache=draft_cache,
             spec_k=spec_k,
             async_steps=async_steps,
+            async_depth=async_depth,
         )
 
     # ------------------------------------------------------------ properties
@@ -1555,7 +1668,7 @@ class ContinuousBatcher(_MultiLaneMixin):
 
     @property
     def has_work(self) -> bool:
-        return bool(self._active.any()) or self._pending is not None
+        return bool(self._active.any()) or bool(self._inflight)
 
     def _rebind_step(self) -> None:
         """The dense batcher holds its decode executable bound; after a
@@ -1569,7 +1682,7 @@ class ContinuousBatcher(_MultiLaneMixin):
     def admit(self, requests: Iterable[Request], now: float = 0.0) -> int:
         """Seat requests in free slots. Returns the number admitted."""
         requests = list(requests)
-        if requests and self._pending is not None:
+        if requests and self._inflight:
             # admission edits the full per-slot state and re-uploads it; the
             # in-flight step must land first so those arrays are current
             self._backlog.extend(self._commit_pending(now))
@@ -1641,16 +1754,34 @@ class ContinuousBatcher(_MultiLaneMixin):
             prompt = self._slots[s].effective_prompt
             tok[s, :chunk] = prompt[cursor : cursor + chunk]
             length[s] = chunk
+        # a chunk that cannot flip any slot this step leaves every plan
+        # input untouched: under async it issues and parks like a chainable
+        # decode (DESIGN.md §13) — its keys must then chain through the
+        # mirror, because a parked predecessor's key split only exists on
+        # device until its commit
+        park = (
+            self.async_steps
+            and not self._spec_on
+            and not self.disagg
+            and not any(
+                cursor + chunk >= len(self._slots[s].effective_prompt)
+                for s, cursor, chunk in plan
+            )
+        )
         # chunk-lane inputs are genuinely per-chunk data (tokens, cursor,
         # length, split keys) — uploaded raw once, counted honestly, and
         # the device arrays are shared with the draft mirror below
-        self.stats.h2d_uploads += 4
+        self.stats.h2d_uploads += 3 if park else 4
         self.stats.prefill_calls += 1
         self.stats.note_lane(self._prefill_lane)
         tok_dev = jnp.asarray(tok)
         start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
         length_dev = jnp.asarray(length)
-        keys_dev = jnp.asarray(self._keys)
+        keys_dev = (
+            self._mirror.get("keys", self._keys)
+            if park
+            else jnp.asarray(self._keys)
+        )
         t0_ns = time.perf_counter_ns()
         nxt, self._cache, new_keys = step(
             self._cache,
@@ -1681,6 +1812,21 @@ class ContinuousBatcher(_MultiLaneMixin):
                 keys_dev,
             )
             self._lane_tick("drp", t0_ns)
+        if park:
+            # no host read: bookkeeping runs now (the chunk plan is final),
+            # the split keys chain on device, and the packed pull parks
+            # until the pipeline's next emit boundary
+            self._mirror.put("keys", new_keys)
+            for s, cursor, chunk in plan:
+                self._chunk_slots.add(s)
+                cursor += chunk
+                self._cursor[s] = cursor
+                self._pos[s] = cursor
+                self.stats.prompt_tokens += chunk
+                self.stats.prefill_chunks += 1
+            self._mirror.touch("pos")
+            self._queue_prefill(pack_step_d2h(nxt, new_keys))
+            return []
         # one packed transfer for the chunk's host-bound outputs (§13)
         p = self._pull(pack_step_d2h(nxt, new_keys))
         nxt_host = p[:, 0]
@@ -1846,6 +1992,12 @@ class PagedBatcherStats(BatcherStats):
     starved_admissions: int = 0  # distinct requests deferred for pages
     rejected_oversize: int = 0  # requests that can never fit the page cap
     shared_tokens: int = 0  # prompt tokens skipped via the prefix cache
+    # Disaggregated prefill/decode (DESIGN.md §17): PREFILL->DECODE flips
+    # that moved pages across pools, pages moved, and prefill-slice shadow
+    # pages allocated (adopted-prefix mirrors + split-time copies).
+    migrations: int = 0
+    migrated_pages: int = 0
+    pf_shadow_pages: int = 0
 
 
 class PagedContinuousBatcher(_MultiLaneMixin):
@@ -1895,9 +2047,16 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         draft_cache: Any = None,
         spec_k: int = 0,
         async_steps: bool = False,
+        async_depth: int = 2,
         telemetry: Telemetry | None = None,
         mesh: str = "1x1",
         mesh_ctl: Callable | None = None,
+        pf_pool=None,
+        pf_cache: Any = None,
+        transport: Callable | None = None,
+        pf_put: Callable | None = None,
+        disagg_ctl: Callable | None = None,
+        disagg: bool = False,
     ):
         if num_slots < 1:
             raise ValueError(f"num_slots must be >= 1, got {num_slots}")
@@ -1956,6 +2115,33 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         self.preempted: list[Request] = []
         self.rejected: list[Request] = []  # oversized: can never be seated
         self._starved_rids: set[int] = set()
+        # Disaggregated prefill/decode (DESIGN.md §17): the prefill slice's
+        # own page pool + device cache, the cross-slice page transport, and
+        # the split/collapse rebind closure (all engine-wired; None when
+        # the batcher was built without ``disagg``). ``self.disagg`` is the
+        # *current* mode — ``set_disagg`` flips it mid-stream. Per-slot
+        # prefill-side state: the shadow block table a prefilling slot
+        # writes on the prefill slice, and how many of its leading pages
+        # are pure copies of decode-resident prefix pages (never written
+        # on the prefill slice, so they are dropped — not migrated — at
+        # the PREFILL->DECODE flip).
+        self.pf_pool = pf_pool
+        self._pf_cache = pf_cache
+        self._transport = transport
+        # single-hop host->prefill-slice upload (falls back to the default
+        # device when the engine passes none); the staging dict memoises
+        # slow-moving per-slot arrays (temps/greedy/keys) on the slice so
+        # steady-state chunk steps re-upload nothing
+        self._pf_put = (
+            pf_put
+            if pf_put is not None
+            else (lambda host: jax.tree.map(jnp.asarray, host))
+        )
+        self._pf_staged: dict[str, tuple[np.ndarray, Any]] = {}
+        self._disagg_ctl = disagg_ctl
+        self.disagg = bool(disagg) and disagg_ctl is not None
+        self._pf_tables: dict[int, Any] = {}
+        self._pf_keep: dict[int, int] = {}
         self.stats = PagedBatcherStats(registry=self.telemetry.registry)
         self._mirror = _DeviceMirror(self.stats)
         self._bt_dirty = True  # host block-table array needs a rebuild
@@ -1971,6 +2157,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             draft_cache=draft_cache,
             spec_k=spec_k,
             async_steps=async_steps,
+            async_depth=async_depth,
         )
 
     def _tables_changed(self) -> None:
@@ -1990,7 +2177,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
 
     @property
     def has_work(self) -> bool:
-        return bool(self._active.any()) or self._pending is not None
+        return bool(self._active.any()) or bool(self._inflight)
 
     @property
     def pages_bucket(self) -> int:
@@ -2059,6 +2246,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
     def _preempt_slot(self, s: int) -> None:
         req = self._slots[s]
         assert req is not None
+        self._drop_pf_state(s)
         self._tables[s].release()
         self._tables[s] = None
         self._slots[s] = None
@@ -2083,7 +2271,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         from repro.runtime.kvcache import BlockTable
 
         requests = list(requests)
-        if requests and self._pending is not None:
+        if requests and self._inflight:
             # admission edits the full per-slot state and re-uploads it; the
             # in-flight step must land first so those arrays are current
             self._backlog.extend(self._commit_pending(now))
@@ -2134,9 +2322,26 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             table = BlockTable(pool=self.pool, pages=pages,
                                num_tokens=matched, shard=shard)
             # first private page: the one the re-fed prompt token writes into
-            if not self._reclaim_pages(1, req.priority, shard) or (
+            starved = not self._reclaim_pages(1, req.priority, shard) or (
                 not table.ensure_capacity(matched)
-            ):
+            )
+            # PREFILL when more than the re-fed last token remains to ingest
+            # and a chunked lane exists; otherwise straight to DECODE
+            # (token-by-token forcing handles any prompt remainder there).
+            will_prefill = (
+                self.prefill_chunk > 0 and len(prompt) - matched > 1
+            )
+            if not starved and self.disagg and will_prefill:
+                # disaggregated chunk steps run on the prefill slice
+                # (DESIGN.md §17): mirror the adopted prefix pages there,
+                # and drop the just-ensured private decode page — every
+                # page the prefill lane writes lands in the decode pool
+                # via migration at the flip instead
+                if self._make_pf_shadow(s, table):
+                    table.trim(len(pages))
+                else:
+                    starved = True
+            if starved:
                 table.release()
                 if req.rid not in self._starved_rids:  # count requests once
                     self._starved_rids.add(req.rid)
@@ -2154,12 +2359,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._tok[s, 0] = prompt[matched]
             self._pos[s] = matched
             self._active[s] = True
-            # PREFILL when more than the re-fed last token remains to ingest
-            # and a chunked lane exists; otherwise straight to DECODE
-            # (token-by-token forcing handles any prompt remainder there).
-            self._prefilling[s] = (
-                self.prefill_chunk > 0 and len(prompt) - matched > 1
-            )
+            self._prefilling[s] = will_prefill
             self._temps[s] = req.temperature
             self._greedy[s] = req.greedy
             self._keys[s] = self._rng.integers(
@@ -2221,6 +2421,162 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         if self._cache_copy is not None:
             self._cache = self._cache_copy(self._cache, src, dst)
 
+    # ----------------------------- disaggregated prefill/decode (§17)
+    def _pf_stage(self, name: str, host) -> Any:
+        """Upload ``host`` to the prefill slice, memoised by content: the
+        per-slot sampling state changes rarely between chunk steps, so the
+        steady state re-uploads nothing (DESIGN.md §17)."""
+        host = np.asarray(host)
+        hit = self._pf_staged.get(name)
+        if hit is not None and np.array_equal(hit[0], host):
+            return hit[1]
+        dev = self._pf_put(host)
+        self._pf_staged[name] = (host.copy(), dev)
+        self.stats.h2d_uploads += 1
+        return dev
+
+    def _make_pf_shadow(
+        self, s: int, table, n: int | None = None, keep: int | None = None
+    ) -> bool:
+        """Give slot ``s`` a prefill-slice shadow of the first ``n`` pages
+        of its decode-side ``table`` (default: the adopted full prefix
+        pages): allocate twins in the prefill pool and copy the contents
+        across, so every chunk step attends the shared prefix without
+        touching the decode slice. ``keep`` of the leading shadow pages
+        are never *written* on the prefill slice — they are dropped, not
+        migrated, at the flip (default: all of ``n``; a mid-prefill split
+        passes fewer, because its partially-written boundary page keeps
+        being written over there). False = the prefill pool is dry; the
+        caller defers or preempts."""
+        from repro.runtime.kvcache import BlockTable
+
+        if n is None:
+            n = table.num_tokens // self.pool.page_size
+        if keep is None:
+            keep = n
+        shard = table.shard
+        pages: list[int] = []
+        for _ in range(n):
+            pid = self.pf_pool.alloc(shard)
+            if pid is None:
+                for p in pages:
+                    self.pf_pool.decref(p)
+                return False
+            pages.append(pid)
+        if pages:
+            self._pf_cache = self._transport(
+                self._cache, self._pf_cache, table.pages[:n], pages,
+                to_prefill=True,
+            )
+        self._pf_tables[s] = BlockTable(
+            pool=self.pf_pool, pages=pages, num_tokens=table.num_tokens,
+            shard=shard,
+        )
+        self._pf_keep[s] = keep
+        self.stats.pf_shadow_pages += n
+        return True
+
+    def _migrate_back(self, s: int) -> bool:
+        """Land slot ``s``'s freshly written prefill-slice pages in the
+        decode pool/cache and fold them into its base table — the KV
+        handoff of the PREFILL->DECODE flip (and of a mid-prefill
+        collapse). Bookkeeping rides ``kvcache.migrate_pages`` (export/
+        import conserves refcounts); contents ride the engine's batched
+        gather/``device_put``/scatter transport. The leading ``_pf_keep``
+        shadow pages are copies of pages the base table still holds —
+        dropped in place; a partially-written boundary page (mid-prefill
+        split) migrates back and *replaces* its stale decode twin
+        (``trim``). False = the decode pool could not fund the landing
+        and the slot was preempted."""
+        from repro.runtime.kvcache import migrate_pages
+
+        pf_t = self._pf_tables.pop(s)
+        keep = self._pf_keep.pop(s, 0)
+        base = self._tables[s]
+        req = self._slots[s]
+        fresh = pf_t.pages[keep:]
+        if fresh:
+            shard = base.shard
+            if not self._reclaim_pages(len(fresh), req.priority, shard):
+                pf_t.release()
+                self._preempt_slot(s)
+                return False
+            mapping = migrate_pages(self.pf_pool, self.pool, fresh, shard)
+            dst = [mapping[p] for p in fresh]
+            self._cache = self._transport(
+                self._pf_cache, self._cache, fresh, dst
+            )
+            base.trim(keep)  # stale twin of the boundary page, if any
+            base.pages.extend(dst)  # import carried the refcounts over
+            self.stats.migrations += 1
+            self.stats.migrated_pages += len(fresh)
+            # the exported ids already left the prefill pool: drop them
+            # without decref so release() only returns the keep shadows
+            del pf_t.pages[keep:]
+        base.num_tokens = int(self._cursor[s])
+        pf_t.release()
+        self._tables_changed()
+        return True
+
+    def _drop_pf_state(self, s: int) -> None:
+        """Slot ``s`` is leaving (preempt/cancel/finish): return its
+        prefill-slice shadow pages, if it still holds any."""
+        pf_t = self._pf_tables.pop(s, None)
+        if pf_t is not None:
+            pf_t.release()
+        self._pf_keep.pop(s, None)
+
+    def set_disagg(self, on: bool, now: float = 0.0) -> bool:
+        """Cold-path split/collapse of the serving topology (DESIGN.md
+        §17): flip between disaggregated prefill/decode and shared-mesh
+        serving mid-stream. Both prefill bindings sit in the AOT-warmed
+        ladder, so — like ``set_mesh`` / ``set_knobs`` — this is a
+        semi-static rebind, never a compile; the decode lane's binding
+        never moves. The pipeline drains first (parked steps were issued
+        under the old routing). Splitting gives every mid-prefill slot a
+        full shadow of its written pages on the prefill slice (its next
+        chunk runs there); collapsing migrates fresh prefill-slice pages
+        back early and lets prefill continue on the decode mesh. Returns
+        the mode now active."""
+        if self._disagg_ctl is None:
+            raise RuntimeError(
+                "this batcher has no disaggregation surface; construct it "
+                "through Engine.paged_continuous(disagg=...)."
+            )
+        on = bool(on)
+        if on == self.disagg:
+            return on
+        if self._inflight:
+            self._backlog.extend(self._commit_pending(now))
+        ps = self.pool.page_size
+        if on:
+            for s, req in enumerate(self._slots):
+                if (
+                    req is None
+                    or not self._active[s]
+                    or not self._prefilling[s]
+                ):
+                    continue
+                table = self._tables[s]
+                if not self._make_pf_shadow(
+                    s, table,
+                    n=table.num_pages,
+                    keep=table.num_tokens // ps,
+                ):
+                    self._preempt_slot(s)  # prefill slice can't hold it
+        else:
+            for s in list(self._pf_tables):
+                if s not in self._pf_tables:
+                    continue  # a reclaim preempted it mid-collapse
+                self._migrate_back(s)
+        self.disagg = on
+        self._lane_policy.decoupled = on
+        self._disagg_ctl(on)
+        tr = self._trace
+        if tr is not None:
+            tr.emit("disagg_flip", "scheduler", args={"on": on})
+        return on
+
     # ------------------------------------------------------- prefill lane
     def _prefill_step(self, now: float, budget: int) -> list[Request]:
         """Ingest chunks for prefilling requests, *batched* (DESIGN.md
@@ -2245,16 +2601,24 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             req = self._slots[s]
             if req is None or not self._active[s] or not self._prefilling[s]:
                 continue  # a victim of an earlier reservation's preemption
-            table = self._tables[s]
+            table = self._pf_tables[s] if self.disagg else self._tables[s]
             need = table.page_index(cursor + chunk - 1) + 1 - table.num_pages
-            if need > 0:
-                self._tables_changed()
-                if not self._reclaim_pages(
-                    need, req.priority, table.shard
-                ) or (
-                    not table.ensure_capacity(cursor + chunk - 1)
-                ):
-                    self._preempt_slot(s)  # can't grow: preempt the requester
+            if need <= 0:
+                continue
+            if self.disagg:
+                # prefill-slice growth draws on the prefill pool alone
+                # (§17): it has no trie to evict and no decode tenants to
+                # preempt, so a dry pool preempts the requester itself
+                if not table.ensure_capacity(cursor + chunk - 1):
+                    self._preempt_slot(s)
+                continue
+            self._tables_changed()
+            if not self._reclaim_pages(
+                need, req.priority, table.shard
+            ) or (
+                not table.ensure_capacity(cursor + chunk - 1)
+            ):
+                self._preempt_slot(s)  # can't grow: preempt the requester
         kept = [
             (s, cursor, chunk)
             for s, cursor, chunk in plan
@@ -2278,29 +2642,69 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             prompt = self._slots[s].effective_prompt
             tok[s, :chunk] = prompt[cursor : cursor + chunk]
             length[s] = chunk
-            table = self._tables[s]
+            table = self._pf_tables[s] if self.disagg else self._tables[s]
             bt[s, : table.num_pages] = table.pages
+        # a chunk that cannot flip any slot this step leaves every plan
+        # input untouched: under async it issues and parks like a chainable
+        # decode (DESIGN.md §13) — its keys must then chain through the
+        # mirror, because a parked predecessor's key split only exists on
+        # device until its commit. Disaggregated chunks never park: their
+        # flip bridges two pools and is committed eagerly.
+        park = (
+            self.async_steps
+            and not self._spec_on
+            and not self.disagg
+            and not any(
+                cursor + chunk >= len(self._slots[s].effective_prompt)
+                for s, cursor, chunk in kept
+            )
+        )
         # chunk-lane inputs are per-chunk data (tokens, cursors, packed
         # tables, lengths, split keys) — uploaded raw, counted honestly;
         # idle rows carry length 0 + null tables (writes hit the null page)
-        self.stats.h2d_uploads += 5
         self.stats.prefill_calls += 1
         self.stats.note_lane(self._prefill_lane)
-        tok_dev = jnp.asarray(tok)
-        start_dev = jnp.asarray(np.array(self._pos, np.int32))  # == cursor
-        length_dev = jnp.asarray(length)
-        keys_dev = jnp.asarray(self._keys)
+        if self.disagg:
+            # chunk-plan inputs go host->prefill-slice in ONE hop (the
+            # mirror's device arrays are committed to the decode slice, and
+            # a plain upload would land on the default device and bounce);
+            # slow-moving per-slot sampling state is staged on the slice
+            # and re-uploaded only when its host value changes (§17)
+            self.stats.h2d_uploads += 5
+            tok_dev, start_dev, length_dev, bt_dev, keys_dev = self._pf_put(
+                (tok, np.array(self._pos, np.int32), length, bt, self._keys)
+            )
+            temps_dev = self._pf_stage("temps", self._temps)
+            greedy_dev = self._pf_stage("greedy", self._greedy)
+        else:
+            self.stats.h2d_uploads += 4 if park else 5
+            tok_dev = jnp.asarray(tok)
+            start_dev = jnp.asarray(np.array(self._pos, np.int32))
+            length_dev = jnp.asarray(length)
+            bt_dev = jnp.asarray(bt)
+            temps_dev = self._mirror.get("temps", self._temps)
+            greedy_dev = self._mirror.get("greedy", self._greedy)
+            keys_dev = (
+                self._mirror.get("keys", self._keys)
+                if park
+                else jnp.asarray(self._keys)
+            )
+        cache_in = self._pf_cache if self.disagg else self._cache
         t0_ns = time.perf_counter_ns()
-        nxt, self._cache, new_keys = step(
-            self._cache,
+        nxt, cache_out, new_keys = step(
+            cache_in,
             tok_dev,
             start_dev,
-            jnp.asarray(bt),
+            bt_dev,
             length_dev,
-            self._mirror.get("temps", self._temps),
-            self._mirror.get("greedy", self._greedy),
+            temps_dev,
+            greedy_dev,
             keys_dev,
         )
+        if self.disagg:
+            self._pf_cache = cache_out
+        else:
+            self._cache = cache_out
         self._lane_tick(self._prefill_lane, t0_ns)
         # draft mirror (DESIGN.md §11): the draft stack ingests the same
         # chunk windows into its dense per-slot cache so its KV tracks the
@@ -2324,6 +2728,22 @@ class PagedContinuousBatcher(_MultiLaneMixin):
                 keys_dev,
             )
             self._lane_tick("drp", t0_ns)
+        if park:
+            # no host read: bookkeeping runs now (the chunk plan is final),
+            # the split keys chain on device, and the packed pull parks
+            # until the pipeline's next emit boundary
+            self._mirror.put("keys", new_keys)
+            for s, cursor, chunk in kept:
+                self._chunk_slots.add(s)
+                cursor += chunk
+                self._cursor[s] = cursor
+                self._pos[s] = cursor
+                self._tables[s].num_tokens = cursor
+                self.stats.prompt_tokens += chunk
+                self.stats.prefill_chunks += 1
+            self._mirror.touch("pos")
+            self._queue_prefill(pack_step_d2h(nxt, new_keys))
+            return []
         # one packed transfer for the chunk's host-bound outputs (§13)
         p = self._pull(pack_step_d2h(nxt, new_keys))
         nxt_host = p[:, 0]
@@ -2338,10 +2758,17 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             cursor += chunk
             self._cursor[s] = cursor
             self._pos[s] = cursor
-            table.num_tokens = cursor
+            if self.disagg:
+                # the prefill-slice shadow tracks the written frontier; the
+                # decode-side base table catches up at the flip's migration
+                self._pf_tables[s].num_tokens = cursor
+            else:
+                table.num_tokens = cursor
             self.stats.prompt_tokens += chunk
             self.stats.prefill_chunks += 1
             if cursor >= len(prompt):  # flip: prompt done, prime generation
+                if self.disagg and not self._migrate_back(s):
+                    continue  # the decode pool balked: slot was preempted
                 # the packed decode table zeroed this slot's row while it
                 # was prefilling; it must carry the real pages from the
                 # next step on
@@ -2579,6 +3006,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
             self._tables_changed()
 
     def _release_spec_slot(self, s: int) -> None:
+        self._drop_pf_state(s)
         self._tables[s].release()
         self._tables[s] = None
         self._slots[s] = None
@@ -2589,6 +3017,7 @@ class PagedContinuousBatcher(_MultiLaneMixin):
         """Cancel/quarantine release for paged storage: the slot's block
         table returns its pages to the pool before the host state clears
         (the §15 'release pages, trim block tables' contract)."""
+        self._drop_pf_state(s)
         if self._tables[s] is not None:
             self._tables[s].release()
             self._tables[s] = None

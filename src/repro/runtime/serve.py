@@ -149,6 +149,7 @@ class _WarmCtx:
     """
 
     spec: bool = False
+    disagg: bool = False  # per-batcher disaggregation opt-in (§17)
     dense_caches: dict = None  # mesh -> dense cache
     paged_caches: dict = None  # (kv_dtype, mesh) -> pooled cache
     draft_caches: dict = None  # (draft_kv_dtype, mesh) -> draft cache
@@ -188,6 +189,7 @@ class Engine:
         # Mesh plans (DESIGN.md §16): one MeshPlan per warmed topology
         # name; plans own the lazy jax Mesh and the NamedSharding trees.
         self._mesh_plans: dict[str, shd.MeshPlan] = {}
+        self._solo_params: dict[tuple[str, str], Any] = {}
         # Speculative decoding (DESIGN.md §11): the draft model is a
         # truncated-layer *view* of the target — shared embed/head, the
         # first draft_layers periods of blocks — so it costs no extra
@@ -258,6 +260,26 @@ class Engine:
             plan = self._mesh_plans[name] = shd.MeshPlan(name)
         return plan
 
+    def _params_for_mesh(self, mesh: str, *, draft: bool = False) -> Any:
+        """Params as the lane executables for ``mesh`` expect them.
+
+        On the default device (``single`` plans) this is ``self.params``
+        untouched. On a one-device offset slice (§17) the weights are
+        committed to the slice's device once and cached — otherwise every
+        call of a prefill-slice executable re-transfers the whole
+        parameter tree through the default device. Non-solo plans keep
+        the uncommitted tree: GSPMD executables shard it themselves.
+        """
+        base = self.draft_params if draft else self.params
+        plan = self._mesh_plan(mesh)
+        if plan.single or not plan.solo:
+            return base
+        key = (plan.name, "draft" if draft else "target")
+        hit = self._solo_params.get(key)
+        if hit is None:
+            hit = self._solo_params[key] = jax.device_put(base, plan.device)
+        return hit
+
     def _compile_step(
         self,
         step: Callable,
@@ -271,17 +293,27 @@ class Engine:
 
         ``"1x1"`` takes the exact pre-mesh path — no Mesh, no shardings —
         which is what keeps the 1x1 lane bitwise identical to the
-        unsharded engine. Non-single plans lower under the plan's Mesh
-        with GSPMD ``in_shardings``: TP params over 'model', per-slot rows
-        and cache slots/pages over 'data' (DESIGN.md §16); the compiler
-        propagates output shardings, so the donated cache round-trips
-        committed to the same plan.
+        unsharded engine. One-device *offset* slices ("1x1@1", §17) take
+        the same plain-jit path pinned to their device with
+        ``SingleDeviceSharding`` — a one-device GSPMD mesh pays real
+        per-call overhead (sharded output wrappers, slow D2H) for nothing.
+        Non-solo plans lower under the plan's Mesh with GSPMD
+        ``in_shardings``: TP params over 'model', per-slot rows and cache
+        slots/pages over 'data' (DESIGN.md §16); the compiler propagates
+        output shardings, so the donated cache round-trips committed to
+        the same plan.
         """
         plan = self._mesh_plan(mesh)
         if plan.single:
             return jax.jit(step, donate_argnums=(1,)).lower(
                 params_aval, c_shape, *row_avals
             ).compile()
+        if plan.solo:
+            pin = jax.sharding.SingleDeviceSharding(plan.device)
+            return jax.jit(
+                step, donate_argnums=(1,), in_shardings=pin,
+                out_shardings=pin,
+            ).lower(params_aval, c_shape, *row_avals).compile()
         cache_sh = (
             plan.paged_cache_shardings(c_shape)
             if cache_kind == "paged"
@@ -304,8 +336,8 @@ class Engine:
         "1x1" gathers onto the default device so the unsharded executables
         accept it unchanged."""
         plan = self._mesh_plan(mesh)
-        if plan.single:
-            return jax.device_put(cache, jax.devices()[0])
+        if plan.solo:
+            return jax.device_put(cache, plan.device)
         shape = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache
         )
@@ -598,6 +630,80 @@ class Engine:
             "dense",
         )
 
+    def _build_migrate(
+        self, op: str, kv_dtype: str = "fp32", mesh: str = "1x1"
+    ) -> Callable:
+        """Executable for the ``("mg", op, kv_dtype, mesh)`` dispatch key:
+        one half of the KV-page migration transport (DESIGN.md §17).
+
+        ``gather(cache, idx[B]) -> block`` slices B pages out of every
+        cache leaf (int8 scales ride along) on the source slice;
+        ``scatter(cache, block, idx[B]) -> cache`` writes a transported
+        block into the destination slice's cache (donated). B is pinned at
+        the per-request page cap and short migrations pad ``idx`` with
+        null-page ids, so the page *count* never becomes a dispatch
+        coordinate — the same two executables move one page or a whole
+        request. On sharded slices the block lowers replicated: it is the
+        unit that ``device_put``s across slices, so neither end may assume
+        the other's layout.
+        """
+        cfg, ecfg = self.cfg, self.ecfg
+        c_shape = jax.eval_shape(
+            lambda: models.init_paged_cache(
+                cfg, self.pool_physical_pages, ecfg.page_size, kv_dtype
+            )
+        )
+        pb = self.max_pages_per_req
+        idx_aval = jax.ShapeDtypeStruct((pb,), jnp.int32)
+        gather = steps_mod.make_page_gather_fn()
+        plan = self._mesh_plan(mesh)
+        if op == "gather":
+            if plan.single:
+                return jax.jit(gather).lower(c_shape, idx_aval).compile()
+            if plan.solo:
+                pin = jax.sharding.SingleDeviceSharding(plan.device)
+                return jax.jit(
+                    gather, in_shardings=pin, out_shardings=pin
+                ).lower(c_shape, idx_aval).compile()
+            cache_sh = plan.paged_cache_shardings(c_shape)
+            rep = shd.replicated(plan.mesh)
+            blk_shape = jax.eval_shape(gather, c_shape, idx_aval)
+            with plan.mesh, shd.use_shard_hints(plan.mesh):
+                lowered = jax.jit(
+                    gather,
+                    in_shardings=(cache_sh, rep),
+                    out_shardings=jax.tree.map(lambda _: rep, blk_shape),
+                ).lower(c_shape, idx_aval)
+            return lowered.compile()
+        if op != "scatter":
+            raise ValueError(f"unknown migration op {op!r}")
+        scatter = steps_mod.make_page_scatter_fn()
+        blk_shape = jax.eval_shape(gather, c_shape, idx_aval)
+        if plan.single:
+            return jax.jit(scatter, donate_argnums=(0,)).lower(
+                c_shape, blk_shape, idx_aval
+            ).compile()
+        if plan.solo:
+            pin = jax.sharding.SingleDeviceSharding(plan.device)
+            return jax.jit(
+                scatter, donate_argnums=(0,), in_shardings=pin,
+                out_shardings=pin,
+            ).lower(c_shape, blk_shape, idx_aval).compile()
+        cache_sh = plan.paged_cache_shardings(c_shape)
+        rep = shd.replicated(plan.mesh)
+        with plan.mesh, shd.use_shard_hints(plan.mesh):
+            lowered = jax.jit(
+                scatter,
+                donate_argnums=(0,),
+                in_shardings=(
+                    cache_sh,
+                    jax.tree.map(lambda _: rep, blk_shape),
+                    rep,
+                ),
+                out_shardings=cache_sh,
+            ).lower(c_shape, blk_shape, idx_aval)
+        return lowered.compile()
+
     @property
     def pool_pages(self) -> int:
         """Allocatable page count (excluding the null pages)."""
@@ -713,9 +819,11 @@ class Engine:
         shrink ``2x2 -> 1x2``) flips warmed hot slots and ``device_put``s
         the live cache, never compiles."""
         names = (self.ecfg.mesh,) + tuple(self.ecfg.meshes)
+        # parse_slice_name keeps "@OFF" slices (DESIGN.md §17) distinct
+        # from their offset-0 twins in the ladder.
         return tuple(
             dict.fromkeys(
-                shd.mesh_name(*shd.parse_mesh_name(n)) for n in names
+                shd.mesh_name(*shd.parse_slice_name(n)) for n in names
             )
         )
 
@@ -740,6 +848,17 @@ class Engine:
         """Registry gate for the draft/verify lanes: per-batcher opt-in
         (``spec_decode=`` override) AND architectural support."""
         return bool(ctx.spec) and self._supports_spec_decode()
+
+    def _disagg_lanes_enabled(self, ctx: "_WarmCtx") -> bool:
+        """Registry gate for the KV-migration lane (DESIGN.md §17): only a
+        batcher that opted into disaggregated prefill/decode pays for the
+        gather/scatter transport cells (absent opt-in means disabled)."""
+        return bool(getattr(ctx, "disagg", False))
+
+    def _mg_ops(self) -> tuple[str, ...]:
+        """The migration lane's op ladder: the export gather and the import
+        scatter halves of the KV-page transport (DESIGN.md §17)."""
+        return ("gather", "scatter")
 
     # ----------------------------------------------------- registry warmup
     # One warm method per LaneSpec (the spec's ``warmer`` hook): dummy-run
@@ -820,6 +939,10 @@ class Engine:
         )
         jax.block_until_ready(warm)
         np.asarray(warm[0]), np.asarray(warm[2])
+        # the real loop pulls through the packed-d2h helper; its jit cache
+        # keys on input *placement*, so warm the pack against this mesh
+        # cell's outputs too (an offset slice is a distinct variant — §17)
+        np.asarray(steps_mod.pack_step_d2h(warm[0], warm[2]))
         ctx.paged_caches[(dt, m)] = warm[1]
 
     def _warm_pfd(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
@@ -893,6 +1016,27 @@ class Engine:
         )
         jax.block_until_ready(warm)
         ctx.draft_caches[(dt, m)] = warm[1]
+
+    def _warm_mg(self, key: tuple, exe: Callable, ctx: _WarmCtx) -> None:
+        """Warm one migration-transport half (DESIGN.md §17) against its
+        (dtype, mesh) cell's live cache. The idx rows all point at the
+        shard-0 null page, so the scatter's donated write lands in reserved
+        garbage space and no live page is touched."""
+        _, op, dt, m = key
+        idx = jnp.asarray(np.zeros(self.max_pages_per_req, np.int32))
+        cache = ctx.paged_caches[(dt, m)]
+        if op == "gather":
+            jax.block_until_ready(exe(cache, idx))
+            return
+        blk = jax.tree.map(
+            lambda x: jnp.zeros(
+                (x.shape[0], self.max_pages_per_req) + x.shape[2:], x.dtype
+            ),
+            cache,
+        )
+        warm = exe(cache, blk, idx)
+        jax.block_until_ready(warm)
+        ctx.paged_caches[(dt, m)] = warm
 
     def _warm_lanes(
         self,
@@ -1006,14 +1150,19 @@ class Engine:
             return bound_draft
 
         def draft_prefill_dispatch(chunk_bucket: int) -> Callable:
+            # DRP is a prefill-group lane (LaneSpec.slice == "prefill"):
+            # under disaggregation it routes to the prefill slice binding;
+            # with no split configured it falls back to the shared mesh.
+            drp_mesh = mb.get("prefill", mb["mesh"])
             exe = self._decode.dispatch(
-                lanes_mod.DRP.key(s, chunk_bucket, ddt, mb["mesh"])
+                lanes_mod.DRP.key(s, chunk_bucket, ddt, drp_mesh)
             )
+            drp_params = self._params_for_mesh(drp_mesh, draft=True)
 
             def bound_drp(dcache, tok, start, length, temps, greedy, keys):
                 self.stats["hot_calls"] += 1
                 return exe(
-                    self.draft_params, dcache, tok, start, length, temps,
+                    drp_params, dcache, tok, start, length, temps,
                     greedy, keys,
                 )
 
@@ -1074,7 +1223,14 @@ class Engine:
         warm = self._warm_meshes()
 
         def mesh_ctl(name: str, cache: Any, draft_cache: Any, **hot: Any):
-            nm = shd.mesh_name(*shd.parse_mesh_name(name))
+            if "prefill" in mesh_bind:
+                raise ValueError(
+                    "cannot rebind the decode mesh while disaggregated "
+                    "prefill/decode is configured (DESIGN.md §17): the "
+                    "decode slice anchors the page pool; use set_disagg "
+                    "to split/collapse instead."
+                )
+            nm = shd.mesh_name(*shd.parse_slice_name(name))
             if nm not in warm:
                 raise ValueError(
                     f"mesh {nm!r} is not in the warmed set {warm}; add it "
@@ -1206,6 +1362,7 @@ class Engine:
         seed: int = 0,
         spec_decode: bool | None = None,
         async_steps: bool = False,
+        async_depth: int = 2,
         mesh: str | None = None,
         draft_kv_dtype: str | None = None,
     ) -> ContinuousBatcher:
@@ -1218,7 +1375,8 @@ class Engine:
         ``spec_decode`` overrides the engine config (None = on iff
         ``spec_k > 0``). ``async_steps`` turns on the software-pipelined
         step loop (DESIGN.md §13) — same lanes, same dispatch keys, same
-        warmup; only the host's read schedule changes.
+        warmup; only the host's read schedule changes. ``async_depth``
+        caps the in-flight pipeline (2 = classic one-ahead).
         """
         if self.cfg.input_kind != "tokens":
             raise ValueError(
@@ -1230,7 +1388,7 @@ class Engine:
             self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
         warm_meshes = self._warm_meshes()
-        m0 = shd.mesh_name(*shd.parse_mesh_name(mesh or self.ecfg.mesh))
+        m0 = shd.mesh_name(*shd.parse_slice_name(mesh or self.ecfg.mesh))
         if m0 not in warm_meshes:
             raise ValueError(
                 f"mesh={m0!r} is not in the warmed set {warm_meshes}; add "
@@ -1327,6 +1485,7 @@ class Engine:
             ),
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
+            async_depth=async_depth,
             telemetry=self.telemetry,
             mesh=m0,
             mesh_ctl=mesh_ctl,
@@ -1344,8 +1503,10 @@ class Engine:
         spec_decode: bool | None = None,
         kv_dtype: str | None = None,
         async_steps: bool = False,
+        async_depth: int = 2,
         mesh: str | None = None,
         draft_kv_dtype: str | None = None,
+        disagg: "bool | str | shd.DisaggPlan | None" = None,
     ) -> PagedContinuousBatcher:
         """Cold path: build the page pool + prefix cache and warm every
         paged lane through the registry; returns a paged batcher
@@ -1364,6 +1525,15 @@ class Engine:
         opt-out pins the fan-out to the smallest capacity bucket and the
         active dtype. ``kv_dtype`` overrides the config's active pool
         dtype for this batcher; it must be inside the warmed set.
+
+        ``disagg`` opts into disaggregated prefill/decode (DESIGN.md §17):
+        a prefill slice name (``"1x1@1"``), a full ``shd.DisaggPlan`` whose
+        decode slice must equal the active mesh, or ``True`` for the
+        canonical slice on the devices right after the decode slice's.
+        Both slices must sit in the warmed mesh ladder; the prefill lanes
+        then pin to the prefill slice and a ``set_disagg`` crossing is a
+        rebind, never a compile. ``async_depth`` caps the in-flight async
+        pipeline (2 = classic one-ahead).
         """
         from repro.runtime.kvcache import PagePool, PrefixCache
 
@@ -1387,12 +1557,50 @@ class Engine:
             self.ecfg.spec_k > 0 if spec_decode is None else spec_decode
         )
         warm_meshes = self._warm_meshes()
-        m0 = shd.mesh_name(*shd.parse_mesh_name(mesh or ecfg.mesh))
+        m0 = shd.mesh_name(*shd.parse_slice_name(mesh or ecfg.mesh))
         if m0 not in warm_meshes:
             raise ValueError(
                 f"mesh={m0!r} is not in the warmed set {warm_meshes}; add "
                 f"it to EngineConfig.mesh/meshes."
             )
+        # Disaggregated prefill/decode placement (DESIGN.md §17): resolve
+        # the two pinned slices up front so every lane×slice cell warms.
+        dg: shd.DisaggPlan | None = None
+        if disagg:
+            if isinstance(disagg, shd.DisaggPlan):
+                dg = disagg
+            elif isinstance(disagg, str):
+                dg = shd.DisaggPlan(prefill=disagg, decode=m0)
+            else:  # True: the devices right after the decode slice's
+                dp, mp, off = shd.parse_slice_name(m0)
+                dg = shd.DisaggPlan(
+                    prefill=shd.mesh_name(1, mp, off + dp * mp), decode=m0
+                )
+            if dg.decode != m0:
+                raise ValueError(
+                    f"DisaggPlan.decode={dg.decode!r} must equal the active "
+                    f"mesh {m0!r}: the decode slice anchors the page pool "
+                    f"and the batcher's cache binding."
+                )
+            if dg.prefill not in warm_meshes:
+                raise ValueError(
+                    f"disagg prefill slice {dg.prefill!r} is not in the "
+                    f"warmed set {warm_meshes}; add it to EngineConfig."
+                    f"meshes so its lanes are AOT-warmed."
+                )
+            if use_spec and self._supports_spec_decode():
+                raise ValueError(
+                    "disaggregated prefill/decode does not compose with "
+                    "speculative decoding yet: the draft cache is dense "
+                    "(no page migration path); pass spec_decode=False."
+                )
+            if not self._supports_chunked_prefill():
+                raise ValueError(
+                    "disaggregated prefill/decode needs the chunked "
+                    "prefill lane (EngineConfig.prefill_chunk > 0): "
+                    "without it prompts teacher-force through the decode "
+                    "lane and there is nothing to pin to a prefill slice."
+                )
         ddt = draft_kv_dtype or ecfg.draft_kv_dtype
         if ddt not in self._warm_draft_kv_dtypes():
             raise ValueError(
@@ -1405,6 +1613,19 @@ class Engine:
             telemetry=self.telemetry, shards=self.pool_shards,
         )
         prefix = PrefixCache(pool)
+        # The prefill slice gets its own pool with identical geometry
+        # (DESIGN.md §17): same shard layout means the two caches share
+        # null-page ids, so migration idx padding is pool-agnostic. The
+        # decode pool stays the id authority — the trie roots there and
+        # every finished request's pages end up there.
+        pf_pool = (
+            PagePool(
+                self.pool_pages, ecfg.page_size, kv_dtype=dt,
+                telemetry=self.telemetry, shards=self.pool_shards,
+            )
+            if dg is not None
+            else None
+        )
         max_pages_per_req = self.max_pages_per_req
         # Registry-driven warmup (DESIGN.md §12): every enabled paged lane
         # (cbp, pf, vf, dr, drp), every bucket in its fan-out, every warmed
@@ -1413,6 +1634,7 @@ class Engine:
         # active cell's cache; the rest existed only to warm executables.
         ctx = _WarmCtx(
             spec=use_spec,
+            disagg=dg is not None,
             paged_caches={
                 (d, m): models.init_paged_cache(
                     self.cfg, self.pool_physical_pages, ecfg.page_size, d
@@ -1426,7 +1648,14 @@ class Engine:
         }
         self._warm_lanes("paged", s, ctx, pins=pins)
         self._warm_d2h_packs(s)
+        # The shared mesh binding: "mesh" routes the decode-group lanes
+        # and never changes while disaggregated; "prefill" (present only
+        # when a DisaggPlan is configured) routes the prefill-group lanes
+        # and flips between the prefill slice and the decode mesh — the
+        # set_disagg rebind (DESIGN.md §17).
         mb = {"mesh": m0}
+        if dg is not None:
+            mb["prefill"] = dg.prefill
         cache = ctx.paged_caches[(dt, m0)]
 
         def dispatch(pages_bucket: int) -> Callable:
@@ -1447,16 +1676,20 @@ class Engine:
         if self._supports_chunked_prefill():
 
             def prefill_dispatch(chunk_bucket: int) -> Callable:
+                # PF is a prefill-group lane (LaneSpec.slice): under a
+                # live split it routes to the prefill slice binding.
+                pf_mesh = mb.get("prefill", mb["mesh"])
                 pf = self._decode.dispatch(
-                    lanes_mod.PF.key(s, chunk_bucket, dt, mb["mesh"])
+                    lanes_mod.PF.key(s, chunk_bucket, dt, pf_mesh)
                 )
+                pf_params = self._params_for_mesh(pf_mesh)
 
                 def bound_prefill(
                     cache, tok, start, bt, length, temps, greedy, keys
                 ):
                     self.stats["hot_calls"] += 1
                     return pf(
-                        self.params, cache, tok, start, bt, length, temps,
+                        pf_params, cache, tok, start, bt, length, temps,
                         greedy, keys,
                     )
 
@@ -1481,6 +1714,77 @@ class Engine:
         # Pre-bind the hot slot to the smallest bucket (cheap dispatch);
         # the registry warm already dummy-ran it.
         self._decode.dispatch(lanes_mod.CBP.key(s, 1, dt, m0))
+
+        # Disaggregation control surfaces (DESIGN.md §17): the page
+        # transport (gather on the source slice, device_put the replicated
+        # block across, scatter donated on the destination slice) and the
+        # split/collapse rebind.
+        pf_cache = transport = disagg_ctl = pf_put = None
+        if dg is not None:
+            pf_cache = ctx.paged_caches[(dt, dg.prefill)]
+            mg = {
+                (op, m): self._decode.dispatch(lanes_mod.MG.key(op, dt, m))
+                for op in self._mg_ops()
+                for m in (m0, dg.prefill)
+            }
+            dec_plan = self._mesh_plan(m0)
+            pf_plan = self._mesh_plan(dg.prefill)
+            null0 = pool.null_page(0)
+
+            def _pad_idx(ids):
+                idx = np.full(max_pages_per_req, null0, np.int32)
+                idx[: len(ids)] = ids
+                return jnp.asarray(idx)
+
+            def transport(
+                src_cache, dst_cache, src_ids, dst_ids, to_prefill=False
+            ):
+                """Move page *contents* across slices; bookkeeping (the
+                ids) moved separately via ``kvcache.migrate_pages``. Rows
+                past ``len(ids)`` read and write null pages — reserved
+                garbage on both ends, so a short migration reuses the
+                same pinned-width executables."""
+                src_m, dst_m = (
+                    (m0, dg.prefill) if to_prefill else (dg.prefill, m0)
+                )
+                dst_plan = pf_plan if to_prefill else dec_plan
+                blk = mg[("gather", src_m)](src_cache, _pad_idx(src_ids))
+                blk = jax.device_put(
+                    blk,
+                    dst_plan.device
+                    if dst_plan.solo
+                    else shd.replicated(dst_plan.mesh),
+                )
+                return mg[("scatter", dst_m)](
+                    dst_cache, blk, _pad_idx(dst_ids)
+                )
+
+            # Host inputs for prefill-slice executables go up in ONE hop
+            # and ONE dispatch: a plain jnp.asarray lands on the default
+            # device and XLA then forwards it to the slice, doubling the
+            # upload latency of every chunk step. Takes a host array or a
+            # pytree of them (batched upload).
+            pf_target = (
+                pf_plan.device
+                if pf_plan.solo
+                else shd.replicated(pf_plan.mesh)
+            )
+
+            def pf_put(host):
+                return jax.device_put(host, pf_target)
+
+            def disagg_ctl(on: bool) -> str:
+                target = dg.prefill if on else m0
+                if mb["prefill"] != target:
+                    mb["prefill"] = target
+                    self.telemetry.registry.inc("disagg_rebinds_total")
+                    rec = self.telemetry.trace_or_none()
+                    if rec is not None:
+                        rec.emit(
+                            "disagg_rebind", "dispatcher",
+                            args={"prefill": target, "on": on},
+                        )
+                return target
 
         # COW device half (cold path): one jitted in-place page copy; the
         # batcher threads it through the same cache its steps donate.
@@ -1513,9 +1817,16 @@ class Engine:
             ),
             spec_k=self.ecfg.spec_k,
             async_steps=async_steps,
+            async_depth=async_depth,
             telemetry=self.telemetry,
             mesh=m0,
             mesh_ctl=mesh_ctl,
+            pf_pool=pf_pool,
+            pf_cache=pf_cache,
+            transport=transport,
+            pf_put=pf_put,
+            disagg_ctl=disagg_ctl,
+            disagg=dg is not None,
         )
 
 
@@ -1528,6 +1839,7 @@ def run_continuous_stream(
     seed: int = 0,
     clock: Clock | None = None,
     async_steps: bool = False,
+    async_depth: int = 2,
     mesh: str | None = None,
 ) -> dict:
     """Drive a request stream through continuous batching; return a report.
@@ -1535,12 +1847,14 @@ def run_continuous_stream(
     The report's ``compiles_after_warmup`` is the acceptance metric: it must
     stay 0 for any mix of greedy/sample requests once the bucket executable
     exists. ``async_steps`` pipelines host scheduling against device
-    execution (DESIGN.md §13); greedy token streams are bitwise identical
-    either way. ``mesh`` overrides the active topology (DESIGN.md §16); it
-    must be inside the engine's warmed ladder.
+    execution (DESIGN.md §13; ``async_depth`` caps the in-flight pipeline);
+    greedy token streams are bitwise identical either way. ``mesh``
+    overrides the active topology (DESIGN.md §16); it must be inside the
+    engine's warmed ladder.
     """
     cb = eng.continuous(  # warmup compile first...
-        slots=slots, seed=seed, async_steps=async_steps, mesh=mesh
+        slots=slots, seed=seed, async_steps=async_steps,
+        async_depth=async_depth, mesh=mesh,
     )
     clock = clock or Clock()  # ...so served latencies exclude it
     # continuous() marked the warm boundary (DESIGN.md §14); the report's
@@ -1667,7 +1981,9 @@ def run_paged_stream(
     clock: Clock | None = None,
     kv_dtype: str | None = None,
     async_steps: bool = False,
+    async_depth: int = 2,
     mesh: str | None = None,
+    disagg: "bool | str | shd.DisaggPlan | None" = None,
 ) -> dict:
     """Drive a request stream through the paged KV engine; return a report.
 
@@ -1686,7 +2002,7 @@ def run_paged_stream(
 
     cb = eng.paged_continuous(  # warmup compile first
         slots=slots, seed=seed, kv_dtype=kv_dtype, async_steps=async_steps,
-        mesh=mesh,
+        async_depth=async_depth, mesh=mesh, disagg=disagg,
     )
     clock = clock or Clock()  # ...so served latencies exclude it
     # paged_continuous() marked the warm boundary (DESIGN.md §14).
@@ -1773,6 +2089,12 @@ def run_paged_stream(
         cow_copies=cb.pool.stats.cow_copies,
         prefix_evictions=cb.pool.stats.prefix_evictions,
         unserved=len(requests) - len(finished),
+        disagg=cb.disagg,
+        migrations=cb.stats.migrations,
+        migrated_pages=cb.stats.migrated_pages,
+        disagg_rebinds=int(
+            eng.telemetry.registry.value("disagg_rebinds_total")
+        ),
         compiles_total=eng._decode.stats.misses,
         compiles_after_warmup=eng.post_warmup_compiles,
         rebinds=eng.post_warmup_rebinds,

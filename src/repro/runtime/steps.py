@@ -444,6 +444,11 @@ def make_paged_prefill_fn(
             moe_policy=moe_policy,
         )
         nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
+        # Idle rows (length 0, bucket padding) keep their keys unsplit:
+        # the async pipeline adopts the whole returned key array when a
+        # prefill chunk chains (DESIGN.md §17), and the sync loop only
+        # copies planned rows — masking here makes both reads identical.
+        new_keys = jnp.where(length[:, None] > 0, new_keys, keys)
         return nxt, cache, new_keys
 
     return paged_prefill_step
@@ -470,9 +475,45 @@ def make_slot_prefill_fn(
             cfg, params, cache, tok, start, length, moe_policy=moe_policy
         )
         nxt, new_keys = _sample_rows(logits, temps, greedy, keys)
+        # Same idle-row key mask as the paged prefill (DESIGN.md §17).
+        new_keys = jnp.where(length[:, None] > 0, new_keys, keys)
         return nxt, cache, new_keys
 
     return slot_prefill_step
+
+
+# -------------------------------------------- KV-page migration transport
+# Disaggregated prefill/decode (DESIGN.md §17) moves a request's KV pages
+# between two pooled caches when its slot flips PREFILL -> DECODE. The
+# transport unit is a *page-index bucket*: gather up to B pages out of the
+# source cache tree ([m, P, page_size, ...] leaves, page axis 1), ship the
+# block tree across with one batched ``device_put``, scatter it into the
+# destination cache under donation. ``idx`` is padded with the pools'
+# *null* page ids, so a short migration gathers (and overwrites) only
+# garbage rows — shapes stay fixed and the pair compiles once per
+# (kv_dtype, mesh) cell. ``jax.tree.map`` covers the int8 ``k_scale``/
+# ``v_scale`` leaves automatically because they share the page axis.
+def make_page_gather_fn() -> Callable:
+    """``gather(cache, idx[B]) -> block`` — slice B pages out of every
+    leaf of the paged cache tree (the migration export half)."""
+
+    def gather(cache, idx):
+        return jax.tree.map(lambda x: x[:, idx], cache)
+
+    return gather
+
+
+def make_page_scatter_fn() -> Callable:
+    """``scatter(cache, block, idx[B]) -> cache`` — write a migrated block
+    tree into the destination cache at ``idx`` (the import half; the cache
+    argument is donated by the AOT wrapper)."""
+
+    def scatter(cache, block, idx):
+        return jax.tree.map(
+            lambda x, b: x.at[:, idx].set(b), cache, block
+        )
+
+    return scatter
 
 
 def lower_decode(

@@ -169,12 +169,14 @@ def test_registry_round_trip_all_lanes(smoke_setup, engine_kind):
 
 def test_registry_covers_every_engine_kind():
     """Every registered lane belongs to at least one engine kind, and the
-    seven serving lanes + burst are all present."""
+    seven serving lanes + burst + the migration transport are all present."""
     names = set(LANES.names())
-    assert {"burst", "cb", "cbp", "pf", "pfd", "dr", "drp", "vf", "vfd"} <= names
+    assert {"burst", "cb", "cbp", "pf", "pfd", "dr", "drp", "vf", "vfd",
+            "mg"} <= names
     for spec in LANES:
         assert spec.engines, spec.name
-        assert spec.role in ("decode", "prefill", "draft", "verify")
+        assert spec.role in ("decode", "prefill", "draft", "verify",
+                             "migrate")
 
 
 # --------------------------------------------------- kv_dtype completeness

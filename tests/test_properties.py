@@ -196,6 +196,67 @@ def test_page_pool_refcount_algebra(seed, ops):
     assert pool.pages_in_use == 0
 
 
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.integers(0, 4), min_size=1, max_size=200),
+)
+@settings(max_examples=50, deadline=None)
+def test_cross_pool_migration_conserves_refcounts(seed, ops):
+    """§17 conservation: any interleaving of alloc/incref/decref with
+    cross-pool export/import (both directions, single pages and batched
+    ``migrate_pages``) keeps the *summed* refcount and page balance across
+    the two pools exactly — references travel, they are never minted or
+    dropped."""
+    from repro.runtime.kvcache import KVCacheError, PagePool, migrate_pages
+
+    rng = np.random.default_rng(seed)
+    pools = [PagePool(num_pages=8, page_size=4),
+             PagePool(num_pages=8, page_size=4)]
+    live: list[tuple[int, int]] = []  # (pool_idx, pid)
+    for op in ops:
+        if op == 0:
+            i = int(rng.integers(2))
+            pid = pools[i].alloc()
+            if pid is not None:
+                live.append((i, pid))
+        elif op == 1 and live:
+            i, pid = live[int(rng.integers(len(live)))]
+            pools[i].incref(pid)
+            live.append((i, pid))
+        elif op == 2 and live:
+            i, pid = live.pop(int(rng.integers(len(live))))
+            pools[i].decref(pid)
+        elif op >= 3 and live:
+            # migrate one live page (op 3) or a batch (op 4) to the twin
+            i, pid = live[int(rng.integers(len(live)))]
+            batch = [pid] if op == 3 else sorted(
+                {p for j, p in live if j == i}
+            )
+            try:
+                mapping = migrate_pages(pools[i], pools[1 - i], batch)
+            except KVCacheError:
+                continue  # dry destination: atomic no-op by contract
+            live = [
+                (1 - i, mapping[p]) if j == i and p in mapping else (j, p)
+                for j, p in live
+            ]
+        for p in pools:
+            p.check()
+        # conservation across BOTH pools: every list entry is one
+        # travelling reference; pages split free-xor-referenced per pool
+        assert sum(p.pages_in_use for p in pools) == len(
+            {(j, p) for j, p in live}
+        )
+        assert sum(
+            pools[j].refcount(p) for j, p in {(j, p) for j, p in live}
+        ) == len(live)
+    for i, pid in live:
+        pools[i].decref(pid)
+    for p in pools:
+        p.check()
+        assert p.pages_in_use == 0
+
+
 @_pytest.mark.parametrize("seed", [0, 1, 2])
 def test_page_pool_balances_under_serving_interleavings(seed):
     """§15 containment invariant at the batcher level: a random
